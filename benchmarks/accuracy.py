@@ -1,0 +1,101 @@
+"""Table 5 reproduction: classification accuracy across methods × datasets.
+
+Columns: method, input scale (bits), model size (Kb), PR, RC, F1 per dataset.
+Synthetic stand-ins for PeerRush/CICIOT/ISCXVPN (see data/synthetic_traffic).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.synthetic_traffic import DATASETS, make_dataset
+from repro.nets.common import macro_f1, precision_recall
+from repro.nets.mlp import train_mlp, mlp_apply, pegasusify_mlp, pegasus_mlp_apply
+from repro.nets.rnn import train_rnn, pegasusify_rnn, pegasus_rnn_apply
+from repro.nets.cnn import (
+    train_cnn, pegasusify_cnn, pegasus_cnn_apply,
+    train_cnn_l, pegasusify_cnn_l, pegasus_cnn_l_apply,
+)
+from repro.nets.baselines.leo import train_leo, leo_predict
+from repro.nets.baselines.n3ic import train_n3ic, n3ic_apply, n3ic_model_bits
+from repro.nets.baselines.bos import train_bos, bos_apply, bos_table_entries
+
+
+def _peg_size_kb(layers) -> float:
+    """Deployed model size = stored table bits (16b words), as the paper counts."""
+    bits = 0
+    for l in layers:
+        bits += int(np.prod(l.lut.shape)) * 16
+        bits += int(np.prod(l.trees.thresholds.shape)) * 16
+    return bits / 1024.0
+
+
+def run(flows_per_class: int = 1000, steps: int = 600, datasets=None) -> list[dict]:
+    rows = []
+    for name in datasets or DATASETS:
+        ds = make_dataset(name, flows_per_class=flows_per_class)
+        stats, seq, payload, y = (
+            ds.train["stats"], ds.train["seq"], ds.train["bytes"], ds.train["label"])
+        t_stats, t_seq, t_payload, t_y = (
+            ds.test["stats"], ds.test["seq"], ds.test["bytes"], ds.test["label"])
+        nc = ds.num_classes
+
+        def rec(method, pred, input_bits, size_kb):
+            pr, rc = precision_recall(pred, t_y, nc)
+            rows.append(dict(dataset=name, method=method, input_bits=input_bits,
+                             size_kb=round(size_kb, 1), pr=round(pr, 4),
+                             rc=round(rc, 4), f1=round(macro_f1(pred, t_y, nc), 4)))
+
+        # --- statistical-feature family (same 128-bit input) ---
+        leo = train_leo(stats, y, nc, max_nodes=1024)
+        rec("Leo(DT)", leo_predict(leo, t_stats), 128, 0.0)
+
+        n3 = train_n3ic(stats, y, nc, steps=steps)
+        pred = np.asarray(n3ic_apply(n3, jnp.asarray(t_stats))).argmax(-1)
+        rec("N3IC(binMLP)", pred, 128, n3ic_model_bits(n3) / 1024.0)
+
+        mlp = train_mlp(stats, y, nc, steps=steps)
+        peg = pegasusify_mlp(mlp, stats.astype(np.float32), refine_steps=80)
+        pred = np.asarray(pegasus_mlp_apply(peg, jnp.asarray(t_stats, jnp.float32))).argmax(-1)
+        rec("MLP-B", pred, 128, _peg_size_kb(peg))
+
+        # --- raw-sequence family ---
+        bos = train_bos(seq, y, nc, steps=steps)
+        pred = np.asarray(bos_apply(bos, jnp.asarray(t_seq))).argmax(-1)
+        rec("BoS(binRNN)", pred, 18, bos_table_entries() * 8 / 1024.0)
+
+        rnn = train_rnn(seq, y, nc, steps=steps)
+        peg = pegasusify_rnn(rnn, seq)
+        pred = np.asarray(pegasus_rnn_apply(peg, jnp.asarray(t_seq))).argmax(-1)
+        rec("RNN-B", pred, 128, _peg_size_kb(peg.x_banks + peg.h_banks + [peg.out_bank]))
+
+        for size in ("B", "M"):
+            cnn = train_cnn(seq, y, nc, size=size, steps=steps)
+            pegc = pegasusify_cnn(cnn, seq)
+            pred = np.asarray(pegasus_cnn_apply(pegc, jnp.asarray(t_seq))).argmax(-1)
+            rec(f"CNN-{size}", pred, 128,
+                _peg_size_kb([pegc.window_bank] + pegc.head_banks))
+
+        cnnl = train_cnn_l(seq, payload, y, nc, steps=steps)
+        pegl = pegasusify_cnn_l(cnnl, seq, payload, index_bits=8)
+        pred = np.asarray(
+            pegasus_cnn_l_apply(pegl, jnp.asarray(t_seq), jnp.asarray(t_payload))
+        ).argmax(-1)
+        rec("CNN-L", pred, 3840, _peg_size_kb([pegl.bank1, pegl.bank2]))
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(flows_per_class=400 if quick else 1000, steps=300 if quick else 600,
+               datasets=["peerrush"] if quick else None)
+    print(f"{'dataset':<10} {'method':<14} {'in(b)':>6} {'size(Kb)':>9} "
+          f"{'PR':>7} {'RC':>7} {'F1':>7}")
+    for r in rows:
+        print(f"{r['dataset']:<10} {r['method']:<14} {r['input_bits']:>6} "
+              f"{r['size_kb']:>9} {r['pr']:>7} {r['rc']:>7} {r['f1']:>7}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

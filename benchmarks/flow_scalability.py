@@ -1,0 +1,62 @@
+"""Fig. 7 reproduction: accuracy vs per-flow storage for CNN-L.
+
+Per-flow register cost (paper §7.3): 16b previous-packet timestamp (IPD) +
+(W-1) × index_bits of stored fuzzy indexes. Variants: 28b (4b idx, no IPD),
+44b (4b idx + IPD), 72b (8b idx + IPD).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.synthetic_traffic import make_dataset
+from repro.nets.cnn import (
+    cnn_l_apply, pegasus_cnn_l_apply, pegasusify_cnn_l, train_cnn_l,
+)
+from repro.nets.common import macro_f1
+
+VARIANTS = [
+    # (label, index_bits, use_ipd)
+    ("28b/flow (4b idx, no IPD)", 4, False),
+    ("44b/flow (4b idx + IPD)", 4, True),
+    ("72b/flow (8b idx + IPD)", 8, True),
+]
+
+
+def run(flows_per_class: int = 800, steps: int = 600, datasets=("peerrush",)):
+    rows = []
+    for name in datasets:
+        ds = make_dataset(name, flows_per_class=flows_per_class)
+        seq, payload, y = ds.train["seq"], ds.train["bytes"], ds.train["label"]
+        t_seq, t_payload, t_y = ds.test["seq"], ds.test["bytes"], ds.test["label"]
+        nc = ds.num_classes
+        for label, bits, use_ipd in VARIANTS:
+            sq, tsq = seq.copy(), t_seq.copy()
+            if not use_ipd:
+                sq[..., 1] = 0
+                tsq[..., 1] = 0
+            m = train_cnn_l(sq, payload, y, nc, steps=steps)
+            peg = pegasusify_cnn_l(m, sq, payload, index_bits=bits)
+            pred = np.asarray(
+                pegasus_cnn_l_apply(peg, jnp.asarray(tsq), jnp.asarray(t_payload))
+            ).argmax(-1)
+            flow_bits = (16 if use_ipd else 0) + 7 * bits
+            # SRAM to hold 1M flows at this per-flow width (Fig. 7 x-axis)
+            sram_mb_1m = flow_bits * 1_000_000 / 8 / 1024 / 1024
+            rows.append(dict(dataset=name, variant=label, flow_bits=flow_bits,
+                             sram_mb_for_1M_flows=round(sram_mb_1m, 1),
+                             f1=round(macro_f1(pred, t_y, nc), 4)))
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(flows_per_class=300 if quick else 800, steps=250 if quick else 600)
+    for r in rows:
+        print(f"{r['dataset']:<10} {r['variant']:<28} {r['flow_bits']:>4}b/flow "
+              f"{r['sram_mb_for_1M_flows']:>6}MB/1Mflows F1={r['f1']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Table 6 reproduction: hardware resource utilization per model.
+
+Compiles each Pegasus model's fused banks to the Tofino-2 MAT emulator and
+reports stateful bits/flow, SRAM%, TCAM%, action-bus% — the paper's columns.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic_traffic import make_dataset
+from repro.dataplane.compile import compile_model
+from repro.nets.autoencoder import pegasusify_ae, train_autoencoder
+from repro.nets.cnn import (
+    pegasusify_cnn, pegasusify_cnn_l, train_cnn, train_cnn_l,
+)
+from repro.nets.mlp import pegasusify_mlp, train_mlp
+from repro.nets.rnn import pegasusify_rnn, train_rnn
+
+# stateful per-flow bits (paper Table 6 / §7.3 accounting)
+STATEFUL = {
+    "MLP-B": 80,        # min/max len + IPD accumulators
+    "RNN-B": 240,       # 8 steps × (len,ipd) + timestamps
+    "CNN-B": 72,
+    "CNN-M": 72,
+    "CNN-L": 44,        # 16b prev-timestamp + 7 × 4b fuzzy index
+    "AutoEncoder": 240,
+}
+
+
+def run(flows_per_class: int = 600, steps: int = 400):
+    ds = make_dataset("peerrush", flows_per_class=flows_per_class)
+    stats, seq, payload, y = (
+        ds.train["stats"], ds.train["seq"], ds.train["bytes"], ds.train["label"])
+    nc = ds.num_classes
+    reports = {}
+
+    mlp = train_mlp(stats, y, nc, steps=steps)
+    layers = pegasusify_mlp(mlp, stats.astype(np.float32), refine_steps=0)
+    reports["MLP-B"] = compile_model(layers, stateful_bits_per_flow=STATEFUL["MLP-B"]).report()
+
+    rnn = train_rnn(seq, y, nc, steps=steps)
+    peg = pegasusify_rnn(rnn, seq)
+    reports["RNN-B"] = compile_model(
+        peg.x_banks + peg.h_banks + [peg.out_bank],
+        stateful_bits_per_flow=STATEFUL["RNN-B"],
+    ).report()
+
+    for size in ("B", "M"):
+        cnn = train_cnn(seq, y, nc, size=size, steps=steps)
+        pegc = pegasusify_cnn(cnn, seq)
+        reports[f"CNN-{size}"] = compile_model(
+            [pegc.window_bank] + pegc.head_banks,
+            stateful_bits_per_flow=STATEFUL[f"CNN-{size}"],
+        ).report()
+
+    cnnl = train_cnn_l(seq, payload, y, nc, steps=steps)
+    pegl = pegasusify_cnn_l(cnnl, seq, payload)
+    reports["CNN-L"] = compile_model(
+        [pegl.bank1, pegl.bank2], stateful_bits_per_flow=STATEFUL["CNN-L"]
+    ).report()
+
+    ae = train_autoencoder(seq.reshape(len(y), -1), steps=steps)
+    banks = pegasusify_ae(ae, seq.reshape(len(y), -1).astype(np.float32))
+    reports["AutoEncoder"] = compile_model(
+        banks, stateful_bits_per_flow=STATEFUL["AutoEncoder"]
+    ).report()
+    return reports
+
+
+def main(quick: bool = False):
+    reports = run(flows_per_class=300 if quick else 600, steps=200 if quick else 400)
+    print(f"{'model':<14} {'bits/flow':>6} {'SRAM':>7} {'TCAM':>8} {'Bus':>8}  viol")
+    for name, rep in reports.items():
+        print(rep.table6_row(name) + f"  {rep.validate() or 'ok'}")
+    return reports
+
+
+if __name__ == "__main__":
+    main()

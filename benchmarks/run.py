@@ -1,0 +1,62 @@
+"""Benchmark harness: one module per paper table/figure + roofline summary.
+
+``python -m benchmarks.run [--quick] [--only name]``
+
+Prints one ``name,us_per_call,derived`` CSV line per benchmark at the end
+(the harness contract), with the detailed tables above them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small sizes for CI")
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    args = ap.parse_args()
+
+    from benchmarks import accuracy, anomaly, flow_scalability, fusion_ablation, resources, throughput
+
+    benches = {
+        "accuracy_table5": accuracy.main,
+        "resources_table6": resources.main,
+        "flow_scalability_fig7": flow_scalability.main,
+        "anomaly_auc_fig8": anomaly.main,
+        "throughput_fig9": throughput.main,
+        "fusion_ablation": fusion_ablation.main,
+    }
+    if args.only:
+        benches = {k: v for k, v in benches.items() if args.only in k}
+
+    csv_lines = ["name,us_per_call,derived"]
+    for name, fn in benches.items():
+        print(f"\n=== {name} {'(quick)' if args.quick else ''} ===")
+        t0 = time.perf_counter()
+        try:
+            derived = fn(quick=args.quick)
+            us = (time.perf_counter() - t0) * 1e6
+            summary = ""
+            if isinstance(derived, list) and derived and isinstance(derived[0], dict):
+                keys = [k for k in ("f1", "auc") if k in derived[0]]
+                if keys:
+                    vals = [r[keys[0]] for r in derived]
+                    summary = f"mean_{keys[0]}={sum(vals)/len(vals):.4f}"
+            elif isinstance(derived, dict) and "speedup" in derived:
+                summary = f"speedup={derived['speedup']:.0f}x"
+            csv_lines.append(f"{name},{us:.0f},{summary}")
+        except Exception:
+            traceback.print_exc()
+            csv_lines.append(f"{name},-1,FAILED")
+
+    print("\n" + "\n".join(csv_lines))
+    if any("FAILED" in l for l in csv_lines):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

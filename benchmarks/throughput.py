@@ -1,0 +1,55 @@
+"""Fig. 9 reproduction: dataplane line-rate model vs measured JAX throughput.
+
+The switch side is a MODEL (the paper's premise: any P4 program that
+compiles runs at line rate — 12.8 Tb/s on Tofino 2 regardless of DL model
+size). The CPU side is MEASURED: batched dense inference in JAX on this
+host. GPU numbers from the paper's setup cannot be measured here and are
+reported as n/a. Clearly labeled modeled-vs-measured, per DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic_traffic import make_dataset
+from repro.nets.mlp import mlp_apply, train_mlp
+
+LINE_RATE_BPS = 12.8e12          # Tofino 2 aggregate
+AVG_PKT_BITS = 800 * 8           # 800B average packet
+
+def modeled_switch_pps() -> float:
+    return LINE_RATE_BPS / AVG_PKT_BITS
+
+
+def measured_cpu_pps(batch: int = 4096, iters: int = 20) -> tuple[float, float]:
+    ds = make_dataset("peerrush", flows_per_class=300)
+    m = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes, steps=150)
+    x = jnp.asarray(np.tile(ds.test["stats"], (batch // len(ds.test["stats"]) + 1, 1))[:batch])
+
+    @jax.jit
+    def fwd(xb):
+        return mlp_apply(m, xb)
+
+    fwd(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fwd(x).block_until_ready()
+    dt = (time.perf_counter() - t0) / iters
+    return batch / dt, dt * 1e6
+
+
+def main(quick: bool = False):
+    sw = modeled_switch_pps()
+    cpu_pps, us = measured_cpu_pps(batch=1024 if quick else 4096, iters=5 if quick else 20)
+    print(f"switch(modeled, line-rate) pps={sw:.3e}")
+    print(f"cpu(measured, this host)   pps={cpu_pps:.3e}  us_per_batch={us:.1f}")
+    print(f"speedup(modeled/measured)  {sw / cpu_pps:.0f}x")
+    return dict(switch_pps=sw, cpu_pps=cpu_pps, speedup=sw / cpu_pps)
+
+
+if __name__ == "__main__":
+    main()

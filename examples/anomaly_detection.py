@@ -1,0 +1,38 @@
+"""Unsupervised malicious-traffic detection on the dataplane (paper §7.4).
+
+Trains the AutoEncoder on benign traffic only, lowers it to Pegasus tables,
+and detects injected malware/DoS flows by MAE reconstruction error — the
+zero-day scenario the paper argues only DL (not trees) can handle in-network.
+
+Run:  PYTHONPATH=src python examples/anomaly_detection.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.synthetic_traffic import anomaly_testset, make_dataset
+from repro.nets.autoencoder import (
+    auc_score, pegasus_ae_error, pegasusify_ae, train_autoencoder,
+)
+
+
+def main():
+    ds = make_dataset("iscxvpn", flows_per_class=500)
+    x_train = ds.train["seq"].reshape(len(ds.train["label"]), -1)
+    print(f"training AutoEncoder on {len(x_train)} benign flows...")
+    ae = train_autoencoder(x_train, steps=600)
+    banks = pegasusify_ae(ae, x_train.astype(np.float32))
+
+    for kind in ("malware", "dos"):
+        test = anomaly_testset(ds, kind=kind)
+        x = test["seq"].reshape(len(test["label"]), -1)
+        scores = np.asarray(pegasus_ae_error(banks, jnp.asarray(x, jnp.float32)))
+        auc = auc_score(scores, test["label"])
+        thr = np.quantile(scores[test["label"] == 0], 0.95)
+        caught = (scores[test["label"] == 1] > thr).mean()
+        print(f"{kind:<8}: AUC={auc:.3f}; at 5% benign FPR the switch would "
+              f"rate-limit {caught:.0%} of attack flows")
+
+
+if __name__ == "__main__":
+    main()

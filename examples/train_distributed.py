@@ -1,0 +1,56 @@
+"""Distributed training driver: fault-tolerant loop with checkpoint/restart.
+
+Trains a reduced-config LM on all local devices with the production sharding
+rules (FSDP × TP), checkpoints periodically, and demonstrates crash recovery
+by construction: re-running the same command resumes from the last
+checkpoint.
+
+Run:  PYTHONPATH=src python examples/train_distributed.py \
+          [--arch granite_20b] [--steps 30] [--ckpt /tmp/pegasus_ckpt]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import smoke_config
+from repro.launch.train import TrainLoop, synthetic_batches
+from repro.train import checkpoint as ckpt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_20b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/pegasus_ckpt")
+    ap.add_argument("--microbatches", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    n = len(jax.devices())
+    mesh = jax.make_mesh((1, n), ("data", "model"))
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+          f"arch={args.arch} (smoke), microbatches={args.microbatches}")
+
+    prev = ckpt.latest_step(args.ckpt)
+    if prev is not None:
+        print(f"found checkpoint at step {prev} — resuming (crash recovery)")
+
+    loop = TrainLoop(cfg, mesh, ckpt_dir=args.ckpt, ckpt_every=10,
+                     microbatches=args.microbatches)
+    batches = synthetic_batches(cfg, args.batch, args.seq)
+    # fast-forward the data stream on resume (deterministic replay)
+    for _ in range(loop.start_step):
+        next(batches)
+    metrics = loop.run(batches, steps=args.steps)
+    print(f"finished at step {int(metrics['step'])}: "
+          f"loss={float(metrics['loss']):.4f} "
+          f"median step time {np.median(loop.step_times):.3f}s")
+    print(f"checkpoints: {ckpt.latest_steps(args.ckpt)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Pegasus core: primitives, fuzzy matching, fusion, quantization, AMM."""
+
+from .primitives import (
+    partition,
+    unpartition,
+    map_apply,
+    sum_reduce,
+    PartitionOp,
+    MapOp,
+    SumReduceOp,
+    PrimitiveGraph,
+)
+from .fuzzy_tree import FuzzyTree, fit_tree, hard_index, soft_index, stack_trees
+from .fusion import (
+    fuse_basic,
+    merge_consecutive_maps,
+    linear_reorder,
+    advanced_remove_nonlinear,
+    advanced_nam,
+)
+from .quantization import FixedPointSpec, choose_qspec, quantize, dequantize, fake_quant_spec
+from .lut import build_lut, build_matmul_lut, quantize_lut
+from .amm import PegasusLinear, init_pegasus_bank, init_pegasus_linear, pegasus_linear_apply
+from .syntax import map_op, partition as syntax_partition, program, sumreduce, translate
+
+__all__ = [
+    "partition", "unpartition", "map_apply", "sum_reduce",
+    "PartitionOp", "MapOp", "SumReduceOp", "PrimitiveGraph",
+    "FuzzyTree", "fit_tree", "hard_index", "soft_index", "stack_trees",
+    "fuse_basic", "merge_consecutive_maps", "linear_reorder",
+    "advanced_remove_nonlinear", "advanced_nam",
+    "FixedPointSpec", "choose_qspec", "quantize", "dequantize", "fake_quant_spec",
+    "build_lut", "build_matmul_lut", "quantize_lut",
+    "PegasusLinear", "init_pegasus_bank", "init_pegasus_linear", "pegasus_linear_apply",
+    "map_op", "syntax_partition", "program", "sumreduce", "translate",
+]

@@ -1,0 +1,259 @@
+"""PegasusLinear — the paper's MatMul-as-primitives, TPU-native form.
+
+Weighted Aggregation (paper §5) decomposes a matmul ``y = x @ W + b`` as:
+
+    Partition:  x  →  {x_1 .. x_K}           (groups of ``v`` features)
+    Map:        x_k →  LUT_k[fuzzy_index(x_k)]   where LUT_k[c] = c_k,c @ W_k
+    SumReduce:  y  =  Σ_k  (+ b)
+
+All multiplications happen OFFLINE when the LUT is built at full precision;
+inference is comparisons + lookups + adds — on a switch: MAT stages; on TPU:
+a branchless tree descent + gather/one-hot-matmul.
+
+Arithmetic/bytes bookkeeping (drives the §Roofline analysis):
+  dense:    flops = 2·T·D·N          bytes(weights) = D·N·s
+  pegasus:  flops ≈ T·K·depth (cmp)  bytes(tables)  = K·C·N·s  = (C/v)·D·N·s
+so with ``C = 2**depth`` < ``v`` … the LUT is *larger* than W unless N is
+shared across groups; the real wins are (a) all matmul FLOPs removed —
+decode-time compute drops to gathers, and (b) with int8 LUTs, bytes halve vs
+bf16 weights at C=16, v=8 → (16/8)·0.5 = 1.0× — break-even bytes but
+zero-FLOP. See EXPERIMENTS.md §Perf for measured terms; the hillclimb uses
+(v, depth, LUT dtype) as its search axes.
+
+Three apply paths, all semantics-identical (tested against each other):
+  * ``apply_gather``  — take_along_axis reference (ref.py oracle calls this)
+  * ``apply_onehot``  — one-hot × LUT matmul (MXU-friendly XLA path)
+  * kernels.fuzzy_lut — fused Pallas kernel (tree descent + LUT accumulate)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fuzzy_tree import FuzzyTree, fit_tree, hard_index_stacked, soft_index_stacked, stack_trees
+from .lut import build_matmul_lut
+from .quantization import FixedPointSpec, choose_qspec, fake_quant_spec
+
+__all__ = ["PegasusLinear", "init_pegasus_linear", "pegasus_linear_apply"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PegasusLinear:
+    """Parameters of one Pegasus-approximated linear layer.
+
+    Attributes:
+      trees: stacked fuzzy trees — features ``[K, 2^d - 1]`` int32,
+        thresholds ``[K, 2^d - 1]`` f32, centroids ``[K, C, v]`` f32.
+      lut: ``[K, C, N]`` precomputed partial products (full precision or
+        quantize-dequantized to the activation fixed-point grid).
+      bias: ``[N]`` or None.
+    """
+
+    trees: FuzzyTree
+    lut: jax.Array
+    bias: jax.Array | None
+
+    # static metadata
+    group_size: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def num_groups(self) -> int:
+        return self.lut.shape[0]
+
+    @property
+    def num_centroids(self) -> int:
+        return self.lut.shape[1]
+
+    @property
+    def out_features(self) -> int:
+        return self.lut.shape[2]
+
+    @property
+    def in_features(self) -> int:
+        return self.num_groups * self.group_size
+
+    def tree_flatten(self):
+        return (self.trees, self.lut, self.bias), (self.group_size,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, group_size=aux[0])
+
+
+def init_pegasus_linear(
+    weight: np.ndarray,
+    bias: np.ndarray | None,
+    calibration: np.ndarray,
+    *,
+    group_size: int = 4,
+    depth: int = 4,
+    lut_bits: int | None = 16,
+    lut_dtype=jnp.float32,
+    act_fn: Callable | None = None,
+) -> PegasusLinear:
+    """Build a PegasusLinear from a trained dense layer + calibration acts.
+
+    Args:
+      weight: ``[D, N]`` full-precision trained weight.
+      bias: ``[N]`` or None.
+      calibration: ``[S, D]`` representative activations (training set pass).
+      group_size: Partition width ``v`` (paper uses 2–8 on the switch).
+      depth: fuzzy-tree depth ``d``; ``C = 2**d`` centroids per group.
+      lut_bits: fixed-point width for stored outputs (None = keep float —
+        the TPU default where we use dtype, not bit tricks).
+      lut_dtype: storage dtype of the LUT on TPU (bf16/int8 are the
+        memory-roofline levers; fp32 is the accuracy reference).
+      act_fn: optional elementwise nonlinearity applied to centroids BEFORE
+        the matmul — this is Basic Primitive Fusion folding the preceding
+        activation Map into this layer's tables (`LUT = act(c) @ W`). The
+        calibration data must then be the PRE-activation values.
+    """
+    weight = np.asarray(weight, np.float32)
+    calibration = np.asarray(calibration, np.float32)
+    d, n = weight.shape
+    assert d % group_size == 0, f"D={d} not divisible by group v={group_size}"
+    k = d // group_size
+
+    trees = []
+    for g in range(k):
+        sl = calibration[:, g * group_size : (g + 1) * group_size]
+        trees.append(fit_tree(sl, depth))
+    stacked = stack_trees(trees)
+
+    cents = stacked.centroids
+    if act_fn is not None:
+        cents = act_fn(cents)
+    lut = build_matmul_lut(cents, jnp.asarray(weight), group_size)
+    if lut_bits is not None:
+        spec = choose_qspec(lut, bits=lut_bits)
+        lut = fake_quant_spec(lut, spec)  # store on the fixed-point grid
+    lut = lut.astype(lut_dtype)
+
+    return PegasusLinear(
+        trees=stacked,
+        lut=lut,
+        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+        group_size=group_size,
+    )
+
+
+def init_pegasus_bank(
+    fn: Callable[[jax.Array], jax.Array],
+    calibration: np.ndarray,
+    *,
+    group_size: int,
+    depth: int,
+    bias: np.ndarray | None = None,
+) -> PegasusLinear:
+    """Generic table bank: LUT rows are ``fn`` of the stacked centroids.
+
+    ``fn: [K, C, v] → [K, C, N]`` may be ANY offline computation — e.g. a
+    whole per-window sub-network for Advanced-Fusion/NAM banks (paper Fig. 5
+    ③), or a post-matmul nonlinearity fold for single-group banks
+    (``K == 1`` ⇒ the SumReduce is trivial, so ``relu(c@W+b)`` may live in
+    the rows directly).
+    """
+    calibration = np.asarray(calibration, np.float32)
+    d = calibration.shape[1]
+    assert d % group_size == 0, f"D={d} not divisible by group v={group_size}"
+    k = d // group_size
+    trees = [
+        fit_tree(calibration[:, g * group_size : (g + 1) * group_size], depth)
+        for g in range(k)
+    ]
+    stacked = stack_trees(trees)
+    lut = fn(stacked.centroids)
+    assert lut.ndim == 3 and lut.shape[:2] == (k, 2**depth), lut.shape
+    return PegasusLinear(
+        trees=stacked,
+        lut=jnp.asarray(lut),
+        bias=None if bias is None else jnp.asarray(bias, jnp.float32),
+        group_size=group_size,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Apply paths
+# ---------------------------------------------------------------------------
+
+
+def _group(x: jax.Array, k: int, v: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], k, v)
+
+
+def apply_gather(p: PegasusLinear, x: jax.Array) -> jax.Array:
+    """Reference path: hard index + take_along_axis + sum."""
+    xg = _group(x, p.num_groups, p.group_size)
+    idx = hard_index_stacked(p.trees, xg)                      # [..., K]
+    # lut: [K, C, N]; gather leaf rows per group then reduce over K
+    gathered = jnp.take_along_axis(
+        p.lut[None],  # [1, K, C, N] broadcast over batch
+        idx.reshape(-1, p.num_groups)[:, :, None, None],
+        axis=2,
+    )[:, :, 0, :]                                              # [B, K, N]
+    y = gathered.sum(axis=1).reshape(*x.shape[:-1], p.out_features)
+    y = y.astype(jnp.float32)
+    if p.bias is not None:
+        y = y + p.bias
+    return y
+
+
+def apply_onehot(p: PegasusLinear, x: jax.Array) -> jax.Array:
+    """MXU path: SumReduce(Map(...)) as ONE matmul.
+
+    ``onehot(idx): [..., K, C]`` flattened to ``[..., K·C]`` times
+    ``LUT: [K·C, N]`` computes the gather AND the sum-over-groups in a single
+    dense contraction — Map+SumReduce fusion in MXU form.
+    """
+    xg = _group(x, p.num_groups, p.group_size)
+    idx = hard_index_stacked(p.trees, xg)                      # [..., K]
+    oh = jax.nn.one_hot(idx, p.num_centroids, dtype=p.lut.dtype)
+    oh = oh.reshape(*x.shape[:-1], p.num_groups * p.num_centroids)
+    y = oh @ p.lut.reshape(-1, p.out_features).astype(p.lut.dtype)
+    y = y.astype(jnp.float32)
+    if p.bias is not None:
+        y = y + p.bias
+    return y
+
+
+def apply_soft(p: PegasusLinear, x: jax.Array, temperature: float = 0.1) -> jax.Array:
+    """Differentiable path for backprop refinement (paper §4.4)."""
+    xg = _group(x, p.num_groups, p.group_size)
+    probs = soft_index_stacked(p.trees, xg, temperature)       # [..., K, C]
+    y = jnp.einsum("...kc,kcn->...n", probs, p.lut.astype(jnp.float32))
+    if p.bias is not None:
+        y = y + p.bias
+    return y
+
+
+def pegasus_linear_apply(
+    p: PegasusLinear, x: jax.Array, *, path: str = "onehot"
+) -> jax.Array:
+    if path == "gather":
+        return apply_gather(p, x)
+    if path == "onehot":
+        return apply_onehot(p, x)
+    if path == "soft":
+        return apply_soft(p, x)
+    if path == "kernel":
+        from repro.kernels.fuzzy_lut import ops as _k
+
+        return _k.fuzzy_lut_matmul(p, x)
+    if path == "kernel_q8":
+        from repro.kernels.fuzzy_lut import ops as _k
+
+        return _k.fuzzy_lut_matmul_q8(p, x)
+    raise ValueError(f"unknown path {path}")
+
+
+def dense_reference(weight: jax.Array, bias: jax.Array | None, x: jax.Array) -> jax.Array:
+    y = x @ weight
+    if bias is not None:
+        y = y + bias
+    return y

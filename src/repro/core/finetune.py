@@ -1,0 +1,108 @@
+"""Backprop refinement of fuzzy-tree parameters (paper §4.4 "Backpropagation").
+
+The hard clustering tree is relaxed into matrix operations (soft, sigmoid-
+temperature routing — the Zhang'21 construction), so thresholds, centroids
+and LUT contents become differentiable. We minimize the distillation MSE
+between the Pegasus layer's soft output and the full-precision teacher
+output over calibration data, annealing the temperature so the soft routing
+converges to the hard one actually deployed.
+
+This is intentionally a small, dependency-free Adam loop — it runs offline
+(deployment-time), never on the serving path.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .amm import PegasusLinear, apply_gather, apply_soft
+from .fuzzy_tree import FuzzyTree
+
+__all__ = ["refine"]
+
+
+def _adam_update(g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * (g * g)
+    mhat = m / (1 - b1**step)
+    vhat = v / (1 - b2**step)
+    return lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def refine(
+    layer: PegasusLinear,
+    x_calib: jax.Array,
+    y_teacher: jax.Array,
+    *,
+    steps: int = 200,
+    lr: float = 3e-3,
+    temp_start: float = 0.5,
+    temp_end: float = 0.05,
+    batch_size: int = 512,
+    seed: int = 0,
+) -> PegasusLinear:
+    """Fine-tune thresholds, centroids and LUT against the teacher output.
+
+    Features (discrete) stay fixed; thresholds/centroids/LUT/bias float.
+    Returns a new PegasusLinear whose HARD forward better matches teacher.
+    """
+    params = {
+        "thresholds": layer.trees.thresholds,
+        "lut": layer.lut.astype(jnp.float32),
+        "bias": (jnp.zeros(layer.out_features) if layer.bias is None else layer.bias),
+    }
+
+    feats = layer.trees.features
+    centroids = layer.trees.centroids
+    gsize = layer.group_size
+    n = x_calib.shape[0]
+    key = jax.random.PRNGKey(seed)
+
+    def rebuild(p):
+        return PegasusLinear(
+            trees=FuzzyTree(feats, p["thresholds"], centroids),
+            lut=p["lut"],
+            bias=p["bias"],
+            group_size=gsize,
+        )
+
+    def loss_fn(p, xb, yb, temp):
+        out = apply_soft(rebuild(p), xb, temperature=temp)
+        return jnp.mean((out - yb) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    for step in range(1, steps + 1):
+        key, sub = jax.random.split(key)
+        ix = jax.random.randint(sub, (min(batch_size, n),), 0, n)
+        xb, yb = x_calib[ix], y_teacher[ix]
+        frac = step / steps
+        temp = float(temp_start * (temp_end / temp_start) ** frac)
+        _, grads = grad_fn(params, xb, yb, temp)
+        new_params = {}
+        for name in params:
+            upd, m[name], v[name] = _adam_update(
+                grads[name], m[name], v[name], step, lr
+            )
+            new_params[name] = params[name] - upd
+        params = new_params
+
+    refined = rebuild(params)
+    # keep the original storage dtype for the LUT
+    refined = PegasusLinear(
+        trees=refined.trees,
+        lut=refined.lut.astype(layer.lut.dtype),
+        bias=refined.bias,
+        group_size=gsize,
+    )
+    return refined
+
+
+def hard_mse(layer: PegasusLinear, x: jax.Array, y_teacher: jax.Array) -> float:
+    """Deployment-form error: hard routing, as the switch/kernel executes."""
+    return float(jnp.mean((apply_gather(layer, x) - y_teacher) ** 2))

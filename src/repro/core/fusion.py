@@ -1,0 +1,231 @@
+"""Primitive Fusion (paper §4.3).
+
+Basic Primitive Fusion — semantics-preserving rewrites:
+  (1) *Linear Reordering*: ``SumReduce ∘ Map_f`` with linear ``f`` commutes to
+      ``Map_f ∘ SumReduce`` — or, in the direction fusion wants it,
+      ``Map_f(SumReduce(xs)) == SumReduce(Map_f(xs))``, letting the f-lookup
+      merge into the per-group lookups that precede the SumReduce.
+      Affine maps (linear + bias) hoist the bias: it is added once, after the
+      reduce, rather than per group.
+  (2) *Map Merging*: consecutive Maps compose into one Map (one lookup).
+
+Advanced Primitive Fusion — architecture-modifying rewrites:
+  (a) *Nonlinear Removal*: delete nonlinear Maps; everything collapses to a
+      single linear lookup (fast, but a linear model — accuracy drops).
+  (b) *SumReduce Reduction* (NAM form): keep only the FINAL SumReduce. Each
+      partition group becomes an independent sub-model folded into ONE Map
+      (one lookup per group), and the single trailing SumReduce mixes them —
+      the Neural-Additive-Model structure the paper adopts for CNN-M/L and
+      the AutoEncoder.
+
+Every pass takes and returns a :class:`PrimitiveGraph`; tests assert
+``fused.evaluate(x) ≈ original.evaluate(x)`` for Basic fusion, and assert the
+structural lookup counts for Advanced fusion (which intentionally changes
+semantics, so equivalence is checked against a *retrained* NAM instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .primitives import MapOp, PartitionOp, Prim, PrimitiveGraph, SumReduceOp
+
+__all__ = [
+    "fuse_basic",
+    "merge_consecutive_maps",
+    "linear_reorder",
+    "advanced_remove_nonlinear",
+    "advanced_nam",
+]
+
+
+def identity(x):
+    """Marker fn for pure bias-add ops (constant adds are actions, not lookups)."""
+    return x
+
+
+def _compose(outer: MapOp, inner: MapOp) -> MapOp:
+    """Map merging: outer(inner(x) + b_i) as one table (one lookup).
+
+    If ``outer`` is linear, the inner bias hoists:
+    ``fo(fi(x) + b_i) = fo(fi(x)) + fo(b_i)`` — keeping the fused op's
+    linearity flag honest (fn strictly linear, constants in ``bias``).
+    """
+    fi, fo = inner.fn, outer.fn
+    bi = inner.bias
+
+    if outer.linear and bi is not None:
+        def fused(x):
+            return fo(fi(x))
+
+        hoisted = fo(bi)
+        bias = hoisted if outer.bias is None else hoisted + outer.bias
+        lin = inner.linear  # fn part is fo∘fi: linear iff both are
+    else:
+        def fused(x):
+            y = fi(x)
+            if bi is not None:
+                y = y + bi
+            return fo(y)
+
+        bias = outer.bias
+        lin = outer.linear and inner.linear and bi is None
+
+    return MapOp(
+        fn=fused,
+        linear=lin,
+        in_dim=inner.in_dim,
+        out_dim=outer.out_dim,
+        # the fused table is indexed by the INNER input → inner's entry count
+        table_entries=inner.table_entries,
+        bias=bias,
+        name=f"{outer.name or 'map'}∘{inner.name or 'map'}",
+    )
+
+
+def merge_consecutive_maps(graph: PrimitiveGraph) -> PrimitiveGraph:
+    """Basic fusion (2): collapse runs of Maps into single Maps."""
+    ops: list[Prim] = []
+    for op in graph.ops:
+        if isinstance(op, MapOp) and ops and isinstance(ops[-1], MapOp):
+            ops[-1] = _compose(op, ops[-1])
+        else:
+            ops.append(dataclasses.replace(op) if isinstance(op, MapOp) else op)
+    return PrimitiveGraph(ops)
+
+
+def linear_reorder(graph: PrimitiveGraph) -> PrimitiveGraph:
+    """Basic fusion (1): swap ``SumReduce ; Map_linear`` → ``Map ; SumReduce``.
+
+    After the swap the Map sits next to whatever produced the groups and a
+    later `merge_consecutive_maps` absorbs it into the per-group tables.
+    The bias of an affine map must NOT be distributed over k groups (it would
+    be added k times); it is hoisted to a post-reduce constant instead, which
+    the evaluator applies via the group-Map's ``bias`` on a SumReduce
+    successor — here we emulate by dividing bias by k is WRONG, so we keep a
+    dedicated affine-bias Map after the reduce only when a bias exists.
+    """
+    ops: list[Prim] = []
+    i = 0
+    while i < len(graph.ops):
+        op = graph.ops[i]
+        nxt = graph.ops[i + 1] if i + 1 < len(graph.ops) else None
+        if (
+            isinstance(op, SumReduceOp)
+            and isinstance(nxt, MapOp)
+            and nxt.linear
+            and nxt.fn is not identity  # pure bias-adds don't benefit
+        ):
+            moved = dataclasses.replace(nxt, bias=None, name=(nxt.name or "map") + "<swap")
+            ops.append(moved)
+            ops.append(SumReduceOp())
+            if nxt.bias is not None:
+                # bias applied once, after the reduce
+                ops.append(
+                    MapOp(
+                        fn=identity,
+                        linear=True,
+                        in_dim=nxt.out_dim,
+                        out_dim=nxt.out_dim,
+                        table_entries=0,  # constant add: action, not a lookup
+                        bias=nxt.bias,
+                        name="bias",
+                    )
+                )
+            i += 2
+        else:
+            ops.append(op)
+            i += 1
+    return PrimitiveGraph(ops)
+
+
+def _drop_trailing_noops(graph: PrimitiveGraph) -> PrimitiveGraph:
+    return graph
+
+
+def fuse_basic(graph: PrimitiveGraph, max_iters: int = 10) -> PrimitiveGraph:
+    """Iterate linear-reorder + map-merge to a fixed point (paper Fig. 5 ①)."""
+    prev = -1
+    g = graph
+    for _ in range(max_iters):
+        g = merge_consecutive_maps(linear_reorder(g))
+        n = len(g.ops)
+        if n == prev:
+            break
+        prev = n
+    return _drop_trailing_noops(g)
+
+
+# ---------------------------------------------------------------------------
+# Advanced fusion (architecture-modifying)
+# ---------------------------------------------------------------------------
+
+
+def advanced_remove_nonlinear(graph: PrimitiveGraph) -> PrimitiveGraph:
+    """Advanced fusion (a): delete every nonlinear Map, then basic-fuse.
+
+    The result is a purely linear pipeline — a single lookup once basic
+    fusion runs. Accuracy consequences are the model designer's problem
+    (paper Fig. 5 ②: "may significantly drop").
+    """
+    ops = [
+        op
+        for op in graph.ops
+        if not (isinstance(op, MapOp) and not op.linear)
+    ]
+    return fuse_basic(PrimitiveGraph(ops))
+
+
+def advanced_nam(
+    graph: PrimitiveGraph, sub_model_fns=None
+) -> PrimitiveGraph:
+    """Advanced fusion (b): NAM reduction (paper Fig. 5 ③).
+
+    Structure: ``Partition → Map(sub-model per group) → SumReduce``. All
+    intermediate SumReduces are removed; each group's whole computation chain
+    becomes one fused Map. Because dropping inner SumReduces changes
+    semantics, the per-group sub-model is either supplied by the caller
+    (``sub_model_fns`` — typically a retrained per-group network) or derived
+    by restricting the original chain to a single group's slice.
+    """
+    part = next((op for op in graph.ops if isinstance(op, PartitionOp)), None)
+    if part is None:
+        raise ValueError("NAM reduction needs a leading Partition")
+    first_map = next(op for op in graph.ops if isinstance(op, MapOp))
+    out_dim = graph.ops[-1].out_dim if isinstance(graph.ops[-1], MapOp) else None
+
+    if sub_model_fns is None:
+        # default: run the original post-partition chain on each group alone,
+        # treating inner SumReduces as identity (the structural NAM surrogate
+        # that is then refined by backprop — core.finetune).
+        inner = [
+            op
+            for op in graph.ops
+            if isinstance(op, MapOp)
+        ]
+
+        def sub_model(xg):
+            y = xg
+            for op in inner:
+                y = op.fn(y)
+                if op.bias is not None:
+                    y = y + op.bias
+            return y
+
+        fn = sub_model
+        entries = first_map.table_entries
+    else:
+        fn = sub_model_fns
+        entries = first_map.table_entries
+
+    fused_map = MapOp(
+        fn=fn,
+        linear=False,
+        in_dim=part.dim,
+        out_dim=out_dim or first_map.out_dim,
+        table_entries=entries,
+        name="nam-submodel",
+    )
+    return PrimitiveGraph([part, fused_map, SumReduceOp()])

@@ -1,0 +1,277 @@
+"""Fuzzy matching (Pegasus §4.2): greedy SSE axis-aligned clustering trees.
+
+A *fuzzy tree* maps a low-dimensional sub-vector (one Partition group) to the
+index of a leaf centroid using only feature/threshold comparisons — the only
+operation a dataplane (and, conveniently, a branchless SIMD lane) can do.
+
+Layout: a complete binary tree of depth ``d`` stored in heap order.
+Internal node ``n`` (0-based, ``n < 2**d - 1``) holds ``(feature[n],
+threshold[n])``; descending left means ``x[feature] <= threshold``.  Leaves
+are indexed ``0 .. 2**d - 1`` left-to-right; leaf ``i`` corresponds to heap
+node ``(2**d - 1) + i``.  Each leaf stores a centroid (the mean of training
+points routed there).
+
+Three entry points:
+  * :func:`fit_tree` — numpy, offline, greedy total-SSE splitting (paper Fig. 3).
+  * :func:`hard_index` — jnp, branchless descent; used at inference.
+  * :func:`soft_index` — jnp, differentiable leaf probabilities (sigmoid
+    relaxation, Zhang'21-style matrixized tree) used by backprop refinement
+    (paper §4.4 "Backpropagation").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FuzzyTree", "fit_tree", "hard_index", "soft_index", "leaf_one_hot"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FuzzyTree:
+    """Array-form complete clustering tree for one partition group.
+
+    Attributes:
+      features:   int32 ``[2**depth - 1]`` — split dimension per internal node.
+      thresholds: float32 ``[2**depth - 1]`` — split threshold per internal node.
+      centroids:  float32 ``[2**depth, v]`` — leaf centroids.
+    """
+
+    features: jax.Array
+    thresholds: jax.Array
+    centroids: jax.Array
+
+    @property
+    def depth(self) -> int:
+        return int(np.log2(self.centroids.shape[0]) + 0.5)
+
+    @property
+    def num_leaves(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def group_dim(self) -> int:
+        return self.centroids.shape[1]
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.features, self.thresholds, self.centroids), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# Offline fitting (numpy — runs once, before deployment)
+# ---------------------------------------------------------------------------
+
+
+def _cluster_sse(x: np.ndarray) -> float:
+    """Total SSE of a cluster: sum over dims of squared deviation from mean."""
+    if x.shape[0] == 0:
+        return 0.0
+    return float(((x - x.mean(axis=0, keepdims=True)) ** 2).sum())
+
+
+def _best_split(x: np.ndarray, max_thresholds: int = 64):
+    """Best (feature, threshold) minimizing child-SSE sum for one cluster.
+
+    Exhaustive over features; thresholds are candidate midpoints between
+    sorted unique values (subsampled to ``max_thresholds`` for speed).
+    Returns (feature, threshold, sse) or None if the cluster cannot split.
+    """
+    n, v = x.shape
+    if n < 2:
+        return None
+    best = None
+    for j in range(v):
+        order = np.argsort(x[:, j], kind="stable")
+        xs = x[order]
+        col = xs[:, j]
+        # candidate split positions: between distinct consecutive values
+        distinct = np.nonzero(col[1:] > col[:-1])[0]  # split after index i
+        if distinct.size == 0:
+            continue
+        if distinct.size > max_thresholds:
+            sel = np.linspace(0, distinct.size - 1, max_thresholds).astype(int)
+            distinct = distinct[sel]
+        # prefix sums over all dims for O(1) SSE at each split point
+        csum = np.cumsum(xs, axis=0)
+        csq = np.cumsum(xs * xs, axis=0)
+        tot_sum, tot_sq = csum[-1], csq[-1]
+        for i in distinct:
+            nl = i + 1
+            nr = n - nl
+            sl, ql = csum[i], csq[i]
+            sr, qr = tot_sum - sl, tot_sq - ql
+            sse = float((ql - sl * sl / nl).sum() + (qr - sr * sr / nr).sum())
+            if best is None or sse < best[2]:
+                thr = 0.5 * (col[i] + col[i + 1])
+                best = (j, float(thr), sse)
+    return best
+
+
+def fit_tree(data: np.ndarray, depth: int, max_thresholds: int = 64) -> FuzzyTree:
+    """Greedy top-down complete-tree clustering (paper §4.2 Parameter Learning).
+
+    Every node at every level is split by the (feature, threshold) that
+    minimizes the summed SSE of its two children — the paper's greedy
+    strategy, extended to a complete depth-``d`` tree so the leaf index is a
+    fixed-width ``d``-bit code (what the MAT/kernel wants).
+
+    Degenerate nodes (too few points / constant data) get ``threshold=+inf``
+    so all traffic flows left, and the child centroids replicate the parent
+    mean — exactly what a switch table would store.
+    """
+    data = np.asarray(data, dtype=np.float32)
+    assert data.ndim == 2, "fit_tree expects [N, v]"
+    n_internal = 2**depth - 1
+    features = np.zeros(n_internal, dtype=np.int32)
+    thresholds = np.full(n_internal, np.inf, dtype=np.float32)
+    centroids = np.zeros((2**depth, data.shape[1]), dtype=np.float32)
+
+    # node -> member rows; start with everything at the root
+    members: dict[int, np.ndarray] = {0: data}
+    for node in range(n_internal):
+        x = members.pop(node, None)
+        left, right = 2 * node + 1, 2 * node + 2
+        if x is None or x.shape[0] == 0:
+            members[left] = np.zeros((0, data.shape[1]), np.float32)
+            members[right] = np.zeros((0, data.shape[1]), np.float32)
+            continue
+        split = _best_split(x, max_thresholds=max_thresholds)
+        if split is None:
+            # unsplittable: all data goes left (thr=+inf)
+            features[node] = 0
+            thresholds[node] = np.inf
+            members[left], members[right] = x, x[:0]
+            continue
+        j, thr, _ = split
+        features[node] = j
+        thresholds[node] = thr
+        mask = x[:, j] <= thr
+        members[left], members[right] = x[mask], x[~mask]
+
+    global_mean = data.mean(axis=0) if data.shape[0] else np.zeros(data.shape[1])
+    for leaf in range(2**depth):
+        x = members.get((2**depth - 1) + leaf)
+        if x is None or x.shape[0] == 0:
+            # inherit: walk up to nearest ancestor with data — global mean is
+            # a safe stand-in (leaf unreachable by training distribution).
+            centroids[leaf] = global_mean
+        else:
+            centroids[leaf] = x.mean(axis=0)
+
+    return FuzzyTree(
+        features=jnp.asarray(features),
+        thresholds=jnp.asarray(thresholds),
+        centroids=jnp.asarray(centroids),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Inference-time indexing (jnp, branchless)
+# ---------------------------------------------------------------------------
+
+
+def hard_index(tree: FuzzyTree, x: jax.Array) -> jax.Array:
+    """Map sub-vectors ``x[..., v]`` to leaf indices ``[...]`` (int32).
+
+    Branchless descent: ``d`` rounds of gather-compare-select, exactly the
+    comparator cascade the switch pipeline performs across MAT stages.
+    """
+    depth = tree.depth
+    node = jnp.zeros(x.shape[:-1], dtype=jnp.int32)
+    for _ in range(depth):
+        feat = tree.features[node]                      # [...]
+        thr = tree.thresholds[node]                     # [...]
+        val = jnp.take_along_axis(x, feat[..., None], axis=-1)[..., 0]
+        go_right = (val > thr).astype(jnp.int32)
+        node = 2 * node + 1 + go_right
+    return node - (2**depth - 1)
+
+
+def soft_index(tree: FuzzyTree, x: jax.Array, temperature: float = 1.0) -> jax.Array:
+    """Differentiable leaf distribution ``[..., 2**depth]``.
+
+    Each internal decision relaxes to ``sigmoid((x[f] - t) / temperature)``;
+    a leaf's probability is the product of its path's branch probabilities.
+    As ``temperature → 0`` this converges to the hard one-hot.
+    """
+    depth = tree.depth
+    # probs over nodes at current level, starting with the root (prob 1)
+    level_probs = jnp.ones(x.shape[:-1] + (1,), dtype=x.dtype)
+    node_base = 0
+    for level in range(depth):
+        n_nodes = 2**level
+        idx = node_base + jnp.arange(n_nodes)
+        feat = tree.features[idx]                       # [n_nodes]
+        thr = tree.thresholds[idx]                      # [n_nodes]
+        vals = x[..., feat]                             # [..., n_nodes]
+        # finite-threshold guard: thr=+inf (degenerate node) → always left
+        p_right = jax.nn.sigmoid((vals - thr) / temperature)
+        p_right = jnp.where(jnp.isfinite(thr), p_right, 0.0)
+        p_left = 1.0 - p_right
+        # interleave: child order is [L0, R0, L1, R1, ...]
+        level_probs = jnp.stack(
+            [level_probs * p_left, level_probs * p_right], axis=-1
+        ).reshape(x.shape[:-1] + (2 * n_nodes,))
+        node_base += n_nodes
+    return level_probs
+
+
+def leaf_one_hot(tree: FuzzyTree, x: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Hard one-hot leaf encoding ``[..., 2**depth]`` (the MXU-side form)."""
+    idx = hard_index(tree, x)
+    return jax.nn.one_hot(idx, tree.num_leaves, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stacked (vmapped) trees — one tree per Partition group, fit offline,
+# stored as stacked arrays so the whole Map bank is a single pytree leaf set.
+# ---------------------------------------------------------------------------
+
+
+def stack_trees(trees: list[FuzzyTree]) -> FuzzyTree:
+    """Stack K single-group trees into arrays with a leading K axis."""
+    return FuzzyTree(
+        features=jnp.stack([t.features for t in trees]),
+        thresholds=jnp.stack([t.thresholds for t in trees]),
+        centroids=jnp.stack([t.centroids for t in trees]),
+    )
+
+
+@partial(jax.jit, static_argnames=())
+def hard_index_stacked(stacked: FuzzyTree, x: jax.Array) -> jax.Array:
+    """Index with K stacked trees. ``x: [..., K, v]`` → ``[..., K]`` int32."""
+    k = stacked.features.shape[0]
+    depth = int(np.log2(stacked.centroids.shape[1]) + 0.5)
+    node = jnp.zeros(x.shape[:-1], dtype=jnp.int32)      # [..., K]
+    karange = jnp.arange(k)
+    for _ in range(depth):
+        feat = stacked.features[karange, node]           # [..., K]
+        thr = stacked.thresholds[karange, node]
+        val = jnp.take_along_axis(x, feat[..., None], axis=-1)[..., 0]
+        go_right = (val > thr).astype(jnp.int32)
+        node = 2 * node + 1 + go_right
+    return node - (2**depth - 1)
+
+
+def soft_index_stacked(
+    stacked: FuzzyTree, x: jax.Array, temperature: float = 1.0
+) -> jax.Array:
+    """Soft leaf distributions for K stacked trees: ``[..., K, C]``."""
+    return jax.vmap(
+        lambda t_f, t_t, t_c, xs: soft_index(
+            FuzzyTree(t_f, t_t, t_c), xs, temperature
+        ),
+        in_axes=(0, 0, 0, -2),
+        out_axes=-2,
+    )(stacked.features, stacked.thresholds, stacked.centroids, x)

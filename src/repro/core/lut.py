@@ -1,0 +1,63 @@
+"""LUT construction: precompute Map results at leaf centroids (paper §4.2/§4.4).
+
+A Map's table stores ``f(centroid_c)`` for each leaf ``c`` of the group's
+fuzzy tree, computed **with full-precision weights** offline; only the stored
+outputs are (optionally) fixed-point quantized — this is the paper's
+"full-precision weights, fixed-point activations" accuracy design.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .fuzzy_tree import FuzzyTree
+from .quantization import FixedPointSpec, choose_qspec, dequantize, quantize
+
+__all__ = ["build_lut", "build_matmul_lut", "quantize_lut"]
+
+
+def build_lut(tree: FuzzyTree, fn: Callable[[jax.Array], jax.Array]) -> jax.Array:
+    """Table of ``fn`` evaluated at every centroid: ``[C, out_dim]``.
+
+    ``fn`` must be batched over centroids (pure jnp) — it is evaluated once,
+    offline, at full precision.
+    """
+    out = fn(tree.centroids)  # [C, v] -> [C, o]
+    if out.ndim == 1:
+        out = out[:, None]
+    return out
+
+
+def build_matmul_lut(
+    trees_centroids: jax.Array, weight: jax.Array, group_size: int
+) -> jax.Array:
+    """Weighted-aggregation LUT bank for an approximate matmul.
+
+    Args:
+      trees_centroids: ``[K, C, v]`` stacked leaf centroids (one tree per
+        partition group).
+      weight: ``[D, N]`` full-precision weight, ``D = K * v``.
+      group_size: ``v``.
+
+    Returns ``[K, C, N]`` where ``lut[k, c] = centroids[k, c] @ W[kv:(k+1)v]``.
+    The model's output is then ``sum_k lut[k, idx_k] (+ bias)`` — Map followed
+    by SumReduce, with the matmul folded away at full precision.
+    """
+    k, c, v = trees_centroids.shape
+    d, n = weight.shape
+    assert d == k * v, f"weight rows {d} != K*v = {k * v}"
+    w_groups = weight.reshape(k, v, n)
+    return jnp.einsum("kcv,kvn->kcn", trees_centroids, w_groups)
+
+
+def quantize_lut(lut: jax.Array, bits: int = 16) -> tuple[jax.Array, FixedPointSpec]:
+    """Fixed-point-quantize stored outputs (adaptive binary point, §4.4)."""
+    spec = choose_qspec(lut, bits=bits)
+    return quantize(lut, spec), spec
+
+
+def dequantize_lut(qlut: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    return dequantize(qlut, spec)

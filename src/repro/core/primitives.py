@@ -1,0 +1,172 @@
+"""Pegasus primitives (paper §4.1): Partition, Map, SumReduce.
+
+Two layers:
+
+1. **Functional forms** (`partition`, `map_apply`, `sum_reduce`) — plain JAX
+   ops used by models directly.
+
+2. **PrimitiveGraph IR** — a linear op-list describing a model as a primitive
+   program. The fusion passes (`repro.core.fusion`) rewrite this IR; the
+   dataplane compiler (`repro.dataplane.compile`) lowers it to MAT stages and
+   counts switch resources. The IR deliberately mirrors the paper's Figure 5
+   boxes so fusion results can be checked against the paper's worked example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "partition",
+    "unpartition",
+    "map_apply",
+    "sum_reduce",
+    "Prim",
+    "PartitionOp",
+    "MapOp",
+    "SumReduceOp",
+    "PrimitiveGraph",
+]
+
+
+# ---------------------------------------------------------------------------
+# Functional primitives
+# ---------------------------------------------------------------------------
+
+
+def partition(x: jax.Array, dim: int, stride: int | None = None) -> jax.Array:
+    """Partition(X) = {X_1 .. X_k}: split the last axis into groups.
+
+    ``dim`` is the group width; ``stride`` defaults to ``dim`` (disjoint
+    groups, the common case). With ``stride < dim`` groups overlap — this is
+    how a 1-D convolution's sliding window is expressed as a Partition
+    (paper §6.2's ``Partition(meta.input_vec, dim=2, stride=2)``).
+
+    Returns ``[..., K, dim]``.
+    """
+    stride = dim if stride is None else stride
+    d = x.shape[-1]
+    k = (d - dim) // stride + 1
+    idx = jnp.arange(k)[:, None] * stride + jnp.arange(dim)[None, :]  # [K, dim]
+    return x[..., idx]
+
+
+def unpartition(xg: jax.Array) -> jax.Array:
+    """Inverse of disjoint partition: ``[..., K, v] → [..., K*v]``."""
+    return xg.reshape(*xg.shape[:-2], xg.shape[-2] * xg.shape[-1])
+
+
+def map_apply(fns: Sequence[Callable[[jax.Array], jax.Array]] | Callable, xg: jax.Array) -> jax.Array:
+    """Map(F, {X_1..X_k}): apply ``fns[i]`` to group ``i`` (last-2 axis).
+
+    ``fns`` may be a single callable (broadcast to all groups, the usual
+    elementwise-transform case) or one callable per group (the weighted-
+    aggregation case where each group has its own weight slice).
+    """
+    k = xg.shape[-2]
+    if callable(fns):
+        fns = [fns] * k
+    outs = [fns[i](xg[..., i, :]) for i in range(k)]
+    return jnp.stack(outs, axis=-2)
+
+
+def sum_reduce(xg: jax.Array) -> jax.Array:
+    """SumReduce({X_1..X_k}) = sum_i X_i over the group axis (last-2)."""
+    return xg.sum(axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Primitive IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Prim:
+    """Base IR node."""
+
+    name: str = dataclasses.field(default="", kw_only=True)
+
+
+@dataclasses.dataclass
+class PartitionOp(Prim):
+    """Split last axis into K groups of width ``dim`` (stride ``stride``)."""
+
+    dim: int
+    stride: int | None = None
+
+
+@dataclasses.dataclass
+class MapOp(Prim):
+    """Per-group function application.
+
+    Attributes:
+      fn: the python/jnp callable (group-batched: ``[..., v] → [..., o]``).
+      linear: whether ``fn(a + b) == fn(a) + fn(b)`` (enables Linear
+        Reordering, paper §4.3(1)). Affine maps are recorded with
+        ``linear=True`` plus a ``bias`` so reordering can hoist the constant.
+      in_dim / out_dim: per-group widths (for table sizing).
+      table_entries: entries a dataplane lookup needs (2**tree_depth under
+        fuzzy matching; 2**(8*in_dim) under exhaustive mapping).
+    """
+
+    fn: Callable[[jax.Array], jax.Array]
+    linear: bool
+    in_dim: int
+    out_dim: int
+    table_entries: int
+    bias: Any = None  # constant term hoisted by linear reordering
+
+
+@dataclasses.dataclass
+class SumReduceOp(Prim):
+    """Sum over the group axis."""
+
+
+@dataclasses.dataclass
+class PrimitiveGraph:
+    """A straight-line primitive program (the paper's Fig. 5 boxes).
+
+    ``ops`` run left-to-right. ``evaluate`` interprets the program on a
+    concrete input — the semantic ground truth every fusion pass must
+    preserve (checked in tests/test_fusion.py).
+    """
+
+    ops: list[Prim]
+
+    def evaluate(self, x: jax.Array) -> jax.Array:
+        for op in self.ops:
+            if isinstance(op, PartitionOp):
+                x = partition(x, op.dim, op.stride)
+            elif isinstance(op, MapOp):
+                x = op.fn(x)
+                if op.bias is not None:
+                    x = x + op.bias
+            elif isinstance(op, SumReduceOp):
+                x = sum_reduce(x)
+            else:  # pragma: no cover
+                raise TypeError(f"unknown primitive {op!r}")
+        return x
+
+    # resource-relevant summary ------------------------------------------------
+    def num_lookups(self) -> int:
+        """Dataplane table lookups = number of Map ops (paper counts these)."""
+        return sum(isinstance(op, MapOp) for op in self.ops)
+
+    def table_entries(self) -> int:
+        return sum(op.table_entries for op in self.ops if isinstance(op, MapOp))
+
+    def describe(self) -> str:
+        parts = []
+        for op in self.ops:
+            if isinstance(op, PartitionOp):
+                parts.append(f"Partition(dim={op.dim})")
+            elif isinstance(op, MapOp):
+                tag = "lin" if op.linear else "nonlin"
+                parts.append(f"Map[{tag}]({op.name or op.fn.__name__})")
+            elif isinstance(op, SumReduceOp):
+                parts.append("SumReduce")
+        return " -> ".join(parts)

@@ -1,0 +1,92 @@
+"""Adaptive fixed-point quantization (paper §4.4).
+
+The dataplane has no floats: every value crossing a table boundary is a
+fixed-point integer. Pegasus stores table *contents* at full precision and
+quantizes only the table **outputs** feeding SumReduce — so the quantization
+error enters once per fused lookup, not once per arithmetic op.
+
+"Adaptive" = per-edge binary point: each edge (layer boundary) gets its own
+fractional-bit count chosen from a calibration pass so the observed range
+just fits the register width (paper's example: input range [-100, 100] vs
+output range [0, 5] want different binary points).
+
+`quantize` is implemented with a straight-through estimator so the
+backprop-refinement stage (core.finetune) can differentiate through it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FixedPointSpec", "choose_qspec", "quantize", "dequantize", "fake_quant"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointSpec:
+    """A fixed-point format: signed two's-complement, ``bits`` total width,
+    ``frac_bits`` fractional bits (binary point position)."""
+
+    bits: int
+    frac_bits: int
+
+    @property
+    def scale(self) -> float:
+        return float(2.0**self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+def choose_qspec(calibration: np.ndarray | jax.Array, bits: int = 16) -> FixedPointSpec:
+    """Pick the binary point so max|x| fits: the paper's Post-Training Static
+    Quantization analogue — ranges are measured once on calibration data."""
+    amax = float(jnp.max(jnp.abs(calibration))) if np.size(calibration) else 1.0
+    amax = max(amax, 1e-8)
+    int_bits = int(np.ceil(np.log2(amax + 1e-12))) + 1  # +1 for sign
+    frac = bits - 1 - max(int_bits - 1, 0)
+    # clamp: at least 0 fractional bits, at most bits-1
+    frac = int(np.clip(frac, 0, bits - 1))
+    return FixedPointSpec(bits=bits, frac_bits=frac)
+
+
+def quantize(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    """Float → int (represented in int32 for arithmetic headroom)."""
+    q = jnp.round(x * spec.scale)
+    return jnp.clip(q, spec.qmin, spec.qmax).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    return q.astype(jnp.float32) / spec.scale
+
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array, scale: float, qmin: float, qmax: float) -> jax.Array:
+    """Quantize-dequantize with straight-through gradient."""
+    return jnp.clip(jnp.round(x * scale), qmin, qmax) / scale
+
+
+def _fq_fwd(x, scale, qmin, qmax):
+    return fake_quant(x, scale, qmin, qmax), (x, scale, qmin, qmax)
+
+
+def _fq_bwd(res, g):
+    x, scale, qmin, qmax = res
+    # pass-through inside the representable range, zero outside (clip STE)
+    inside = (x * scale >= qmin) & (x * scale <= qmax)
+    return (jnp.where(inside, g, 0.0), None, None, None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_spec(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    return fake_quant(x, spec.scale, float(spec.qmin), float(spec.qmax))

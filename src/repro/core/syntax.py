@@ -1,0 +1,106 @@
+"""Pegasus Syntax (paper §6.2, Fig. 6): a declarative model description that
+translates to primitives and then to the dataplane.
+
+The paper's C-like snippet
+
+    meta.output_vec = SumReduce(
+        Map(
+            Partition(meta.input_vec, dim=2, stride=2),
+            clustering_depth=4, CNN_dimension=3, ...))
+
+maps 1:1 onto the spec dicts accepted here. The translator resolves output
+dimensions automatically (the paper's point: developers declare intent; the
+tool sizes tables and allocates stages), builds a ``PrimitiveGraph``, and —
+given trained weights + calibration data — emits deployable MapTable banks
+via ``repro.dataplane.compile``.
+
+Example:
+
+    spec = program(
+        partition(dim=2, stride=2),
+        map_op(clustering_depth=4, fn=..., out_dim=16, linear=True),
+        sumreduce(),
+        map_op(clustering_depth=8, fn=jax.nn.relu, out_dim=16),
+    )
+    graph = translate(spec, input_dim=16)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .primitives import MapOp, PartitionOp, Prim, PrimitiveGraph, SumReduceOp
+
+__all__ = ["partition", "map_op", "sumreduce", "program", "translate",
+           "SyntaxError_"]
+
+
+class SyntaxError_(ValueError):
+    """Raised when a Pegasus-Syntax program is ill-formed."""
+
+
+def partition(*, dim: int, stride: int | None = None) -> dict:
+    return {"op": "Partition", "dim": dim, "stride": stride}
+
+
+def map_op(*, clustering_depth: int, fn: Callable, out_dim: int | None = None,
+           linear: bool = False, bias: Any = None, name: str = "") -> dict:
+    return {"op": "Map", "clustering_depth": clustering_depth, "fn": fn,
+            "out_dim": out_dim, "linear": linear, "bias": bias, "name": name}
+
+
+def sumreduce() -> dict:
+    return {"op": "SumReduce"}
+
+
+def program(*ops: dict) -> list[dict]:
+    return list(ops)
+
+
+def _infer_out_dim(fn: Callable, in_dim: int) -> int:
+    """The translator 'automatically calculates the output dimensions'
+    (paper §6.2) — by abstract evaluation on a ShapeDtypeStruct."""
+    probe = jax.eval_shape(fn, jax.ShapeDtypeStruct((1, 1, in_dim), jnp.float32))
+    return int(probe.shape[-1])
+
+
+def translate(spec: Sequence[dict], *, input_dim: int) -> PrimitiveGraph:
+    """Pegasus Syntax → PrimitiveGraph, with dimension/shape checking."""
+    ops: list[Prim] = []
+    cur_dim = input_dim          # width of the current (per-group) vector
+    grouped = False
+    for i, node in enumerate(spec):
+        kind = node.get("op")
+        if kind == "Partition":
+            if grouped:
+                raise SyntaxError_(f"op {i}: nested Partition is not supported")
+            dim, stride = node["dim"], node["stride"] or node["dim"]
+            if (cur_dim - dim) % stride != 0:
+                raise SyntaxError_(
+                    f"op {i}: Partition(dim={dim}, stride={stride}) does not "
+                    f"tile an input of width {cur_dim}")
+            ops.append(PartitionOp(dim=dim, stride=node["stride"]))
+            cur_dim = dim
+            grouped = True
+        elif kind == "Map":
+            depth = node["clustering_depth"]
+            if not (1 <= depth <= 16):
+                raise SyntaxError_(f"op {i}: clustering_depth {depth} out of range")
+            out_dim = node["out_dim"] or _infer_out_dim(node["fn"], cur_dim)
+            ops.append(MapOp(
+                fn=node["fn"], linear=node["linear"], in_dim=cur_dim,
+                out_dim=out_dim, table_entries=2**depth, bias=node["bias"],
+                name=node["name"] or f"map{i}"))
+            cur_dim = out_dim
+        elif kind == "SumReduce":
+            if not grouped:
+                raise SyntaxError_(f"op {i}: SumReduce before any Partition")
+            ops.append(SumReduceOp())
+            grouped = False
+        else:
+            raise SyntaxError_(f"op {i}: unknown op {kind!r}")
+    return PrimitiveGraph(ops)

@@ -1,0 +1,186 @@
+"""Synthetic traffic-classification datasets standing in for PeerRush /
+CICIOT / ISCXVPN (paper §7.1).
+
+The real captures are not redistributable and unavailable offline, so we
+generate class-conditional flow models with the same *structure* the paper's
+models exploit:
+
+  * per-class Markov chains over packet-length states (temporal dependence —
+    what RNN/CNN capture, and what pure statistical features miss),
+  * per-class log-normal inter-packet-delay (IPD) mixtures,
+  * per-class payload byte distributions (for CNN-L's raw-byte input),
+  * heavy overlap between classes so the task is non-trivial and model
+    capacity/feature-scale differences show up in macro-F1 — mirroring the
+    paper's ordering (binary < fixed-point < bigger inputs).
+
+Datasets (name → #classes): ``peerrush`` → 3, ``ciciot`` → 3, ``iscxvpn`` → 7.
+Feature views per flow window (W = 8 packets):
+  * ``stats``  : 16 × 8-bit  (max/min/mean-ish packet len + IPD summaries) — MLP/N3IC/Leo input (128 bits)
+  * ``seq``    : W × 2 × 8-bit  (len, IPD per packet) — RNN/BoS/CNN-B/M input (128 bits)
+  * ``bytes``  : W × 60 × 8-bit raw payload bytes — CNN-L input (3840 bits)
+All features are 8-bit unsigned integers exactly as a switch PHV carries them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["TrafficDataset", "make_dataset", "DATASETS", "anomaly_testset"]
+
+DATASETS = {"peerrush": 3, "ciciot": 3, "iscxvpn": 7}
+WINDOW = 8
+N_BYTES = 60
+
+
+@dataclasses.dataclass
+class TrafficDataset:
+    name: str
+    num_classes: int
+    # train/val/test splits, each dict with "stats", "seq", "bytes", "label"
+    train: dict
+    val: dict
+    test: dict
+
+
+def _class_params(rng: np.random.Generator, c: int, n_classes: int, hardness: float):
+    """Markov chain + IPD + byte-histogram parameters for one class."""
+    n_states = 6
+    # transition matrix: shared base + class-specific structure
+    base = rng.dirichlet(np.ones(n_states) * 2.0, size=n_states)
+    ident = np.roll(np.eye(n_states), c % n_states, axis=1)
+    trans = (1 - hardness) * ident + hardness * base
+    trans /= trans.sum(1, keepdims=True)
+    # state → packet-length distribution (mean, std), spread across [40, 250]
+    means = np.linspace(40, 250, n_states) + rng.normal(0, 10, n_states) + 6 * c
+    stds = rng.uniform(5, 25, n_states)
+    # IPD log-normal params per class
+    ipd_mu = rng.uniform(1.0, 3.5) + 0.25 * c
+    ipd_sigma = rng.uniform(0.3, 0.9)
+    # payload byte profile: Dirichlet over 256 values, few class-salient bytes
+    byte_profile = rng.dirichlet(np.ones(256) * 0.08)
+    return trans, means, stds, ipd_mu, ipd_sigma, byte_profile
+
+
+def _gen_flows(rng, params, n_flows: int, cls: int):
+    trans, means, stds, ipd_mu, ipd_sigma, byte_profile = params
+    n_states = trans.shape[0]
+    lens = np.zeros((n_flows, WINDOW), np.float32)
+    ipds = np.zeros((n_flows, WINDOW), np.float32)
+    payload = rng.choice(256, size=(n_flows, WINDOW, N_BYTES), p=byte_profile)
+    state = rng.integers(0, n_states, n_flows)
+    for t in range(WINDOW):
+        lens[:, t] = np.clip(rng.normal(means[state], stds[state]), 0, 255)
+        ipds[:, t] = np.clip(rng.lognormal(ipd_mu, ipd_sigma, n_flows), 0, 255)
+        # advance Markov state
+        u = rng.random(n_flows)
+        cdf = np.cumsum(trans[state], axis=1)
+        state = (u[:, None] < cdf).argmax(axis=1)
+    seq = np.stack([lens, ipds], axis=-1).astype(np.uint8)          # [F, W, 2]
+
+    stats = np.stack(
+        [
+            lens.max(1), lens.min(1), lens.mean(1), lens.std(1),
+            ipds.max(1), ipds.min(1), ipds.mean(1), ipds.std(1),
+            np.abs(np.diff(lens, axis=1)).mean(1), np.abs(np.diff(ipds, axis=1)).mean(1),
+            (lens > 128).sum(1) * 16.0, (ipds > 32).sum(1) * 16.0,
+            lens[:, 0], lens[:, -1], ipds[:, 0], ipds[:, -1],
+        ],
+        axis=1,
+    )
+    stats = np.clip(stats, 0, 255).astype(np.uint8)                 # [F, 16]
+    labels = np.full(n_flows, cls, np.int32)
+    return stats, seq, payload.astype(np.uint8), labels
+
+
+def make_dataset(
+    name: str,
+    flows_per_class: int = 1500,
+    seed: int | None = None,
+    hardness: float | None = None,
+) -> TrafficDataset:
+    """Build one synthetic dataset with the paper's 75/10/15 split."""
+    n_classes = DATASETS[name]
+    seed = {"peerrush": 101, "ciciot": 202, "iscxvpn": 303}[name] if seed is None else seed
+    # ISCXVPN (VPN-encrypted, 7 classes) is the hardest task in the paper
+    hardness = {"peerrush": 0.45, "ciciot": 0.55, "iscxvpn": 0.62}[name] if hardness is None else hardness
+    rng = np.random.default_rng(seed)
+
+    all_stats, all_seq, all_bytes, all_y = [], [], [], []
+    for c in range(n_classes):
+        params = _class_params(rng, c, n_classes, hardness)
+        s, q, b, y = _gen_flows(rng, params, flows_per_class, c)
+        all_stats.append(s); all_seq.append(q); all_bytes.append(b); all_y.append(y)
+
+    stats = np.concatenate(all_stats)
+    seq = np.concatenate(all_seq)
+    payload = np.concatenate(all_bytes)
+    y = np.concatenate(all_y)
+    perm = rng.permutation(len(y))
+    stats, seq, payload, y = stats[perm], seq[perm], payload[perm], y[perm]
+
+    n = len(y)
+    n_tr, n_va = int(0.75 * n), int(0.10 * n)
+
+    def split(lo, hi):
+        return dict(stats=stats[lo:hi], seq=seq[lo:hi], bytes=payload[lo:hi], label=y[lo:hi])
+
+    return TrafficDataset(
+        name=name,
+        num_classes=n_classes,
+        train=split(0, n_tr),
+        val=split(n_tr, n_tr + n_va),
+        test=split(n_tr + n_va, n),
+    )
+
+
+def anomaly_testset(
+    base: TrafficDataset, kind: str = "malware", ratio: float = 0.25, seed: int = 7
+) -> dict:
+    """Benign test flows + injected attack flows at 1:4 (paper §7.4).
+
+    ``malware``: shifted Markov/byte profiles (C&C-like beaconing);
+    ``dos``: SSDP-reflection-like — near-constant large packets, tiny IPD.
+    Returns dict with the three feature views and binary ``label``
+    (1 = attack).
+    """
+    rng = np.random.default_rng(seed)
+    benign = base.test
+    n_attack = int(len(benign["label"]) * ratio)
+
+    if kind == "dos":
+        lens = np.clip(rng.normal(240, 4, (n_attack, WINDOW)), 0, 255)
+        ipds = np.clip(rng.lognormal(0.0, 0.1, (n_attack, WINDOW)), 0, 255)
+        byte_profile = np.zeros(256); byte_profile[77] = 0.7
+        byte_profile += 0.3 / 256
+        byte_profile /= byte_profile.sum()
+    else:  # malware: beaconing with unusual periodicity + rare bytes
+        lens = np.clip(rng.normal(90, 6, (n_attack, WINDOW)) + 40 * (np.arange(WINDOW) % 2), 0, 255)
+        ipds = np.clip(rng.lognormal(4.5, 0.15, (n_attack, WINDOW)), 0, 255)
+        byte_profile = rng.dirichlet(np.ones(256) * 0.01)
+
+    payload = rng.choice(256, size=(n_attack, WINDOW, N_BYTES), p=byte_profile).astype(np.uint8)
+    seq = np.stack([lens, ipds], axis=-1).astype(np.uint8)
+    stats = np.stack(
+        [
+            lens.max(1), lens.min(1), lens.mean(1), lens.std(1),
+            ipds.max(1), ipds.min(1), ipds.mean(1), ipds.std(1),
+            np.abs(np.diff(lens, axis=1)).mean(1), np.abs(np.diff(ipds, axis=1)).mean(1),
+            (lens > 128).sum(1) * 16.0, (ipds > 32).sum(1) * 16.0,
+            lens[:, 0], lens[:, -1], ipds[:, 0], ipds[:, -1],
+        ],
+        axis=1,
+    )
+    stats = np.clip(stats, 0, 255).astype(np.uint8)
+
+    out = dict(
+        stats=np.concatenate([benign["stats"], stats]),
+        seq=np.concatenate([benign["seq"], seq]),
+        bytes=np.concatenate([benign["bytes"], payload]),
+        label=np.concatenate(
+            [np.zeros(len(benign["label"]), np.int32), np.ones(n_attack, np.int32)]
+        ),
+    )
+    perm = rng.permutation(len(out["label"]))
+    return {k: v[perm] for k, v in out.items()}

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: fused fuzzy-index + LUT accumulate (Pegasus Map+SumReduce).
+
+TPU-native realization of the paper's table lookup (DESIGN.md §2):
+
+  * The clustering-tree descent is *gather-free*: feature selection becomes a
+    tiny one-hot einsum (``feat_oh`` is precomputed offline), node selection
+    a one-hot reduction — every step is VPU compare/select or MXU matmul, so
+    the whole "fuzzy match" is branchless and systolic-friendly.
+  * The Map (leaf→row lookup) + SumReduce (Σ over groups) pair is ONE MXU
+    matmul: ``onehot(leaf): [Tt, Kt·C] @ LUT-block: [Kt·C, Nt]`` — the same
+    primitive-fusion insight as the paper's, re-expressed for a systolic
+    array instead of a MAT stage.
+
+Tiling (BlockSpec, all VMEM):
+  grid = (T/Tt, N/Nt, K/Kt);   K innermost → output block accumulates.
+    x        [T, K, v]   → block (Tt, Kt, v)      index (i, k, 0)
+    feat_oh  [K, I, v]   → block (Kt, I, v)       index (k, 0, 0)   I = 2^d - 1
+    thr      [K, I]      → block (Kt, I)          index (k, 0)
+    lut      [K, C, N]   → block (Kt, C, Nt)      index (k, 0, j)
+    out      [T, N]      → block (Tt, Nt)         index (i, j)
+
+VMEM working set ≈ Tt·Kt·v + Kt·I·v + Kt·C·Nt + Tt·Nt floats.
+Defaults (Tt=256, Kt=128, Nt=256, C=16, v=8): ≈ 2.6 MB ≪ 128 MB VMEM, and
+the MXU contraction dims (Kt·C = 2048, Nt = 256) are 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fuzzy_lut_kernel", "fuzzy_lut_pallas"]
+
+
+def _tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """dimension_semantics plumbing across pallas API versions."""
+    try:
+        return pltpu.CompilerParams(dimension_semantics=dimension_semantics)
+    except (AttributeError, TypeError):  # older API
+        return dict(mosaic=dict(dimension_semantics=dimension_semantics))
+
+
+def fuzzy_lut_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, out_ref, *, depth: int):
+    """One (Tt, Nt, Kt) tile: descend trees, accumulate LUT rows into out."""
+    x = x_ref[...].astype(jnp.float32)            # [Tt, Kt, v]
+    feat_oh = feat_oh_ref[...].astype(jnp.float32)  # [Kt, I, v]
+    thr = thr_ref[...].astype(jnp.float32)        # [Kt, I]
+    n_internal = thr.shape[-1]
+    c = n_internal + 1                            # leaves per tree
+
+    # feature values at every internal node: vals[t,k,n] = x[t,k,feat[k,n]]
+    # — expressed as an einsum against the precomputed one-hot, not a gather.
+    vals = jax.lax.dot_general(
+        x,
+        feat_oh,
+        # contract v; batch over k
+        dimension_numbers=(((2,), (2,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                             # [Kt, Tt, I]
+    vals = vals.transpose(1, 0, 2)                # [Tt, Kt, I]
+    bits = (vals > thr[None]).astype(jnp.int32)   # decision at every node
+
+    # branchless descent: select this level's bit with a one-hot over nodes
+    tt, kt = x.shape[0], x.shape[1]
+    node = jnp.zeros((tt, kt), dtype=jnp.int32)
+    iota_nodes = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, n_internal), 2)
+    for _ in range(depth):
+        node_oh = (iota_nodes == node[:, :, None]).astype(jnp.int32)
+        bit = jnp.sum(bits * node_oh, axis=-1)    # [Tt, Kt]
+        node = 2 * node + 1 + bit
+    leaf = node - n_internal                      # [Tt, Kt] in [0, C)
+
+    # Map + SumReduce fused into one MXU matmul:
+    #   onehot(leaf) [Tt, Kt*C] @ lut [Kt*C, Nt]
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, c), 2)
+    onehot = (iota_c == leaf[:, :, None]).astype(jnp.float32)
+    lut = lut_ref[...].astype(jnp.float32)        # [Kt, C, Nt]
+    contrib = jax.lax.dot_general(
+        onehot.reshape(tt, kt * c),
+        lut.reshape(kt * c, -1),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # [Tt, Nt]
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(pl.program_id(2) != 0)
+    def _accum():
+        out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "block_t", "block_n", "block_k", "interpret"),
+)
+def fuzzy_lut_pallas(
+    x: jax.Array,          # [T, K, v]
+    feat_oh: jax.Array,    # [K, I, v] one-hot of split features (offline)
+    thresholds: jax.Array, # [K, I]
+    lut: jax.Array,        # [K, C, N]
+    *,
+    depth: int,
+    block_t: int = 256,
+    block_n: int = 256,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas-tiled fused Pegasus matmul. Returns [T, N] f32 (no bias)."""
+    t, k, v = x.shape
+    _, c, n = lut.shape
+    bt, bn, bk = min(block_t, t), min(block_n, n), min(block_k, k)
+    assert t % bt == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({t},{k},{n}) not divisible by blocks ({bt},{bk},{bn}); "
+        "pad in ops.py"
+    )
+    n_internal = c - 1
+
+    grid = (t // bt, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(fuzzy_lut_kernel, depth=depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk, v), lambda i, j, kk: (i, kk, 0)),
+            pl.BlockSpec((bk, n_internal, v), lambda i, j, kk: (kk, 0, 0)),
+            pl.BlockSpec((bk, n_internal), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((bk, c, bn), lambda i, j, kk: (kk, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        compiler_params=_tpu_compiler_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, feat_oh, thresholds, lut)

@@ -1,0 +1,126 @@
+"""Jit'd public wrapper for the fused fuzzy-LUT matmul kernel.
+
+Handles layout prep (grouping, one-hot features, padding to block multiples)
+and exposes a `PegasusLinear`-level entry point used by the serving stack
+(`repro.core.amm.pegasus_linear_apply(..., path="kernel")`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import fuzzy_lut_pallas
+
+__all__ = ["fuzzy_lut_matmul", "fuzzy_lut_matmul_q8", "prepare_feat_onehot"]
+
+
+def prepare_feat_onehot(features: jax.Array, group_size: int) -> jax.Array:
+    """Offline: one-hot the per-node split features. [K, I] → [K, I, v]."""
+    return jax.nn.one_hot(features, group_size, dtype=jnp.float32)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def fuzzy_lut_matmul(
+    layer,  # PegasusLinear (kept duck-typed to avoid import cycle)
+    x: jax.Array,
+    *,
+    block_t: int = 256,
+    block_n: int = 256,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Apply a PegasusLinear via the Pallas kernel. x: [..., D] → [..., N]."""
+    k, v = layer.num_groups, layer.group_size
+    n = layer.out_features
+    lead = x.shape[:-1]
+    xg = x.reshape(-1, k, v).astype(jnp.float32)
+    t = xg.shape[0]
+
+    feat_oh = prepare_feat_onehot(layer.trees.features, v)
+    thr = layer.trees.thresholds
+    # +inf thresholds (degenerate nodes) force all-left in fp compare: keep.
+
+    bt = min(block_t, max(8, t))
+    # pad T and K to block multiples; padded K groups have zero LUT → no-op
+    xg_p = _pad_to(xg, 0, bt)
+    xg_p = _pad_to(xg_p, 1, min(block_k, k))
+    kp = xg_p.shape[1]
+    if kp != k:
+        feat_oh = _pad_to(feat_oh, 0, min(block_k, k))
+        thr = jnp.pad(thr, ((0, kp - k), (0, 0)), constant_values=jnp.inf)
+        lut = _pad_to(layer.lut, 0, min(block_k, k))
+    else:
+        lut = layer.lut
+    lut = _pad_to(lut, 2, min(block_n, n))
+
+    y = fuzzy_lut_pallas(
+        xg_p,
+        feat_oh,
+        thr,
+        lut,
+        depth=int(np.log2(layer.num_centroids) + 0.5),
+        block_t=bt,
+        block_n=min(block_n, lut.shape[2]),
+        block_k=min(block_k, kp),
+        interpret=interpret,
+    )
+    y = y[:t, :n]
+    if layer.bias is not None:
+        y = y + layer.bias
+    return y.reshape(*lead, n)
+
+
+def fuzzy_lut_matmul_q8(
+    layer, x: jax.Array, *, block_t: int = 256, block_n: int = 256,
+    block_k: int = 128, interpret: bool = True,
+) -> jax.Array:
+    """int8-LUT kernel path: quantize the bank once, run the q8 kernel.
+
+    Production deployments quantize offline and keep only the int8 LUT in
+    HBM (half the bytes — the decode-roofline lever, EXPERIMENTS §Perf D4);
+    this wrapper quantizes on the fly for convenience.
+    """
+    from .quantized import fuzzy_lut_q8_pallas, quantize_lut_int8
+
+    k, v = layer.num_groups, layer.group_size
+    n = layer.out_features
+    lead = x.shape[:-1]
+    xg = x.reshape(-1, k, v).astype(jnp.float32)
+    t = xg.shape[0]
+
+    feat_oh = prepare_feat_onehot(layer.trees.features, v)
+    thr = layer.trees.thresholds
+    lut_q8, scales = quantize_lut_int8(layer.lut.astype(jnp.float32))
+
+    bt = min(block_t, max(8, t))
+    xg_p = _pad_to(xg, 0, bt)
+    xg_p = _pad_to(xg_p, 1, min(block_k, k))
+    kp = xg_p.shape[1]
+    if kp != k:
+        feat_oh = _pad_to(feat_oh, 0, min(block_k, k))
+        thr = jnp.pad(thr, ((0, kp - k), (0, 0)), constant_values=jnp.inf)
+        lut_q8 = _pad_to(lut_q8, 0, min(block_k, k))
+        scales = jnp.pad(scales, (0, kp - k))
+    lut_q8 = _pad_to(lut_q8, 2, min(block_n, n))
+
+    y = fuzzy_lut_q8_pallas(
+        xg_p, feat_oh, thr, lut_q8, scales,
+        depth=int(np.log2(layer.num_centroids) + 0.5),
+        block_t=bt, block_n=min(block_n, lut_q8.shape[2]),
+        block_k=min(block_k, kp), interpret=interpret,
+    )
+    y = y[:t, :n]
+    if layer.bias is not None:
+        y = y + layer.bias
+    return y.reshape(*lead, n)

@@ -1,0 +1,116 @@
+"""int8-LUT variant of the fused fuzzy-LUT kernel (beyond-paper §Perf D4).
+
+LUT rows are stored int8 with one f32 scale per partition group; the scale
+is folded into the one-hot BEFORE the MXU matmul (exact — the matmul sums
+over (group, centroid) and the scale is constant within a group):
+
+    y = Σ_k s_k · LUT8[k, idx_k]  ==  (onehot ⊙ s)[T, K·C] @ LUT8[K·C, N]
+
+Wire effect at decode: LUT bytes halve vs bf16; with v=16, C=16 the total
+weight-byte cost is 0.5·(C/v)=0.5× the dense bf16 weights — the decode
+memory-roofline lever recorded in EXPERIMENTS.md §Perf D4.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .kernel import _tpu_compiler_params
+
+__all__ = ["quantize_lut_int8", "fuzzy_lut_q8_pallas", "fuzzy_lut_q8_ref"]
+
+
+def quantize_lut_int8(lut: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-group symmetric int8 quantization. [K,C,N] → (int8 [K,C,N], f32 [K])."""
+    amax = jnp.max(jnp.abs(lut.astype(jnp.float32)), axis=(1, 2))
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(lut.astype(jnp.float32) / scale[:, None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def fuzzy_lut_q8_ref(x, features, thresholds, lut_q8, scales):
+    """Oracle: hard descent + dequantized gather-sum."""
+    from .ref import tree_descent_ref
+
+    idx = tree_descent_ref(x, features, thresholds)            # [T, K]
+    gathered = jnp.take_along_axis(
+        lut_q8[None].astype(jnp.float32), idx[:, :, None, None], axis=2
+    )[:, :, 0, :]                                              # [T, K, N]
+    return (gathered * scales[None, :, None]).sum(axis=1)
+
+
+def _q8_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, scale_ref, out_ref, *, depth):
+    x = x_ref[...].astype(jnp.float32)
+    feat_oh = feat_oh_ref[...].astype(jnp.float32)
+    thr = thr_ref[...].astype(jnp.float32)
+    n_internal = thr.shape[-1]
+    c = n_internal + 1
+
+    vals = jax.lax.dot_general(
+        x, feat_oh, dimension_numbers=(((2,), (2,)), ((1,), (0,))),
+        preferred_element_type=jnp.float32,
+    ).transpose(1, 0, 2)
+    bits = (vals > thr[None]).astype(jnp.int32)
+
+    tt, kt = x.shape[0], x.shape[1]
+    node = jnp.zeros((tt, kt), dtype=jnp.int32)
+    iota_nodes = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, n_internal), 2)
+    for _ in range(depth):
+        node_oh = (iota_nodes == node[:, :, None]).astype(jnp.int32)
+        node = 2 * node + 1 + jnp.sum(bits * node_oh, axis=-1)
+    leaf = node - n_internal
+
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, c), 2)
+    onehot = (iota_c == leaf[:, :, None]).astype(jnp.float32)
+    # fold the per-group dequant scale into the one-hot (exact)
+    onehot = onehot * scale_ref[...][None, :, None].astype(jnp.float32)
+    lut = lut_ref[...].astype(jnp.float32)
+    contrib = jax.lax.dot_general(
+        onehot.reshape(tt, kt * c), lut.reshape(kt * c, -1),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = contrib
+
+    @pl.when(pl.program_id(2) != 0)
+    def _accum():
+        out_ref[...] += contrib
+
+
+@functools.partial(
+    jax.jit, static_argnames=("depth", "block_t", "block_n", "block_k", "interpret"))
+def fuzzy_lut_q8_pallas(
+    x, feat_oh, thresholds, lut_q8, scales, *,
+    depth: int, block_t: int = 256, block_n: int = 256, block_k: int = 128,
+    interpret: bool = True,
+):
+    t, k, v = x.shape
+    _, c, n = lut_q8.shape
+    bt, bn, bk = min(block_t, t), min(block_n, n), min(block_k, k)
+    assert t % bt == 0 and n % bn == 0 and k % bk == 0
+    n_internal = c - 1
+    grid = (t // bt, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_q8_kernel, depth=depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk, v), lambda i, j, kk: (i, kk, 0)),
+            pl.BlockSpec((bk, n_internal, v), lambda i, j, kk: (kk, 0, 0)),
+            pl.BlockSpec((bk, n_internal), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((bk, c, bn), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((bk,), lambda i, j, kk: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        compiler_params=_tpu_compiler_params(("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, feat_oh, thresholds, lut_q8, scales)

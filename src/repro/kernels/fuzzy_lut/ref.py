@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the fused fuzzy-LUT matmul kernel.
+
+Semantics: for grouped input ``x: [T, K, v]``, stacked depth-d trees
+(``features: [K, 2^d - 1]`` int32, ``thresholds: [K, 2^d - 1]`` f32) and a
+LUT bank ``lut: [K, C, N]`` (C = 2^d):
+
+    idx[t, k] = leaf index of x[t, k] under tree k       (hard descent)
+    y[t]      = sum_k lut[k, idx[t, k]]  (+ bias)
+
+This is Partition→Map→SumReduce for Weighted Aggregation (paper §5), i.e.
+the Pegasus approximate matmul. All kernel variants must match this oracle
+bitwise-closely (fp32) for every shape/dtype in the sweep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["fuzzy_lut_matmul_ref", "tree_descent_ref"]
+
+
+def tree_descent_ref(
+    x: jax.Array, features: jax.Array, thresholds: jax.Array
+) -> jax.Array:
+    """Hard tree descent. x: [T, K, v] → leaf idx [T, K] int32."""
+    n_internal = features.shape[-1]
+    depth = (n_internal + 1).bit_length() - 1
+    k = x.shape[-2]
+    karange = jnp.arange(k)
+    node = jnp.zeros(x.shape[:-1], dtype=jnp.int32)  # [T, K]
+    for _ in range(depth):
+        feat = features[karange, node]  # [T, K]
+        thr = thresholds[karange, node]
+        val = jnp.take_along_axis(x, feat[..., None], axis=-1)[..., 0]
+        node = 2 * node + 1 + (val > thr).astype(jnp.int32)
+    return node - n_internal
+
+
+def fuzzy_lut_matmul_ref(
+    x: jax.Array,
+    features: jax.Array,
+    thresholds: jax.Array,
+    lut: jax.Array,
+    bias: jax.Array | None = None,
+) -> jax.Array:
+    """Oracle: gather leaf rows per group and sum. Returns [T, N] f32."""
+    idx = tree_descent_ref(x, features, thresholds)  # [T, K]
+    t, k = idx.shape
+    gathered = jnp.take_along_axis(
+        lut[None].astype(jnp.float32), idx[:, :, None, None], axis=2
+    )[:, :, 0, :]  # [T, K, N]
+    y = gathered.sum(axis=1)
+    if bias is not None:
+        y = y + bias
+    return y

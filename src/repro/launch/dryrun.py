@@ -1,0 +1,290 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices stand in for 2 pods × 256 chips; ``.lower().compile()``
+must succeed for every supported cell, and the compiled artifact yields the
+memory/cost analyses §Roofline reads.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --json out.json
+"""
+
+# MUST precede any jax import (device count locks on first init).
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, SHAPES, get_config
+from repro.models.transformer import init_model
+from repro.train.optimizer import adamw_init
+
+from .mesh import (
+    batch_specs, decode_state_specs, make_production_mesh, named, param_specs,
+)
+from .hlo_analysis import collective_bytes_hlo
+from .specs import input_specs, skip_reason
+from .train import make_train_step, train_state_shardings
+from .serve import make_prefill_step, make_serve_step
+
+__all__ = ["dryrun_cell", "main"]
+
+
+def _param_structs(cfg, dtype=jnp.bfloat16):
+    """Shape-only params (no allocation!)."""
+    return jax.eval_shape(
+        lambda: init_model(cfg, jax.random.PRNGKey(0), dtype=dtype))
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO.
+
+    Parses shapes like ``bf16[16,512,128]`` on lines whose op is
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute. Returns bytes per collective kind.
+    """
+    dbytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+              "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3": 1,
+              "f8e5m2": 1, "s16": 2, "u16": 2}
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    out = {k: 0 for k in kinds}
+    shape_re = re.compile(r"(f32|bf16|f16|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|f8e4m3|f8e5m2)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match ' = TYPE[SHAPE] all-gather(' style ops (skip -start/-done fusions)
+        m = re.search(r"=\s*[^=]*?\b(" + "|".join(kinds) + r")(?:-start)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(1)
+        # first shape on the line = output shape (good operand-size proxy;
+        # for all-gather output > input — we take OUTPUT bytes, the wire cost)
+        shapes = shape_re.findall(stripped.split("=")[0]) or shape_re.findall(stripped)
+        if not shapes:
+            continue
+        dt, dims = shapes[0]
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out[kind] += n * dbytes.get(dt, 4)
+    return out
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    remat_policy: str = "nothing",
+    microbatches: int = 1,
+    seq_parallel_attn: bool = False,
+    layer_seq_shard: bool = False,
+    cache_seq_shard: bool = False,
+    decode_replicated_batch: bool = False,
+    decode_feature_shard: bool = False,
+    prefill_last_only: bool = False,
+    optimized: bool = False,
+    include_text: bool = False,
+    extra_tags: dict | None = None,
+) -> dict:
+    """Lower + compile one cell; return roofline-relevant artifacts.
+
+    ``optimized=True`` applies the per-kind winning configuration from the
+    EXPERIMENTS.md §Perf hillclimbs:
+      train   → microbatches=8 (plain FSDP×TP attention — SP refuted for train)
+      prefill → last-token head + seq-parallel attention + SP layer boundaries
+      decode  → split-KV cache sharding + weight-stationary 2D-TP activations
+    """
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+    if optimized:
+        kind_ = SHAPES[shape_name][2]
+        if kind_ == "train":
+            microbatches = max(microbatches, 8)
+        elif kind_ == "prefill":
+            prefill_last_only = True
+            seq_parallel_attn = True
+            layer_seq_shard = True
+        else:
+            cache_seq_shard = True
+            decode_feature_shard = True
+
+    from repro.models import attention as attn_mod
+    from repro.models import transformer as tf_mod
+
+    attn_mod.SEQ_PARALLEL_ATTN = seq_parallel_attn
+    tf_mod.LAYER_SEQ_SHARD = layer_seq_shard
+    tf_mod.DECODE_FEATURE_SHARD = decode_feature_shard
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq, gb, kind = SHAPES[shape_name]
+    t0 = time.time()
+
+    params_s = _param_structs(cfg)
+    pspec_sh = named(mesh, param_specs(cfg, params_s, mesh))
+
+    with mesh:
+        if kind == "train":
+            opt_s = jax.eval_shape(lambda: adamw_init(params_s))
+            _, opt_sh = train_state_shardings(cfg, params_s, mesh)
+            batch = input_specs(arch, shape_name)
+            batch_sh = named(mesh, batch_specs(cfg, batch, mesh, batch_size=gb))
+            step = make_train_step(cfg, remat_policy=remat_policy,
+                                   microbatches=microbatches)
+            lowered = jax.jit(
+                step,
+                in_shardings=(pspec_sh, opt_sh, batch_sh),
+                out_shardings=(pspec_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(params_s, opt_s, batch)
+        elif kind == "prefill":
+            batch = input_specs(arch, shape_name)
+            batch_sh = named(mesh, batch_specs(cfg, batch, mesh, batch_size=gb))
+            step = make_prefill_step(cfg, last_only=prefill_last_only)
+            lowered = jax.jit(
+                step, in_shardings=(pspec_sh, batch_sh), out_shardings=None,
+            ).lower(params_s, batch)
+        else:  # decode
+            specs = input_specs(arch, shape_name)
+            state_s = specs["state"]
+            state_sh = named(
+                mesh, decode_state_specs(cfg, state_s, mesh, batch_size=gb,
+                                         cache_seq_shard=cache_seq_shard))
+            step = make_serve_step(cfg)
+            args = (params_s, state_s, specs["tokens"], specs["pos"])
+            tok_sh = None
+            if decode_replicated_batch:
+                # tokens/activations replicated; weights stay 2D-sharded →
+                # tiny activation all-reduces replace per-step weight gathers
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                tok_sh = NamedSharding(mesh, P(None, None))
+            in_sh = (pspec_sh, state_sh, tok_sh, None)
+            if "enc_out" in specs:
+                args = args + (specs["enc_out"],)
+                in_sh = in_sh + (None,)
+            lowered = jax.jit(
+                step,
+                in_shardings=in_sh,
+                out_shardings=(None, state_sh),
+                donate_argnums=(1,),
+            ).lower(*args)
+
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    hlo = compiled.as_text()
+    coll = collective_bytes_hlo(hlo)        # while-trip-aware (see hlo_analysis)
+    coll_flat = collective_bytes(hlo)       # naive single-count, for reference
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": kind,
+        "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": {k: v for k, v in coll.items() if k != "total"},
+        "collective_total": int(coll.get("total", 0)),
+        "collective_total_uncorrected": int(sum(coll_flat.values())),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(
+                getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+            ),
+        },
+    }
+    if extra_tags:
+        result.update(extra_tags)
+    if include_text:
+        result["hlo"] = hlo
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--json", default=None, help="append results to this file")
+    ap.add_argument("--seq-parallel-attn", action="store_true")
+    ap.add_argument("--layer-seq-shard", action="store_true")
+    ap.add_argument("--cache-seq-shard", action="store_true")
+    ap.add_argument("--decode-replicated-batch", action="store_true")
+    ap.add_argument("--decode-feature-shard", action="store_true")
+    ap.add_argument("--prefill-last-only", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="per-kind winning flags from §Perf")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    fail = 0
+    for arch, shape in cells:
+        try:
+            r = dryrun_cell(arch, shape, multi_pod=args.multi_pod,
+                            remat_policy=args.remat,
+                            microbatches=args.microbatches,
+                            seq_parallel_attn=args.seq_parallel_attn,
+                            layer_seq_shard=args.layer_seq_shard,
+                            cache_seq_shard=args.cache_seq_shard,
+                            decode_replicated_batch=args.decode_replicated_batch,
+                            decode_feature_shard=args.decode_feature_shard,
+                            prefill_last_only=args.prefill_last_only,
+                            optimized=args.optimized)
+        except Exception as e:  # noqa: BLE001 — report, continue, fail at end
+            r = {"arch": arch, "shape": shape, "error": f"{type(e).__name__}: {e}"}
+            fail += 1
+        tag = ("SKIP" if "skipped" in r else
+               "FAIL" if "error" in r else "ok")
+        summary = r.get("skipped") or r.get("error") or (
+            f"compile={r['compile_s']}s flops={r['flops']:.3e} "
+            f"coll={r['collective_total']:.3e}B peak={r['memory']['peak_bytes']/2**30:.1f}GiB")
+        print(f"[{tag}] {arch:<20} {shape:<12} {summary}", flush=True)
+        results.append(r)
+
+    if args.json:
+        existing = []
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                existing = json.load(f)
+        with open(args.json, "w") as f:
+            json.dump(existing + results, f, indent=1)
+    sys.exit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,176 @@
+"""Production mesh + sharding rules for the 10-arch LM stack.
+
+Mesh shapes (TPU v5e pods):
+  single-pod:  (16, 16)      axes ("data", "model")
+  multi-pod:   (2, 16, 16)   axes ("pod", "data", "model")  — "pod" is an
+               outer data-parallel axis whose collectives cross DCN.
+
+Sharding policy (GSPMD):
+  * TP: one matrix axis on "model" (heads / d_ff / vocab).
+  * FSDP/ZeRO-3: the OTHER matrix axis on ("pod","data") — params, grads
+    and Adam m/v all shard over the full mesh; XLA inserts the all-gather /
+    reduce-scatter pairs.
+  * Activations: batch on ("pod","data"); internal shardings left to SPMD.
+  * KV caches: batch on data; kv-heads on "model" when divisible, else
+    head_dim (GQA archs with few KV heads).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchConfig
+
+__all__ = ["make_production_mesh", "param_specs", "batch_specs",
+           "decode_state_specs", "fsdp_axes", "named", "MODEL_AXIS_SIZE"]
+
+MODEL_AXIS_SIZE = 16
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if isinstance(axis, tuple):
+        size = int(np.prod([mesh.shape[a] for a in axis]))
+    else:
+        size = mesh.shape[axis]
+    return n % size == 0
+
+
+def _maybe(n: int, mesh: Mesh, axis):
+    """Shard dim of size n on axis if divisible, else replicate."""
+    return axis if _div(n, mesh, axis) else None
+
+
+def param_specs(cfg: ArchConfig, params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching the param tree (TP × FSDP)."""
+    fsdp = fsdp_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+
+    def spec_for(path: str, x: jax.Array) -> P:
+        shape = x.shape
+        stacked = path.startswith(("layers/", "enc_layers/"))
+        dims = shape[1:] if stacked else shape
+        leaf = path.rsplit("/", 1)[-1]
+
+        def out(*spec):
+            spec = list(spec) + [None] * (len(dims) - len(spec))
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+
+        if leaf in ("embed",):
+            return out(_maybe(dims[0], mesh, "model"), _maybe(dims[1], mesh, fsdp))
+        if leaf == "lm_head":
+            return out(_maybe(dims[0], mesh, fsdp), _maybe(dims[1], mesh, "model"))
+        if len(dims) == 0 or leaf.startswith("ln") or leaf in ("a_log",):
+            return out()
+        if leaf in ("wq", "wk", "wv", "wz", "wi", "wf", "wo_gate", "w_in", "w_gate",
+                    "w_dt", "w_B", "w_C"):
+            if len(dims) == 3:  # MoE [E, D, F]: EP on experts when divisible
+                if _div(dims[0], mesh, "model"):
+                    return out("model", _maybe(dims[1], mesh, fsdp), None)
+                return out(None, _maybe(dims[1], mesh, fsdp),
+                           _maybe(dims[2], mesh, "model"))
+            if len(dims) == 1:
+                return out(_maybe(dims[0], mesh, "model"))
+            return out(_maybe(dims[0], mesh, fsdp), _maybe(dims[1], mesh, "model"))
+        if leaf in ("wo", "w_out", "r"):
+            if len(dims) == 3:  # MoE [E, F, D]
+                if _div(dims[0], mesh, "model"):
+                    return out("model", None, _maybe(dims[2], mesh, fsdp))
+                return out(None, _maybe(dims[1], mesh, "model"),
+                           _maybe(dims[2], mesh, fsdp))
+            return out(_maybe(dims[0], mesh, "model"), _maybe(dims[1], mesh, fsdp))
+        if leaf in ("router",):
+            return out(_maybe(dims[0], mesh, fsdp), None)
+        if leaf in ("bq", "bk", "bv"):
+            return out(_maybe(dims[0], mesh, "model"))
+        return out()
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+
+    def keystr(kp):
+        return "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp
+        )
+
+    specs = [spec_for(keystr(kp), leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(cfg: ArchConfig, batch: Any, mesh: Mesh, *, batch_size: int) -> Any:
+    """Batch inputs: batch dim on ("pod","data") when divisible, else replicated
+    (long_500k has global_batch=1 — model-parallel only, by design)."""
+    fsdp = fsdp_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+    bspec = _maybe(batch_size, mesh, fsdp)
+
+    def spec_for(x):
+        if hasattr(x, "ndim") and x.ndim >= 1:
+            return P(bspec, *([None] * (x.ndim - 1)))
+        return P()
+
+    return jax.tree.map(spec_for, batch)
+
+
+def decode_state_specs(cfg: ArchConfig, state: Any, mesh: Mesh, *, batch_size: int,
+                       cache_seq_shard: bool = False) -> Any:
+    """Caches/states: [L, B, ...] — B on fsdp axes; kv-heads or head_dim on model.
+
+    ``cache_seq_shard`` (§Perf): shard the KV cache over SEQUENCE on 'model'
+    instead of head_dim — flash-decoding-style split-KV. Scores/PV reduce
+    locally per shard; only tiny softmax stats + the [B,1,D] output cross
+    devices, replacing the per-layer [B,kv,g,T] score all-reduce.
+    """
+    fsdp = fsdp_axes(mesh)
+    fsdp = fsdp if len(fsdp) > 1 else fsdp[0]
+    bspec = _maybe(batch_size, mesh, fsdp)
+
+    def spec_for(path: str, x: jax.Array) -> P:
+        dims = x.shape
+        leaf = path.rsplit("/", 1)[-1]
+        if leaf in ("cache_k", "cache_v"):
+            # [L, B, S, kv, hd]
+            if cache_seq_shard and _div(dims[2], mesh, "model"):
+                return P(None, bspec, "model", None, None)
+            kv_spec = _maybe(dims[3], mesh, "model")
+            hd_spec = _maybe(dims[4], mesh, "model") if kv_spec is None else None
+            return P(None, bspec, None, kv_spec, hd_spec)
+        if leaf in ("mlstm_S",):   # [L, B, H, hd, hd]
+            return P(None, bspec, None, _maybe(dims[3], mesh, "model"), None)
+        if leaf in ("mlstm_n",):   # [L, B, H, hd]
+            return P(None, bspec, None, _maybe(dims[3], mesh, "model"))
+        if leaf in ("mamba_h",):   # [L, B, di, N]
+            return P(None, bspec, _maybe(dims[2], mesh, "model"), None)
+        if leaf.startswith("slstm"):  # [L, B, D]
+            return P(None, bspec, _maybe(dims[2], mesh, "model"))
+        return P(*([None] * len(dims)))
+
+    flat = jax.tree_util.tree_flatten_with_path(state)[0]
+    treedef = jax.tree_util.tree_structure(state)
+
+    def keystr(kp):
+        return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+    specs = [spec_for(keystr(kp), leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,124 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from sweep JSONs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.report \
+      --single results_dryrun_single.json [--patch results_dryrun_moefix.json] \
+      --multi results_dryrun_multi.json --out roofline_report.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.registry import ARCH_IDS, SHAPES, get_config
+from repro.launch.roofline import V5E, format_row, roofline_terms
+
+
+def load_results(single: str, patch: str | None = None) -> dict:
+    with open(single) as f:
+        rows = json.load(f)
+    table = {(r["arch"], r["shape"]): r for r in rows}
+    if patch:
+        with open(patch) as f:
+            for r in json.load(f):
+                table[(r["arch"], r["shape"])] = r
+    return table
+
+
+def dryrun_table(results: dict, mesh_label: str) -> list[str]:
+    lines = [
+        f"### Mesh {mesh_label}",
+        "",
+        "| arch | shape | compile (s) | HLO flops (raw) | collective B/dev "
+        "(while-corrected) | peak HBM/dev | status |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = results.get((arch, shape))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | SKIP ({r['skipped'][:40]}…) |")
+            elif "error" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | **FAIL** {r['error'][:60]} |")
+            else:
+                pk = r["memory"]["peak_bytes"] / 2**30
+                lines.append(
+                    f"| {arch} | {shape} | {r['compile_s']} | {r['flops']:.2e} | "
+                    f"{r['collective_total']:.2e} | {pk:.1f} GiB | ok |")
+    return lines
+
+
+def roofline_table(results: dict) -> list[str]:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    picked = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            r = results.get((arch, shape))
+            if r is None or "skipped" in r or "error" in r:
+                continue
+            terms = roofline_terms(cfg, shape, r["collective_total"])
+            lines.append(format_row(arch, shape, terms))
+            picked.append((arch, shape, terms))
+    return lines
+
+
+def narrative(results: dict) -> list[str]:
+    """One sentence per cell on what would move the dominant term."""
+    hints = {
+        ("compute", "train"): "more chips / lower remat recompute (dots policy)",
+        ("compute", "prefill"): "batch growth amortizes weight gathers; MXU already saturated",
+        ("compute", "decode"): "batch up decode or fuse kernels; compute rarely dominates decode",
+        ("memory", "train"): "microbatching + sequence-sharded activations cut HBM traffic",
+        ("memory", "prefill"): "chunked attention + bf16 activations",
+        ("memory", "decode"): "KV-cache/LUT quantization (int8) halves bytes — the Pegasus lever",
+        ("collective", "train"): "overlap FSDP gathers with compute; bf16 grad reduce; bigger per-device batch",
+        ("collective", "prefill"): "re-shard activations to cut resharding all-gathers",
+        ("collective", "decode"): "replicate small weights instead of gathering per step",
+    }
+    lines = ["", "Per-cell notes (what moves the dominant term):", ""]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            r = results.get((arch, shape))
+            if r is None or "skipped" in r or "error" in r:
+                continue
+            t = roofline_terms(cfg, shape, r["collective_total"])
+            kind = SHAPES[shape][2]
+            lines.append(f"- **{arch} × {shape}** ({t['dominant']}-bound): "
+                         f"{hints[(t['dominant'], kind)]}.")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", required=True)
+    ap.add_argument("--patch", default=None)
+    ap.add_argument("--multi", default=None)
+    ap.add_argument("--out", default="roofline_report.md")
+    args = ap.parse_args()
+
+    single = load_results(args.single, args.patch)
+    out = ["## §Dry-run", ""]
+    out += dryrun_table(single, "16×16 (single pod, 256 chips)")
+    if args.multi:
+        multi = load_results(args.multi)
+        out += [""]
+        out += dryrun_table(multi, "2×16×16 (two pods, 512 chips)")
+    out += ["", "## §Roofline (single pod)", ""]
+    out += roofline_table(single)
+    out += narrative(single)
+    with open(args.out, "w") as f:
+        f.write("\n".join(out) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) cell — the dry-run's
+inputs. No device allocation happens here (shannon/kernels pattern).
+
+Cell semantics:
+  train_4k    → ``train_step``  : tokens/labels [GB, S] (stub: embeds)
+  prefill_32k → ``prefill_step``: forward over the full sequence
+  decode_32k  → ``serve_step``  : ONE new token against a seq_len KV cache
+  long_500k   → ``serve_step``  : as above at 524288 (sub-quadratic archs only)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES, ArchConfig, get_config
+from repro.models.transformer import init_decode_state
+
+__all__ = ["input_specs", "decode_state_shapes", "cell_is_supported", "skip_reason"]
+
+
+def cell_is_supported(cfg: ArchConfig, shape_name: str) -> bool:
+    return skip_reason(cfg, shape_name) is None
+
+
+def skip_reason(cfg: ArchConfig, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("full attention: 524k-token KV has no sub-quadratic path in the "
+                "published architecture (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Returns {batch | tokens/pos/state-free inputs} ShapeDtypeStructs."""
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    seq, gb, kind = SHAPES[shape_name]
+
+    if kind == "train" or kind == "prefill":
+        batch = {}
+        if cfg.encoder_layers:  # whisper: encoder frames + decoder text
+            batch["embeds"] = _struct((gb, seq, cfg.d_model), jnp.bfloat16)
+            batch["dec_tokens"] = _struct((gb, cfg.max_decoder_len), jnp.int32)
+            if kind == "train":
+                batch["labels"] = _struct((gb, cfg.max_decoder_len), jnp.int32)
+        elif cfg.frontend_stub:  # vlm: patch/frame embeddings
+            batch["embeds"] = _struct((gb, seq, cfg.d_model), jnp.bfloat16)
+            if kind == "train":
+                batch["labels"] = _struct((gb, seq), jnp.int32)
+        else:
+            batch["tokens"] = _struct((gb, seq), jnp.int32)
+            if kind == "train":
+                batch["labels"] = _struct((gb, seq), jnp.int32)
+        return batch
+
+    # decode: one token + cache/state structs
+    out = {
+        "tokens": _struct((gb, 1), jnp.int32),
+        "pos": _struct((), jnp.int32),
+        "state": decode_state_shapes(cfg, gb, seq),
+    }
+    if cfg.encoder_layers:
+        # cross-attention context from the encoder (its own envelope)
+        out["enc_out"] = _struct((gb, 1500, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_state_shapes(cfg: ArchConfig, batch: int, kv_len: int) -> dict:
+    """Shape-only version of init_decode_state (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, kv_len, dtype=jnp.bfloat16)
+    )

@@ -1,0 +1,246 @@
+"""GQA/MQA attention with RoPE/M-RoPE, causal + sliding-window masks, and a
+decode path over a preallocated KV cache. Pure jnp; sharding comes from the
+callers' pjit in/out specs (heads live on the "model" mesh axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rope, rope_mrope
+
+__all__ = ["init_attn", "attn_forward", "attn_decode", "DEFAULT_IMPL",
+           "SEQ_PARALLEL_ATTN"]
+
+# module-level defaults so perf experiments can flip implementations without
+# threading flags through every config (see launch/roofline.py + §Perf).
+DEFAULT_IMPL = "chunked"
+
+# Sequence-parallel attention (§Perf iteration): when the KV-head count does
+# not divide the "model" axis, GSPMD's fallback shards head_dim and inserts
+# an all-reduce of every score tile INSIDE the flash inner loop (measured
+# 470 MB × 127k executions on deepseek prefill_32k — EXPERIMENTS.md §Perf).
+# Constraining q/k/v to be sharded over SEQUENCE on the model axis makes all
+# attention arithmetic local: one all-gather of K/V per layer replaces the
+# per-tile all-reduce.
+SEQ_PARALLEL_ATTN = False
+
+
+def _seq_shard(x, axis: int = 1):
+    """Constrain x to be sequence-sharded on the 'model' mesh axis."""
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        spec = [None] * x.ndim
+        spec[axis] = "model"
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):  # no mesh in scope (unit tests)
+        return x
+
+
+def _replicate_model(x):
+    """Constrain x to be replicated over the 'model' axis (K/V gather once)."""
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*([None] * x.ndim)))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def init_attn(key, d_model: int, num_heads: int, num_kv: int, head_dim: int,
+              *, qkv_bias: bool = False, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, num_heads, num_kv, head_dim):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        q.reshape(b, s, num_heads, head_dim),
+        k.reshape(b, s, num_kv, head_dim),
+        v.reshape(b, s, num_kv, head_dim),
+    )
+
+
+def _sdpa(q, k, v, mask, *, num_kv_groups: int):
+    """q [B,S,H,hd]; k,v [B,T,Kv,hd]; GQA via head grouping. f32 softmax."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    q = q.reshape(b, s, kv, num_kv_groups, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _sdpa_chunked(q, k, v, *, num_kv_groups: int, causal: bool,
+                  window: int | None, q_chunk: int = 512, kv_chunk: int = 1024):
+    """Flash-style chunked attention: online softmax over KV blocks.
+
+    Scores exist only per (q_chunk × kv_chunk) tile — activation memory is
+    O(S·d) instead of O(S²). Causality/windowing skip fully-masked KV chunks
+    only via masking (shape-static; the scan is over all chunks).
+    q [B,S,H,hd] → out [B,S,H,hd].
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kv = k.shape[2]
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, t)
+    assert s % qc == 0 and t % kc == 0, (s, qc, t, kc)
+    nq, nk = s // qc, t // kc
+    g = num_kv_groups
+    scale = 1.0 / np.sqrt(hd)
+
+    # [nq, B, kv, g, qc, hd]
+    qr = q.reshape(b, nq, qc, kv, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(b, nk, kc, kv, hd).transpose(1, 0, 3, 2, 4)   # [nk,B,kv,kc,hd]
+    vr = v.reshape(b, nk, kc, kv, hd).transpose(1, 0, 3, 2, 4)
+
+    q_pos_base = jnp.arange(nq) * qc
+    k_pos_base = jnp.arange(nk) * kc
+
+    def q_block(carry_qi, qi_inputs):
+        qb, q0 = qi_inputs                           # [B,kv,g,qc,hd], scalar
+
+        def kv_block(carry, ki_inputs):
+            m, l, acc = carry                        # running max/denom/accum
+            kb, vb, k0 = ki_inputs
+            scores = jnp.einsum(
+                "bkgqh,bkch->bkgqc", qb.astype(jnp.float32), kb.astype(jnp.float32)
+            ) * scale                                # [B,kv,g,qc,kc]
+            qpos = q0 + jnp.arange(qc)
+            kpos = k0 + jnp.arange(kc)
+            msk = jnp.ones((qc, kc), bool)
+            if causal:
+                msk = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                msk = msk & (kpos[None, :] > qpos[:, None] - window)
+            scores = jnp.where(msk[None, None, None], scores, -1e30)
+            m_new = jnp.maximum(m, scores.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqc,bkch->bkgqh", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), (kr, vr, k_pos_base))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry_qi, out
+
+    _, outs = jax.lax.scan(q_block, 0, (qr, q_pos_base))  # [nq,B,kv,g,qc,hd]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def attn_forward(
+    p: dict,
+    x: jax.Array,                      # [B, S, D]
+    positions: jax.Array,              # [S] or [B, S]
+    *,
+    num_heads: int,
+    num_kv: int,
+    head_dim: int,
+    causal: bool = True,
+    window: int | None = None,
+    rope_kind: str = "standard",       # standard | mrope | none
+    impl: str | None = None,           # chunked (flash-style) | naive
+) -> jax.Array:
+    impl = impl or DEFAULT_IMPL
+    b, s, d = x.shape
+    q, k, v = _project_qkv(p, x, num_heads, num_kv, head_dim)
+    if rope_kind == "standard":
+        q, k = rope(q, positions), rope(k, positions)
+    elif rope_kind == "mrope":
+        from .layers import mrope_positions
+
+        pos3 = mrope_positions(positions)
+        q, k = rope_mrope(q, pos3), rope_mrope(k, pos3)
+
+    if SEQ_PARALLEL_ATTN and s > 512:
+        # queries sharded over seq on 'model'; K/V gathered (replicated over
+        # 'model') — all score/PV arithmetic becomes device-local.
+        q = _seq_shard(q, 1)
+        k = _replicate_model(k)
+        v = _replicate_model(v)
+
+    if impl == "chunked" and s > 512:
+        out = _sdpa_chunked(q, k, v, num_kv_groups=num_heads // num_kv,
+                            causal=causal, window=window)
+    else:
+        mask = None
+        if causal:
+            i = jnp.arange(s)[:, None]
+            j = jnp.arange(s)[None, :]
+            mask = j <= i
+            if window is not None:
+                mask = mask & (j > i - window)
+            mask = mask[None, None, None]  # [1,1,1,S,T]
+        out = _sdpa(q, k, v, mask, num_kv_groups=num_heads // num_kv)
+    return out.reshape(b, s, num_heads * head_dim) @ p["wo"]
+
+
+def attn_decode(
+    p: dict,
+    x: jax.Array,                      # [B, 1, D] — one new token
+    cache_k: jax.Array,                # [B, S, Kv, hd] preallocated
+    cache_v: jax.Array,
+    pos: jax.Array,                    # scalar int32: write index
+    *,
+    num_heads: int,
+    num_kv: int,
+    head_dim: int,
+    window: int | None = None,
+    rope_kind: str = "standard",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against the KV cache; returns (out, new_k, new_v)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, num_heads, num_kv, head_dim)
+    posv = jnp.full((1,), pos, jnp.int32)
+    if rope_kind == "standard":
+        q, k = rope(q, posv), rope(k, posv)
+    elif rope_kind == "mrope":
+        from .layers import mrope_positions
+
+        pos3 = mrope_positions(posv)
+        q, k = rope_mrope(q, pos3), rope_mrope(k, pos3)
+
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+
+    t = cache_k.shape[1]
+    j = jnp.arange(t)[None, None, None, None, :]  # [1,1,1,1,T]
+    mask = j <= pos
+    if window is not None:
+        mask = mask & (j > pos - window)
+    out = _sdpa(q, cache_k, cache_v, mask, num_kv_groups=num_heads // num_kv)
+    out = out.reshape(b, 1, num_heads * head_dim) @ p["wo"]
+    return out, cache_k, cache_v

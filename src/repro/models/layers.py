@@ -1,0 +1,89 @@
+"""Shared building blocks for the LM stack: norms, RoPE/M-RoPE, activations,
+init helpers. Everything is plain-jnp + dict params (stacked over layers for
+lax.scan), bf16 weights / f32 accumulation by default.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "rope", "mrope_positions", "activation", "dense_init"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: float = 1e4) -> tuple[jax.Array, jax.Array]:
+    """positions [..., S] → cos/sin [..., S, head_dim/2] (f32)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, hd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding. x: [B, S, H, hd]; positions: [B, S] or [S]."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)  # [B, S, hd/2] or [S, hd/2]
+    # add the head axis once; leading axes broadcast ([S,1,hd/2] vs [B,S,H,hd/2])
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(positions: jax.Array, sections: tuple[int, int, int] = (1, 1, 2)):
+    """Qwen2-VL M-RoPE stub: (t, h, w) position components.
+
+    The modality frontend is a stub (input_specs provides patch embeddings),
+    so all three components collapse to the text position stream — but the
+    M-RoPE *structure* (sectioned rotary dims) is preserved so real (t,h,w)
+    streams drop in without touching the attention code.
+    Returns [3, ...] stacked position components.
+    """
+    return jnp.stack([positions, positions, positions], axis=0)
+
+
+def rope_mrope(x: jax.Array, positions3: jax.Array, sections=(2, 1, 1), theta: float = 1e4) -> jax.Array:
+    """Sectioned M-RoPE: head_dim/2 frequency slots split across (t,h,w)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(sections)
+    sizes = [half * s // total for s in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    # component index per frequency slot
+    comp = jnp.concatenate([jnp.full((sz,), i, jnp.int32) for i, sz in enumerate(sizes)])
+    pos = positions3.astype(jnp.float32)  # [3, B, S] or [3, S]
+    pos_per_slot = jnp.take(pos, comp, axis=0)  # [half, ...]→ moveaxis
+    pos_per_slot = jnp.moveaxis(pos_per_slot, 0, -1)  # [..., half]
+    ang = pos_per_slot * freqs  # [..., half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos, sin = cos[..., None, :], sin[..., None, :]  # head axis (leading bcast)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "sq_relu":  # Nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16) -> jax.Array:
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)

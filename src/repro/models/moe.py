@@ -1,0 +1,100 @@
+"""Top-k MoE FFN with capacity-based one-hot dispatch (Switch/GShard style).
+
+Dense dispatch einsums compile cleanly under GSPMD: with experts sharded on
+the "model" mesh axis and tokens on ("pod","data"), XLA inserts the
+all-to-all pair around the expert computation — the standard expert-parallel
+schedule. Capacity bounds the dispatch tensor so memory stays shape-static.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import activation, dense_init
+
+__all__ = ["init_moe", "moe_forward"]
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, *, gated: bool = True,
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d_model, num_experts), dtype=jnp.float32),
+        "w_in": dense_init(ks[1], (num_experts, d_model, d_ff), in_axis=1, dtype=dtype),
+        "w_out": dense_init(ks[2], (num_experts, d_ff, d_model), in_axis=1, dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[3], (num_experts, d_model, d_ff), in_axis=1, dtype=dtype)
+    return p
+
+
+def moe_forward(
+    p: dict,
+    x: jax.Array,                 # [B, S, D]
+    *,
+    top_k: int,
+    act: str = "silu",
+    capacity_factor: float = 1.25,
+    group_size: int = 1024,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output [B,S,D], aux_loss scalar).
+
+    GROUPED dispatch (GShard/MaxText style): tokens are split into groups of
+    ``group_size``; routing positions + one-hot dispatch tensors are per
+    group, so dispatch memory/flops are O(T·E·C_g) with C_g ∝ group_size/E
+    instead of O(T·E·C) with C ∝ T/E — a global-capacity one-hot would be
+    QUADRATIC in tokens (the 31 TiB/device baseline failure recorded in
+    EXPERIMENTS.md §Perf iteration 1).
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    t = b * s
+    g = min(group_size, t)
+    assert t % g == 0, (t, g)
+    ng = t // g
+    xt = x.reshape(ng, g, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [G, g, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)                    # [G, g, k]
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    capacity = int(np.ceil(g * top_k / e * capacity_factor))
+    capacity = max(capacity, top_k)
+
+    # position of each (token, choice) within its expert via per-group cumsum
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)                # [G, g, k, E]
+    flatoh = onehot.reshape(ng, g * top_k, e)
+    pos_in_expert = (jnp.cumsum(flatoh, axis=1) - flatoh).reshape(ng, g, top_k, e)
+    pos_in_expert = (pos_in_expert * onehot).sum(-1)                     # [G, g, k]
+    keep = pos_in_expert < capacity
+
+    disp = (
+        jax.nn.one_hot(gate_idx, e, dtype=x.dtype)[..., None]
+        * jax.nn.one_hot(pos_in_expert, capacity, dtype=x.dtype)[..., None, :]
+        * keep[..., None, None].astype(x.dtype)
+    ).sum(2)                                                             # [G, g, E, C]
+    comb = (
+        jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)[..., None]
+        * jax.nn.one_hot(pos_in_expert, capacity, dtype=jnp.float32)[..., None, :]
+        * (gate_vals * keep.astype(jnp.float32))[..., None, None]
+    ).sum(2)                                                             # [G, g, E, C]
+
+    xe = jnp.einsum("Ngd,Ngec->Necd", xt, disp)       # all-to-all in (per group)
+    act_fn = activation(act)
+    if "w_gate" in p:
+        h = act_fn(jnp.einsum("Necd,edf->Necf", xe, p["w_gate"])) * jnp.einsum(
+            "Necd,edf->Necf", xe, p["w_in"]
+        )
+    else:
+        h = act_fn(jnp.einsum("Necd,edf->Necf", xe, p["w_in"]))
+    ye = jnp.einsum("Necf,efd->Necd", h, p["w_out"])                     # expert FFN
+    yt = jnp.einsum("Necd,Ngec->Ngd", ye.astype(jnp.float32), comb)      # all-to-all out
+
+    # load-balancing aux loss (Switch): E * Σ_e f_e · P_e
+    dens = onehot.sum(2).astype(jnp.float32).mean((0, 1))
+    aux = e * jnp.sum(dens * probs.mean((0, 1)))
+    return yt.reshape(b, s, d).astype(x.dtype), aux

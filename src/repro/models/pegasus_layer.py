@@ -1,0 +1,96 @@
+"""Pegasus-LM integration: LUT-based approximate linear layers for serving.
+
+This is the paper's technique as a first-class LM feature (DESIGN.md §2):
+selected FFN matmuls of a *trained* model are replaced, at deployment, by
+Partition→fuzzy-index→LUT-gather→SumReduce banks built from the weights +
+a calibration pass. On TPU the banks execute via ``kernels.fuzzy_lut``
+(MXU one-hot form) — matmul FLOPs collapse to comparisons+gathers and the
+weight bytes become (C/v)·D·N LUT bytes (int8-able), which is the decode
+roofline lever measured in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ArchConfig
+from repro.core.amm import PegasusLinear, init_pegasus_linear, pegasus_linear_apply
+from repro.models.layers import activation, rms_norm
+
+__all__ = ["PegasusFFN", "pegasusify_ffn_layer", "pegasus_ffn_apply",
+           "lut_bytes", "dense_ffn_bytes"]
+
+
+@dataclasses.dataclass
+class PegasusFFN:
+    """LUT form of one (gated) FFN: in/gate/out banks."""
+
+    w_in: PegasusLinear
+    w_gate: PegasusLinear | None
+    w_out: PegasusLinear
+    act: str
+
+
+def pegasusify_ffn_layer(
+    cfg: ArchConfig,
+    ffn_params: dict,
+    calib_x: np.ndarray,          # [S, d_model] representative activations
+    *,
+    group_size: int = 4,
+    depth: int = 4,
+    lut_dtype=jnp.bfloat16,
+) -> PegasusFFN:
+    """Lower one layer's FFN weights to Pegasus banks."""
+    act = activation(cfg.act)
+    w_in = np.asarray(ffn_params["w_in"], np.float32)
+    w_gate = ffn_params.get("w_gate")
+    w_out = np.asarray(ffn_params["w_out"], np.float32)
+
+    in_bank = init_pegasus_linear(
+        w_in, None, calib_x, group_size=group_size, depth=depth,
+        lut_bits=None, lut_dtype=lut_dtype)
+    gate_bank = None
+    if w_gate is not None:
+        gate_bank = init_pegasus_linear(
+            np.asarray(w_gate, np.float32), None, calib_x,
+            group_size=group_size, depth=depth, lut_bits=None, lut_dtype=lut_dtype)
+    # calibrate the out bank on the hidden activations
+    xin = jnp.asarray(calib_x) @ w_in
+    if w_gate is not None:
+        h = act(jnp.asarray(calib_x) @ np.asarray(w_gate, np.float32)) * xin
+    else:
+        h = act(xin)
+    out_bank = init_pegasus_linear(
+        w_out, None, np.asarray(h), group_size=group_size, depth=depth,
+        lut_bits=None, lut_dtype=lut_dtype)
+    return PegasusFFN(w_in=in_bank, w_gate=gate_bank, w_out=out_bank, act=cfg.act)
+
+
+def pegasus_ffn_apply(p: PegasusFFN, x: jax.Array, *, path: str = "onehot") -> jax.Array:
+    act = activation(p.act)
+    xin = pegasus_linear_apply(p.w_in, x, path=path)
+    if p.w_gate is not None:
+        h = act(pegasus_linear_apply(p.w_gate, x, path=path)) * xin
+    else:
+        h = act(xin)
+    return pegasus_linear_apply(p.w_out, h, path=path)
+
+
+def lut_bytes(cfg: ArchConfig, *, group_size: int = 8, depth: int = 4,
+              lut_dtype_bytes: int = 1) -> float:
+    """Per-layer FFN LUT bytes: (D/v)·C·F·(…) per bank (the §Perf lever)."""
+    c = 2**depth
+    n_banks = 3 if cfg.is_gated_ffn else 2
+    per_in = cfg.d_model / group_size * c * cfg.d_ff * lut_dtype_bytes
+    per_out = cfg.d_ff / group_size * c * cfg.d_model * lut_dtype_bytes
+    return (n_banks - 1) * per_in + per_out
+
+
+def dense_ffn_bytes(cfg: ArchConfig, dtype_bytes: int = 2) -> float:
+    n_banks = 3 if cfg.is_gated_ffn else 2
+    return n_banks * cfg.d_model * cfg.d_ff * dtype_bytes

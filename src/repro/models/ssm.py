@@ -1,0 +1,259 @@
+"""Recurrent blocks: xLSTM's mLSTM (chunked-parallel) + sLSTM (sequential),
+and a simplified Mamba-style selective-SSM head for Hymba's hybrid layers.
+
+mLSTM uses the chunkwise-parallel form (matrix state S ∈ R^{dk×dv}, scalar
+sigmoid gates per head): within a chunk the decay matrix is materialized and
+everything is batched matmuls (MXU-friendly); across chunks a lax.scan
+carries (S, n). O(T·c) compute, O(1) state — this is what makes the
+``long_500k`` decode cell run for the SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init
+
+__all__ = [
+    "init_mlstm", "mlstm_forward", "mlstm_decode_step",
+    "init_slstm", "slstm_forward",
+    "init_mamba_head", "mamba_forward", "mamba_decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, num_heads: int, head_dim: int, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 7)
+    hd = head_dim
+    return {
+        "wq": dense_init(ks[0], (d_model, num_heads * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, num_heads * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, num_heads * hd), dtype=dtype),
+        "wi": dense_init(ks[3], (d_model, num_heads), dtype=jnp.float32),
+        "wf": dense_init(ks[4], (d_model, num_heads), dtype=jnp.float32),
+        "wo_gate": dense_init(ks[5], (d_model, num_heads * hd), dtype=dtype),
+        "wo": dense_init(ks[6], (num_heads * hd, d_model), dtype=dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, logf, i_gate, carry_S, carry_n):
+    """One chunk. q,k,v: [B,H,c,hd]; logf,i: [B,H,c]; S: [B,H,hd,hd]; n: [B,H,hd]."""
+    c = q.shape[2]
+    l = jnp.cumsum(logf, axis=-1)                       # [B,H,c] cumulative log decay
+    # intra-chunk: A[j,u] = exp(l_j - l_u) * i_u   (u <= j)
+    lj = l[..., :, None]
+    lu = l[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    amat = jnp.where(mask, jnp.exp(lj - lu), 0.0) * i_gate[..., None, :]
+    scores = jnp.einsum("bhjd,bhud->bhju", q.astype(jnp.float32), k.astype(jnp.float32))
+    intra = jnp.einsum("bhju,bhud->bhjd", scores * amat, v.astype(jnp.float32))
+    # inter-chunk: decayed carry
+    decay_j = jnp.exp(l)[..., None]                     # [B,H,c,1]
+    inter = jnp.einsum("bhjd,bhde->bhje", q.astype(jnp.float32), carry_S) * decay_j
+    # normalizer n_j = exp(l_j) n_prev + Σ_{u≤j} exp(l_j−l_u) i_u k_u
+    n_intra = jnp.einsum("bhju,bhud->bhjd", amat, k.astype(jnp.float32))
+    n_j = decay_j * carry_n[..., None, :] + n_intra
+    denom = jnp.abs(jnp.einsum("bhjd,bhjd->bhj", q.astype(jnp.float32), n_j))
+    h = (intra + inter) / jnp.maximum(denom, 1.0)[..., None]
+    # carry update
+    decay_c = jnp.exp(l[..., -1])[..., None, None]      # [B,H,1,1]
+    w_u = jnp.exp(l[..., -1:] - l) * i_gate             # [B,H,c]
+    S_new = decay_c * carry_S + jnp.einsum(
+        "bhud,bhue,bhu->bhde", k.astype(jnp.float32), v.astype(jnp.float32), w_u
+    )
+    n_new = decay_c[..., 0] * carry_n + jnp.einsum(
+        "bhud,bhu->bhd", k.astype(jnp.float32), w_u
+    )
+    return h, S_new, n_new
+
+
+def mlstm_forward(p: dict, x: jax.Array, *, num_heads: int, head_dim: int,
+                  chunk: int = 256) -> jax.Array:
+    """Full-sequence chunked mLSTM. x: [B, S, D] → [B, S, D]."""
+    b, s, d = x.shape
+    hd = head_dim
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+
+    def heads(w):
+        return (x @ w).reshape(b, s, num_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(p["wq"]) / np.sqrt(hd), heads(p["wk"]), heads(p["wv"])
+    logf = jax.nn.log_sigmoid((x.astype(jnp.float32) @ p["wf"])).transpose(0, 2, 1)
+    i_gate = jnp.exp(-jax.nn.softplus(-(x.astype(jnp.float32) @ p["wi"]))).transpose(0, 2, 1)
+
+    nchunks = s // c
+    qc = q.reshape(b, num_heads, nchunks, c, hd).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, num_heads, nchunks, c, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, num_heads, nchunks, c, hd).transpose(2, 0, 1, 3, 4)
+    fc = logf.reshape(b, num_heads, nchunks, c).transpose(2, 0, 1, 3)
+    ic = i_gate.reshape(b, num_heads, nchunks, c).transpose(2, 0, 1, 3)
+
+    S0 = jnp.zeros((b, num_heads, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, num_heads, hd), jnp.float32)
+
+    def step(carry, inp):
+        S, n = carry
+        qj, kj, vj, fj, ij = inp
+        h, S, n = _mlstm_chunk(qj, kj, vj, fj, ij, S, n)
+        return (S, n), h
+
+    (_, _), hs = jax.lax.scan(step, (S0, n0), (qc, kc, vc, fc, ic))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(b, num_heads, s, hd)
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, num_heads * hd)
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    return ((h.astype(x.dtype) * o) @ p["wo"]).astype(x.dtype)
+
+
+def mlstm_decode_step(p: dict, x: jax.Array, S: jax.Array, n: jax.Array,
+                      *, num_heads: int, head_dim: int):
+    """One-token step. x: [B, 1, D]; S: [B,H,hd,hd]; n: [B,H,hd]."""
+    b = x.shape[0]
+    hd = head_dim
+    xt = x[:, 0]
+
+    def head(w):
+        return (xt @ w).reshape(b, num_heads, hd)
+
+    q, k, v = head(p["wq"]) / np.sqrt(hd), head(p["wk"]), head(p["wv"])
+    f = jax.nn.sigmoid(xt.astype(jnp.float32) @ p["wf"])        # [B,H]
+    i = jnp.exp(-jax.nn.softplus(-(xt.astype(jnp.float32) @ p["wi"])))
+    S = f[..., None, None] * S + i[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = f[..., None] * n + i[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), S)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)), 1.0)
+    h = (num / den[..., None]).reshape(b, 1, num_heads * hd)
+    o = jax.nn.sigmoid(x @ p["wo_gate"])
+    return ((h.astype(x.dtype) * o) @ p["wo"]).astype(x.dtype), S, n
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory block with recurrent mixing — strictly sequential)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": dense_init(ks[0], (d_model, d_model), dtype=dtype),
+        "wi": dense_init(ks[1], (d_model, d_model), dtype=jnp.float32),
+        "wf": dense_init(ks[2], (d_model, d_model), dtype=jnp.float32),
+        "wo_gate": dense_init(ks[3], (d_model, d_model), dtype=dtype),
+        "r": dense_init(ks[4], (d_model, d_model), dtype=dtype) * 0.1,
+        "wo": dense_init(ks[5], (d_model, d_model), dtype=dtype),
+    }
+
+
+def slstm_forward(p: dict, x: jax.Array) -> jax.Array:
+    """Sequential sLSTM over time (lax.scan). x: [B, S, D]."""
+    b, s, d = x.shape
+
+    def step(carry, xt):
+        c, n, h = carry
+        pre = h @ p["r"]
+        z = jnp.tanh(xt @ p["wz"] + pre)
+        i = jnp.exp(-jax.nn.softplus(-(xt.astype(jnp.float32) @ p["wi"])))
+        f = jax.nn.sigmoid(xt.astype(jnp.float32) @ p["wf"])
+        c = f * c + i * z.astype(jnp.float32)
+        n = f * n + i
+        o = jax.nn.sigmoid(xt @ p["wo_gate"]).astype(jnp.float32)
+        h_new = (o * c / jnp.maximum(n, 1.0)).astype(x.dtype)
+        return (c, n, h_new), h_new
+
+    zeros = jnp.zeros((b, d), jnp.float32)
+    h0 = jnp.zeros((b, d), x.dtype)
+    (_, _, _), hs = jax.lax.scan(step, (zeros, zeros, h0), x.transpose(1, 0, 2))
+    return (hs.transpose(1, 0, 2) @ p["wo"]).astype(x.dtype)
+
+
+def slstm_decode_step(p: dict, x: jax.Array, c, n, h):
+    """One-token sLSTM step; returns (out [B,1,D], c, n, h)."""
+    xt = x[:, 0]
+    pre = h @ p["r"]
+    z = jnp.tanh(xt @ p["wz"] + pre)
+    i = jnp.exp(-jax.nn.softplus(-(xt.astype(jnp.float32) @ p["wi"])))
+    f = jax.nn.sigmoid(xt.astype(jnp.float32) @ p["wf"])
+    c = f * c + i * z.astype(jnp.float32)
+    n = f * n + i
+    o = jax.nn.sigmoid(xt @ p["wo_gate"]).astype(jnp.float32)
+    h_new = (o * c / jnp.maximum(n, 1.0)).astype(x.dtype)
+    return (h_new @ p["wo"]).astype(x.dtype)[:, None], c, n, h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective-SSM head (for Hymba parallel heads)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_head(key, d_model: int, d_inner: int, state: int, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d_model, d_inner), dtype=dtype),
+        "w_dt": dense_init(ks[1], (d_inner, 1), dtype=jnp.float32),
+        "w_B": dense_init(ks[2], (d_inner, state), dtype=jnp.float32),
+        "w_C": dense_init(ks[3], (d_inner, state), dtype=jnp.float32),
+        "a_log": jnp.zeros((d_inner, state), jnp.float32),  # A = -exp(a_log)
+        "w_out": dense_init(ks[4], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def mamba_forward(p: dict, x: jax.Array, chunk: int = 256) -> jax.Array:
+    """Chunk-scanned selective SSM. x: [B, S, D] → [B, S, D].
+
+    Simplified S6: per-channel diagonal state (size N), input-dependent
+    (dt, B, C); recurrence h = exp(A·dt)·h + dt·B·u computed with a
+    sequential scan over CHUNKS and a parallel intra-chunk unroll.
+    """
+    b, s, d = x.shape
+    u = x @ p["w_in"]                                   # [B, S, di]
+    di = u.shape[-1]
+    dt = jax.nn.softplus(u.astype(jnp.float32) @ p["w_dt"])        # [B,S,1]
+    bmat = u.astype(jnp.float32) @ p["w_B"]             # [B,S,N]
+    cmat = u.astype(jnp.float32) @ p["w_C"]             # [B,S,N]
+    a = -jnp.exp(p["a_log"])                            # [di, N]
+
+    # scan over time in fp32 (chunked to bound while-loop trip count)
+    c = min(chunk, s)
+    nchunks = s // c
+
+    def chunk_step(h, inp):
+        uc, dtc, bc, cc = inp                           # [c,B,...]
+        def tstep(h, t_in):
+            ut, dtt, bt, ct = t_in                      # [B,di],[B,1],[B,N],[B,N]
+            da = jnp.exp(dtt[..., None] * a[None])      # [B,di,N]
+            h = da * h + (dtt * ut.astype(jnp.float32))[..., None] * bt[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, ct)
+            return h, y
+        h, ys = jax.lax.scan(tstep, h, (uc, dtc, bc, cc))
+        return h, ys
+
+    u_t = u.transpose(1, 0, 2).reshape(nchunks, c, b, di)
+    dt_t = dt.transpose(1, 0, 2).reshape(nchunks, c, b, 1)
+    b_t = bmat.transpose(1, 0, 2).reshape(nchunks, c, b, -1)
+    c_t = cmat.transpose(1, 0, 2).reshape(nchunks, c, b, -1)
+    h0 = jnp.zeros((b, di, a.shape[1]), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (u_t, dt_t, b_t, c_t))
+    y = ys.reshape(s, b, di).transpose(1, 0, 2)
+    return (y.astype(x.dtype) * jax.nn.silu(u)) @ p["w_out"]
+
+
+def mamba_decode_step(p: dict, x: jax.Array, h: jax.Array):
+    """One-token step. x: [B,1,D]; h: [B, di, N]."""
+    xt = x[:, 0]
+    u = xt @ p["w_in"]
+    dt = jax.nn.softplus(u.astype(jnp.float32) @ p["w_dt"])
+    bmat = u.astype(jnp.float32) @ p["w_B"]
+    cmat = u.astype(jnp.float32) @ p["w_C"]
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a[None])
+    h = da * h + (dt * u.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, cmat)
+    out = (y.astype(x.dtype) * jax.nn.silu(u)) @ p["w_out"]
+    return out[:, None], h

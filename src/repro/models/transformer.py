@@ -1,0 +1,403 @@
+"""The LM stack: one composable decoder/enc-dec covering all 10 assigned
+architectures (dense / MoE / SSM / hybrid / enc-dec / VLM-backbone).
+
+Structure notes (these drive compile time and the dry-run):
+  * Layer parameters are STACKED over depth ([L, ...] leading axis) and the
+    stack runs under ``jax.lax.scan`` — HLO size is constant in depth.
+  * Each scan body is ``jax.checkpoint``-wrapped (remat policy configurable).
+  * Decode runs one token against preallocated caches/states, also scanned.
+  * Families plug different ``layer_fn``s into the same scan harness.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ArchConfig
+from .attention import attn_decode, attn_forward, init_attn
+from .layers import activation, dense_init, rms_norm
+from .moe import init_moe, moe_forward
+from .ssm import (
+    init_mamba_head, init_mlstm, init_slstm,
+    mamba_decode_step, mamba_forward,
+    mlstm_decode_step, mlstm_forward,
+    slstm_forward, slstm_decode_step,
+)
+
+__all__ = ["init_model", "forward_train", "init_decode_state", "decode_step",
+           "padded_vocab", "lm_loss", "LAYER_SEQ_SHARD"]
+
+# §Perf knob (decode): shard the residual stream's FEATURE dim over 'data'
+# during decode — with weights 2D-sharded [D/data, F/model], every matmul
+# contracts locally and all-reduces only the [B,1,F/16] output, replacing
+# the per-step 42.5 GB/device weight all-gather (ZeRO-gather is the wrong
+# schedule for decode; weight-stationary 2D TP is the right one).
+DECODE_FEATURE_SHARD = False
+
+
+def _maybe_feat_shard(x):
+    if not DECODE_FEATURE_SHARD:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(None, None, "data"))
+    except (ValueError, RuntimeError):
+        return x
+
+
+# §Perf knob: keep activations SEQUENCE-sharded on the 'model' axis at layer
+# boundaries (Megatron-SP style). Without it, seq-parallel attention reshards
+# [B,S,D] activations between attention (seq-sharded) and FFN (TP) layouts —
+# an all-gather of the full residual stream per layer.
+LAYER_SEQ_SHARD = False
+
+
+def _maybe_seq_shard(x):
+    if not LAYER_SEQ_SHARD or x.ndim != 3 or x.shape[1] < 1024:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(x, P(None, "model", None))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    """Vocab rounded to a multiple of 256 so it shards on any mesh axis."""
+    return int(np.ceil(cfg.vocab_size / 256)) * 256
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_ffn(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    gated = cfg.is_gated_ffn
+    p = {
+        "w_in": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype=dtype),
+        "w_out": dense_init(ks[1], (cfg.d_ff, cfg.d_model), dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (cfg.d_model, cfg.d_ff), dtype=dtype)
+    return p
+
+
+def _init_layer(key, cfg: ArchConfig, dtype, *, cross: bool = False) -> dict:
+    """One decoder layer's params (family-dependent)."""
+    ks = jax.random.split(key, 6)
+    hd = cfg.resolved_head_dim
+    p: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.family == "ssm":
+        # xLSTM super-layer: mLSTM + sLSTM
+        p["mlstm"] = init_mlstm(ks[0], cfg.d_model, cfg.num_heads, hd, dtype)
+        p["ln_s"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["slstm"] = init_slstm(ks[1], cfg.d_model, dtype)
+        return p
+    p["attn"] = init_attn(ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, hd,
+                          qkv_bias=cfg.qkv_bias, dtype=dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = init_mamba_head(ks[1], cfg.d_model, 2 * cfg.d_model,
+                                     cfg.ssm_state, dtype)
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["xattn"] = init_attn(ks[2], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                               hd, dtype=dtype)
+    p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[3], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                            gated=cfg.is_gated_ffn, dtype=dtype)
+    elif cfg.d_ff:
+        p["ffn"] = _init_ffn(ks[3], cfg, dtype)
+    return p
+
+
+def init_model(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    """Full parameter pytree; per-layer params stacked over depth."""
+    ks = jax.random.split(key, 6)
+    v = padded_vocab(cfg)
+    params: dict[str, Any] = {
+        "embed": dense_init(ks[0], (v, cfg.d_model), dtype=dtype),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, v), dtype=dtype)
+
+    layer_keys = jax.random.split(ks[2], cfg.num_layers)
+    cross = cfg.encoder_layers > 0
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(k, cfg, dtype, cross=cross)
+    )(layer_keys)
+
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(ks[3], cfg.encoder_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, dtype, cross=False)
+        )(enc_keys)
+        params["enc_ln_f"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer forwards (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _layer_forward(cfg: ArchConfig, p, x, positions, *, causal, enc_out=None):
+    """One layer, full sequence. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        x = x + mlstm_forward(p["mlstm"], rms_norm(x, p["ln1"]),
+                              num_heads=cfg.num_heads, head_dim=hd)
+        x = x + slstm_forward(p["slstm"], rms_norm(x, p["ln_s"]))
+        return x, aux
+
+    h = rms_norm(x, p["ln1"])
+    attn_out = attn_forward(
+        p["attn"], h, positions,
+        num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads, head_dim=hd,
+        causal=causal, window=cfg.window or None, rope_kind=cfg.rope_kind,
+    )
+    if cfg.family == "hybrid":
+        attn_out = attn_out + mamba_forward(p["mamba"], h)
+    x = x + attn_out
+
+    if enc_out is not None:
+        hx = rms_norm(x, p["ln_x"])
+        x = x + _cross_attn(cfg, p["xattn"], hx, enc_out)
+
+    h2 = rms_norm(x, p["ln2"])
+    if cfg.family == "moe":
+        ffn_out, aux = moe_forward(p["moe"], h2, top_k=cfg.top_k, act=cfg.act)
+    elif cfg.d_ff:
+        ffn_out = _ffn(cfg, p["ffn"], h2)
+    else:
+        return x, aux
+    return x + ffn_out, aux
+
+
+def _ffn(cfg: ArchConfig, p, x):
+    act = activation(cfg.act)
+    if "w_gate" in p:
+        h = act(x @ p["w_gate"]) * (x @ p["w_in"])
+    else:
+        h = act(x @ p["w_in"])
+    return h @ p["w_out"]
+
+
+def _cross_attn(cfg: ArchConfig, p, q_in, enc_out):
+    """Whisper-style cross attention (no rope, keys from encoder output)."""
+    b, s, d = q_in.shape
+    hd = cfg.resolved_head_dim
+    t = enc_out.shape[1]
+    q = (q_in @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (enc_out @ p["wk"]).reshape(b, t, cfg.num_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(b, t, cfg.num_kv_heads, hd)
+    from .attention import _sdpa
+
+    out = _sdpa(q, k, v, None, num_kv_groups=cfg.num_heads // cfg.num_kv_heads)
+    return out.reshape(b, s, cfg.num_heads * hd) @ p["wo"]
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# full-model forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _scan_layers(cfg, stacked, x, positions, *, causal, enc_out=None,
+                 remat_policy: str = "nothing"):
+    def body(carry, p_layer):
+        h, aux = carry
+        h, a = _layer_forward(cfg, p_layer, h, positions, causal=causal,
+                              enc_out=enc_out)
+        h = _maybe_seq_shard(h)
+        return (h, aux + a), None
+
+    if remat_policy == "nothing":
+        policy = jax.checkpoint_policies.nothing_saveable
+    elif remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = None
+    body_ck = jax.checkpoint(body, policy=policy) if policy else body
+    (x, aux), _ = jax.lax.scan(body_ck, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def forward_train(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    *,
+    remat_policy: str = "nothing",
+    last_only: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits [B,S,V], moe_aux). ``batch`` carries ``tokens`` or
+    (stub frontends) ``embeds``; enc-dec additionally ``dec_tokens``."""
+    if cfg.encoder_layers:
+        # whisper: encoder over frame embeddings, decoder over text tokens
+        enc_x = batch["embeds"].astype(params["embed"].dtype)
+        s_enc = enc_x.shape[1]
+        enc_x = enc_x + _sinusoid(jnp.arange(s_enc), cfg.d_model).astype(enc_x.dtype)
+        enc_x, _ = _scan_layers(cfg, params["enc_layers"], enc_x,
+                                jnp.arange(s_enc), causal=False,
+                                remat_policy=remat_policy)
+        enc_out = rms_norm(enc_x, params["enc_ln_f"])
+
+        dec_tokens = batch["dec_tokens"]
+        s_dec = dec_tokens.shape[1]
+        x = params["embed"][dec_tokens] + _sinusoid(
+            jnp.arange(s_dec), cfg.d_model
+        ).astype(params["embed"].dtype)
+        x, aux = _scan_layers(cfg, params["layers"], x, jnp.arange(s_dec),
+                              causal=True, enc_out=enc_out,
+                              remat_policy=remat_policy)
+    else:
+        if "embeds" in batch:           # vlm stub frontend
+            x = batch["embeds"].astype(params["embed"].dtype)
+        else:
+            x = params["embed"][batch["tokens"]]
+        s = x.shape[1]
+        x, aux = _scan_layers(cfg, params["layers"], x, jnp.arange(s),
+                              causal=True, remat_policy=remat_policy)
+
+    if last_only:
+        x = x[:, -1:]          # prefill serving: only the last position's
+                               # logits are consumed — slicing BEFORE the LM
+                               # head kills the [B,S,V] matmul + its gather
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux
+
+
+def lm_loss(cfg: ArchConfig, params: dict, batch: dict, *,
+            remat_policy: str = "nothing", z_loss: float = 1e-4,
+            aux_weight: float = 1e-2) -> jax.Array:
+    logits, aux = forward_train(cfg, params, batch, remat_policy=remat_policy)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    logp = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0] - logz
+    loss = -logp.mean() + z_loss * jnp.square(logz).mean() + aux_weight * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against caches/states)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, kv_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Preallocated per-layer caches/states, stacked over depth."""
+    l = cfg.num_layers
+    hd = cfg.resolved_head_dim
+    kv = cfg.num_kv_heads
+    st: dict[str, Any] = {}
+    if cfg.family == "ssm":
+        st["mlstm_S"] = jnp.zeros((l, batch, cfg.num_heads, hd, hd), jnp.float32)
+        st["mlstm_n"] = jnp.zeros((l, batch, cfg.num_heads, hd), jnp.float32)
+        st["slstm_c"] = jnp.zeros((l, batch, cfg.d_model), jnp.float32)
+        st["slstm_n"] = jnp.zeros((l, batch, cfg.d_model), jnp.float32)
+        st["slstm_h"] = jnp.zeros((l, batch, cfg.d_model), dtype)
+        return st
+    cache_len = min(kv_len, cfg.window) if cfg.window else kv_len
+    if cfg.encoder_layers:
+        cache_len = min(kv_len, cfg.max_decoder_len)
+    st["cache_k"] = jnp.zeros((l, batch, cache_len, kv, hd), dtype)
+    st["cache_v"] = jnp.zeros((l, batch, cache_len, kv, hd), dtype)
+    if cfg.family == "hybrid":
+        st["mamba_h"] = jnp.zeros((l, batch, 2 * cfg.d_model, cfg.ssm_state), jnp.float32)
+    return st
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    state: dict,
+    tokens: jax.Array,              # [B, 1] int32
+    pos: jax.Array,                 # scalar int32 — absolute position
+    *,
+    enc_out: jax.Array | None = None,   # enc-dec: encoder output [B,T,D]
+) -> tuple[jax.Array, dict]:
+    """One decode step. Returns (logits [B, V], new_state)."""
+    hd = cfg.resolved_head_dim
+    x = params["embed"][tokens]     # [B, 1, D]
+    if cfg.encoder_layers:
+        x = x + _sinusoid(pos[None] if pos.ndim == 0 else pos, cfg.d_model).astype(x.dtype)[None]
+
+    if cfg.family == "ssm":
+        def body(h, inp):
+            p, S, n, c, ns, hs = inp
+            out, S, n = mlstm_decode_step(p["mlstm"], rms_norm(h, p["ln1"]), S, n,
+                                          num_heads=cfg.num_heads, head_dim=hd)
+            h = h + out
+            out, c, ns, hs = slstm_decode_step(p["slstm"], rms_norm(h, p["ln_s"]), c, ns, hs)
+            h = h + out
+            return h, (S, n, c, ns, hs)
+
+        x, (S, n, c, ns, hs) = jax.lax.scan(
+            body, x,
+            (params["layers"], state["mlstm_S"], state["mlstm_n"],
+             state["slstm_c"], state["slstm_n"], state["slstm_h"]),
+        )
+        new_state = dict(mlstm_S=S, mlstm_n=n, slstm_c=c, slstm_n=ns, slstm_h=hs)
+    else:
+        cache_len = state["cache_k"].shape[2]
+        write_pos = jnp.mod(pos, cache_len) if (cfg.window or cfg.encoder_layers) else pos
+
+        def body(h, inp):
+            p = inp[0]
+            ck, cv = inp[1], inp[2]
+            h = _maybe_feat_shard(h)
+            hn = rms_norm(h, p["ln1"])
+            out, ck, cv = attn_decode(
+                p["attn"], hn, ck, cv, write_pos,
+                num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads, head_dim=hd,
+                window=None,  # ring buffer already bounds the window
+                rope_kind=cfg.rope_kind,
+            )
+            extra = ()
+            if cfg.family == "hybrid":
+                mo, mh = mamba_decode_step(p["mamba"], hn, inp[3])
+                out = out + mo
+                extra = (mh,)
+            h = h + out
+            if enc_out is not None:
+                h = h + _cross_attn(cfg, p["xattn"], rms_norm(h, p["ln_x"]), enc_out)
+            h2 = rms_norm(h, p["ln2"])
+            if cfg.family == "moe":
+                f, _ = moe_forward(p["moe"], h2, top_k=cfg.top_k, act=cfg.act)
+                h = h + f
+            elif cfg.d_ff:
+                h = h + _ffn(cfg, p["ffn"], h2)
+            return h, (ck, cv) + extra
+
+        ins = (params["layers"], state["cache_k"], state["cache_v"])
+        if cfg.family == "hybrid":
+            ins = ins + (state["mamba_h"],)
+        x, outs = jax.lax.scan(body, x, ins)
+        new_state = dict(cache_k=outs[0], cache_v=outs[1])
+        if cfg.family == "hybrid":
+            new_state["mamba_h"] = outs[2]
+
+    x = rms_norm(x, params["ln_f"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x[:, 0] @ head).astype(jnp.float32), new_state

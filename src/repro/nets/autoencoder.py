@@ -1,0 +1,134 @@
+"""AutoEncoder (paper §6.3, §7.4): unsupervised anomaly detection on the
+dataplane via MAE reconstruction error over (len, IPD) sequences.
+
+Dense teacher: Emb-style input projection → FC encoder → FC decoder,
+trained on BENIGN traffic only. Deployment form: every FC becomes a fused
+Pegasus bank (Advanced Fusion applies — the paper lists AutoEncoder among
+the models using it); the MAE and threshold compare are dataplane ALU ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amm import PegasusLinear, apply_gather, init_pegasus_linear
+from repro.train.optimizer import adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["AutoEncoder", "train_autoencoder", "ae_apply", "reconstruction_error",
+           "pegasusify_ae", "pegasus_ae_error", "auc_score"]
+
+LATENT = 3
+HIDDEN = 12
+
+
+@dataclasses.dataclass
+class AutoEncoder:
+    params: dict
+    in_dim: int
+
+
+def init_ae(in_dim: int, seed: int = 0) -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "w_e1": jax.random.normal(ks[0], (in_dim, HIDDEN)) / np.sqrt(in_dim),
+        "b_e1": jnp.zeros(HIDDEN),
+        "w_e2": jax.random.normal(ks[1], (HIDDEN, LATENT)) / np.sqrt(HIDDEN),
+        "b_e2": jnp.zeros(LATENT),
+        "w_d1": jax.random.normal(ks[2], (LATENT, HIDDEN)) / np.sqrt(LATENT),
+        "b_d1": jnp.zeros(HIDDEN),
+        "w_d2": jax.random.normal(ks[3], (HIDDEN, in_dim)) / np.sqrt(HIDDEN),
+        "b_d2": jnp.zeros(in_dim),
+    }
+
+
+def ae_apply(p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32) / 255.0
+    h = jax.nn.relu(xf @ p["w_e1"] + p["b_e1"])
+    z = jax.nn.relu(h @ p["w_e2"] + p["b_e2"])
+    h = jax.nn.relu(z @ p["w_d1"] + p["b_d1"])
+    return h @ p["w_d2"] + p["b_d2"]            # reconstruction in [0,1] units
+
+
+def reconstruction_error(p: dict, x: jax.Array) -> jax.Array:
+    """MAE per flow (the paper's anomaly score)."""
+    recon = ae_apply(p, x)
+    return jnp.abs(recon - x.astype(jnp.float32) / 255.0).mean(axis=-1)
+
+
+def train_autoencoder(x_benign: np.ndarray, *, steps: int = 1200, seed: int = 0) -> AutoEncoder:
+    in_dim = x_benign.shape[1]
+    params = init_ae(in_dim, seed)
+    x = jnp.asarray(x_benign)
+    sched = cosine_schedule(3e-3, warmup_steps=30, total_steps=steps)
+    state = adamw_init(params)
+
+    @jax.jit
+    def step_fn(params, state, xb):
+        def loss(p):
+            return jnp.abs(ae_apply(p, xb) - xb.astype(jnp.float32) / 255.0).mean()
+
+        l, g = jax.value_and_grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, lr=sched(state.step), weight_decay=1e-4)
+        return params, state, l
+
+    key = jax.random.PRNGKey(seed)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        ix = jax.random.randint(sub, (256,), 0, x.shape[0])
+        params, state, _ = step_fn(params, state, x[ix])
+    return AutoEncoder(params=params, in_dim=in_dim)
+
+
+# ---------------------------------------------------------------------------
+# Pegasus deployment form
+# ---------------------------------------------------------------------------
+
+
+def pegasusify_ae(ae: AutoEncoder, x_calib: np.ndarray, *, depth: int = 8) -> list[PegasusLinear]:
+    """Four fused banks (1-D groups: per-unit 2^8-entry tables, ReLU folded)."""
+    p = ae.params
+    xf = x_calib.astype(np.float32)
+    acts = [xf]
+    h = jnp.asarray(xf) / 255.0
+    for w, b in [("w_e1", "b_e1"), ("w_e2", "b_e2"), ("w_d1", "b_d1")]:
+        h = h @ p[w] + p[b]
+        acts.append(np.asarray(h))
+        h = jax.nn.relu(h)
+    banks = [
+        init_pegasus_linear(
+            np.asarray(p["w_e1"], np.float32) / 255.0, np.asarray(p["b_e1"], np.float32),
+            acts[0], group_size=1, depth=depth, lut_bits=None,
+        )
+    ]
+    for i, (w, b) in enumerate([("w_e2", "b_e2"), ("w_d1", "b_d1"), ("w_d2", "b_d2")]):
+        banks.append(
+            init_pegasus_linear(
+                np.asarray(p[w], np.float32), np.asarray(p[b], np.float32),
+                acts[i + 1], group_size=1, depth=depth, lut_bits=None,
+                act_fn=lambda c: jnp.maximum(c, 0.0),
+            )
+        )
+    return banks
+
+
+def pegasus_ae_error(banks: list[PegasusLinear], x: jax.Array) -> jax.Array:
+    h = x.astype(jnp.float32)
+    for bank in banks:
+        h = apply_gather(bank, h)
+    return jnp.abs(h - x.astype(jnp.float32) / 255.0).mean(axis=-1)
+
+
+def auc_score(scores: np.ndarray, labels: np.ndarray) -> float:
+    """AUROC via the rank statistic (no sklearn)."""
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    pos = labels == 1
+    n_pos, n_neg = int(pos.sum()), int((~pos).sum())
+    if n_pos == 0 or n_neg == 0:
+        return float("nan")
+    return float((ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg))

@@ -1,0 +1,84 @@
+"""BoS baseline (paper §2): binary RNN via input→output bypass tables.
+
+BoS stores the full mapping from (binary hidden state, binary step input) to
+the next binary hidden state in dataplane tables — full-precision INSIDE the
+recurrence, but activations binarized at every table boundary, and the input
+restricted to a few bits per step (paper: 18-bit total input scale; 2^n
+entries for an n-bit key is the scalability wall).
+
+We train the binarized-activation RNN with STE and evaluate its exact binary
+forward — which is bit-identical to what the enumerated bypass tables would
+produce, since the tables simply memoize this function. ``bos_table_entries``
+reports the enumeration cost that limits BoS's input scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import train_classifier
+from .n3ic import binarize
+
+__all__ = ["BoS", "train_bos", "bos_apply", "bos_table_entries"]
+
+HIDDEN_BITS = 8        # binary hidden state width (paper's moderate config)
+LEN_BITS = 2           # packet-length bucket bits per step
+IPD_BITS = 1           # IPD bucket bits per step
+WINDOW = 6             # 6 × 3 = 18-bit input scale, as in the paper
+
+
+@dataclasses.dataclass
+class BoS:
+    params: dict
+    num_classes: int
+
+
+def _bucketize(x: jax.Array) -> jax.Array:
+    """[B, W, 2] bytes → [B, WINDOW, LEN_BITS+IPD_BITS] ±1 bits."""
+    xw = x[:, :WINDOW].astype(jnp.float32)
+    len_q = jnp.floor(xw[..., 0] / 64.0)                  # 2 bits: 4 buckets
+    ipd_q = jnp.floor(xw[..., 1] / 128.0)                 # 1 bit: 2 buckets
+    bits = []
+    for b in range(LEN_BITS):
+        bits.append(jnp.mod(jnp.floor(len_q / 2**b), 2))
+    for b in range(IPD_BITS):
+        bits.append(jnp.mod(jnp.floor(ipd_q / 2**b), 2))
+    return 2.0 * jnp.stack(bits, axis=-1) - 1.0
+
+
+def init_bos(num_classes: int, seed: int = 0) -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    in_bits = LEN_BITS + IPD_BITS
+    return {
+        "w_x": jax.random.normal(ks[0], (in_bits, HIDDEN_BITS)) / np.sqrt(in_bits),
+        "w_h": jax.random.normal(ks[1], (HIDDEN_BITS, HIDDEN_BITS)) / np.sqrt(HIDDEN_BITS),
+        "b": jnp.zeros(HIDDEN_BITS),
+        "w_o": jax.random.normal(ks[2], (HIDDEN_BITS, num_classes)) / np.sqrt(HIDDEN_BITS),
+    }
+
+
+def bos_apply(p_or_bundle, x: jax.Array) -> jax.Array:
+    """Binary-state recurrence: h is ±1 bits at every step (table boundary)."""
+    p = p_or_bundle.params if isinstance(p_or_bundle, BoS) else p_or_bundle
+    xb = _bucketize(x)                                    # [B, W, 3] ±1
+    h = jnp.ones((x.shape[0], HIDDEN_BITS))
+    for t in range(WINDOW):
+        # full precision inside; binarized at the output boundary
+        h = binarize(xb[:, t] @ p["w_x"] + h @ p["w_h"] + p["b"])
+    return h @ p["w_o"]
+
+
+def train_bos(x: np.ndarray, y: np.ndarray, num_classes: int, *, steps=900, seed=0) -> BoS:
+    params = init_bos(num_classes, seed)
+    params = train_classifier(params, bos_apply, x, y, steps=steps, lr=5e-3,
+                              weight_decay=0.0, seed=seed)
+    return BoS(params=params, num_classes=num_classes)
+
+
+def bos_table_entries() -> int:
+    """Bypass-table enumeration: 2^(hidden+input) entries per step table."""
+    return 2 ** (HIDDEN_BITS + LEN_BITS + IPD_BITS)

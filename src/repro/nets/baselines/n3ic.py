@@ -1,0 +1,88 @@
+"""N3IC baseline (paper §2): fully binarized MLP — XNOR + popcount MatMul.
+
+Binary network semantics: weights and activations in {-1, +1}; a dot product
+of ±1 vectors of length n equals ``2·popcount(XNOR(a, b)) − n`` — the
+dataplane-executable form N3IC uses. We train with straight-through
+estimators and evaluate with the exact binary forward, so the reported
+accuracy is what the switch deployment would produce.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import train_classifier
+
+__all__ = ["N3IC", "train_n3ic", "n3ic_apply", "n3ic_model_bits"]
+
+HIDDEN = 64  # binary nets need width to compensate — paper's N3IC is 24.4Kb
+
+
+@dataclasses.dataclass
+class N3IC:
+    params: dict
+    num_classes: int
+    mu: np.ndarray
+    sigma: np.ndarray
+
+
+@jax.custom_vjp
+def binarize(x):
+    return jnp.sign(x) + (x == 0)  # sign with 0 → +1
+
+
+def _bin_fwd(x):
+    return binarize(x), x
+
+
+def _bin_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0),)  # clipped STE
+
+
+binarize.defvjp(_bin_fwd, _bin_bwd)
+
+
+def init_n3ic(in_dim: int, num_classes: int, seed: int = 0) -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {
+        "w0": jax.random.normal(ks[0], (in_dim, HIDDEN)) / np.sqrt(in_dim),
+        "w1": jax.random.normal(ks[1], (HIDDEN, HIDDEN)) / np.sqrt(HIDDEN),
+        "w2": jax.random.normal(ks[2], (HIDDEN, num_classes)) / np.sqrt(HIDDEN),
+    }
+
+
+def n3ic_apply(bundle_or_params, x: jax.Array, mu=None, sigma=None) -> jax.Array:
+    """Binary forward: popcount-equivalent ±1 matmuls, binary activations.
+
+    Input binarization: each feature is thresholded at its training mean
+    (N3IC's input bit-vector construction). No BN/Act layers — N3IC does not
+    support them (the paper's generality critique).
+    """
+    if isinstance(bundle_or_params, N3IC):
+        p, mu, sigma = bundle_or_params.params, bundle_or_params.mu, bundle_or_params.sigma
+    else:
+        p = bundle_or_params
+    xb = binarize((x.astype(jnp.float32) - mu) / sigma)
+    h = binarize(xb @ binarize(p["w0"]))
+    h = binarize(h @ binarize(p["w1"]))
+    return h @ binarize(p["w2"])  # integer popcount scores as logits
+
+
+def train_n3ic(x: np.ndarray, y: np.ndarray, num_classes: int, *, steps=900, seed=0) -> N3IC:
+    mu = x.astype(np.float32).mean(0)
+    sigma = x.astype(np.float32).std(0) + 1e-3
+    params = init_n3ic(x.shape[1], num_classes, seed)
+    params = train_classifier(
+        params, lambda p, xb: n3ic_apply(p, xb, mu, sigma), x, y,
+        steps=steps, lr=5e-3, weight_decay=0.0, seed=seed,
+    )
+    return N3IC(params=params, num_classes=num_classes, mu=mu, sigma=sigma)
+
+
+def n3ic_model_bits(m: N3IC) -> int:
+    """1 bit per weight (the binary model the switch stores)."""
+    return sum(int(np.prod(w.shape)) for w in m.params.values())

@@ -1,0 +1,86 @@
+"""Shared training/eval utilities for the paper's six models + baselines."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import adamw_init, adamw_update, cosine_schedule
+
+__all__ = ["train_classifier", "macro_f1", "precision_recall", "xent"]
+
+
+def xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def macro_f1(pred: np.ndarray, true: np.ndarray, n_classes: int) -> float:
+    """Paper's metric: average F1 across classes (macro-accuracy)."""
+    f1s = []
+    for c in range(n_classes):
+        tp = float(((pred == c) & (true == c)).sum())
+        fp = float(((pred == c) & (true != c)).sum())
+        fn = float(((pred != c) & (true == c)).sum())
+        pr = tp / (tp + fp) if tp + fp else 0.0
+        rc = tp / (tp + fn) if tp + fn else 0.0
+        f1s.append(2 * pr * rc / (pr + rc) if pr + rc else 0.0)
+    return float(np.mean(f1s))
+
+
+def precision_recall(pred: np.ndarray, true: np.ndarray, n_classes: int) -> tuple[float, float]:
+    prs, rcs = [], []
+    for c in range(n_classes):
+        tp = float(((pred == c) & (true == c)).sum())
+        fp = float(((pred == c) & (true != c)).sum())
+        fn = float(((pred != c) & (true == c)).sum())
+        prs.append(tp / (tp + fp) if tp + fp else 0.0)
+        rcs.append(tp / (tp + fn) if tp + fn else 0.0)
+    return float(np.mean(prs)), float(np.mean(rcs))
+
+
+def train_classifier(
+    params: Any,
+    apply_fn: Callable[[Any, jax.Array], jax.Array],
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    *,
+    steps: int = 600,
+    batch_size: int = 256,
+    lr: float = 3e-3,
+    weight_decay: float = 1e-4,
+    seed: int = 0,
+    loss_fn: Callable | None = None,
+) -> Any:
+    """Minimal AdamW training loop (CPU-friendly sizes)."""
+    x_train = jnp.asarray(x_train)
+    y_train = jnp.asarray(y_train)
+    n = x_train.shape[0]
+    sched = cosine_schedule(lr, warmup_steps=max(steps // 20, 1), total_steps=steps)
+    state = adamw_init(params)
+    lfn = loss_fn or (lambda p, xb, yb: xent(apply_fn(p, xb), yb))
+
+    @jax.jit
+    def step_fn(params, state, xb, yb):
+        loss, grads = jax.value_and_grad(lfn)(params, xb, yb)
+        params, state, _ = adamw_update(
+            params, grads, state, lr=sched(state.step), weight_decay=weight_decay
+        )
+        return params, state, loss
+
+    key = jax.random.PRNGKey(seed)
+    for _ in range(steps):
+        key, sub = jax.random.split(key)
+        ix = jax.random.randint(sub, (min(batch_size, n),), 0, n)
+        params, state, _ = step_fn(params, state, x_train[ix], y_train[ix])
+    return params
+
+
+def evaluate(apply_fn, params, x, y, n_classes: int) -> dict:
+    logits = np.asarray(apply_fn(params, jnp.asarray(x)))
+    pred = logits.argmax(-1)
+    pr, rc = precision_recall(pred, np.asarray(y), n_classes)
+    return dict(f1=macro_f1(pred, np.asarray(y), n_classes), pr=pr, rc=rc)

@@ -1,0 +1,157 @@
+"""RNN-B (paper §6.3): windowed recurrent classifier over (len, IPD) steps.
+
+Follows BoS's *windowed* design: the switch unrolls all W time steps in the
+pipeline (no hidden-state write-back); Pegasus upgrades it from binary to
+fixed-point with fuzzy-matched tables.
+
+Dense teacher:  h_t = tanh(Emb(x_t) + h_{t-1} @ W_h + b),  logits = h_W @ W_o.
+Pegasus form, per step: one table bank indexed on the RAW 2-byte step input
+(exactly the Emb∘proj fusion — Embedding Lookup IS a Map) plus one bank
+indexed on h_{t-1}; their SumReduce feeds tanh, which folds into the NEXT
+step's tables (Basic Fusion). Final classifier bank folds tanh → W_o.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amm import PegasusLinear, apply_gather, init_pegasus_linear
+
+from .common import train_classifier
+
+__all__ = ["RNNB", "train_rnn", "rnn_apply", "pegasusify_rnn", "pegasus_rnn_apply"]
+
+HIDDEN = 24
+
+
+@dataclasses.dataclass
+class RNNB:
+    params: dict
+    num_classes: int
+    window: int
+
+
+def init_rnn(num_classes: int, hidden: int = HIDDEN, seed: int = 0) -> dict:
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        # Emb-as-projection of the 2 raw byte features (len, ipd)
+        "w_x": jax.random.normal(ks[0], (2, hidden)) / np.sqrt(2.0),
+        "w_h": jax.random.normal(ks[1], (hidden, hidden)) / np.sqrt(hidden),
+        "b": jnp.zeros(hidden),
+        "w_o": jax.random.normal(ks[2], (hidden, num_classes)) / np.sqrt(hidden),
+        "b_o": jnp.zeros(num_classes),
+    }
+
+
+def rnn_apply(p: dict, x: jax.Array) -> jax.Array:
+    """x: [B, W, 2] uint8 → logits. Normalizes bytes to [0,1] internally."""
+    xf = x.astype(jnp.float32) / 255.0
+    b, w, _ = xf.shape
+    h = jnp.zeros((b, HIDDEN))
+    for t in range(w):
+        h = jnp.tanh(xf[:, t] @ p["w_x"] + h @ p["w_h"] + p["b"])
+    return h @ p["w_o"] + p["b_o"]
+
+
+def train_rnn(x: np.ndarray, y: np.ndarray, num_classes: int, *, steps=900, seed=0) -> RNNB:
+    params = init_rnn(num_classes, seed=seed)
+    params = train_classifier(params, rnn_apply, x, y, steps=steps, lr=2e-3, seed=seed)
+    return RNNB(params=params, num_classes=num_classes, window=x.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# Pegasusification
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PegasusRNN:
+    """Per-step table banks. Step t's recurrent bank folds tanh of h_pre."""
+
+    x_banks: list[PegasusLinear]   # one per step, indexed on raw (len, ipd)
+    h_banks: list[PegasusLinear]   # steps 1..W-1, indexed on h_pre_{t-1}
+    out_bank: PegasusLinear        # classifier, indexed on h_pre_{W-1}
+    window: int
+
+
+def _pre_activations(bundle: RNNB, x: np.ndarray) -> list[np.ndarray]:
+    p = bundle.params
+    xf = jnp.asarray(x, jnp.float32) / 255.0
+    b, w, _ = xf.shape
+    pres = []
+    h = jnp.zeros((b, HIDDEN))
+    for t in range(w):
+        pre = xf[:, t] @ p["w_x"] + h @ p["w_h"] + p["b"]
+        pres.append(np.asarray(pre))
+        h = jnp.tanh(pre)
+    return pres
+
+
+def pegasusify_rnn(
+    bundle: RNNB,
+    x_calib: np.ndarray,
+    *,
+    depth: int = 8,
+    h_group: int = 1,
+    x_group: int = 1,
+    refine_steps: int = 0,
+) -> PegasusRNN:
+    p = bundle.params
+    w = bundle.window
+    pres = _pre_activations(bundle, x_calib)
+    scale = 1.0 / 255.0
+
+    x_banks, h_banks = [], []
+    for t in range(w):
+        # raw 2-byte step input is ONE partition group (v=2): Emb-style Map
+        xc = x_calib[:, t].astype(np.float32)
+        bias_t = np.asarray(p["b"], np.float32) if t == 0 else None
+        x_banks.append(
+            init_pegasus_linear(
+                np.asarray(p["w_x"], np.float32) * scale, bias_t, xc,
+                group_size=x_group, depth=depth, lut_bits=None,
+            )
+        )
+        if t > 0:
+            # recurrent bank: index on h_pre_{t-1}, fold tanh + bias
+            h_banks.append(
+                init_pegasus_linear(
+                    np.asarray(p["w_h"], np.float32),
+                    np.asarray(p["b"], np.float32),
+                    pres[t - 1],
+                    group_size=h_group, depth=depth, lut_bits=None,
+                    act_fn=jnp.tanh,
+                )
+            )
+    out_bank = init_pegasus_linear(
+        np.asarray(p["w_o"], np.float32), np.asarray(p["b_o"], np.float32),
+        pres[-1], group_size=h_group, depth=depth, lut_bits=None,
+        act_fn=jnp.tanh,
+    )
+    peg = PegasusRNN(x_banks=x_banks, h_banks=h_banks, out_bank=out_bank, window=w)
+
+    if refine_steps:
+        from repro.core.finetune import refine
+
+        for t in range(1, w):
+            peg.h_banks[t - 1] = refine(
+                peg.h_banks[t - 1], jnp.asarray(pres[t - 1]),
+                jnp.asarray(pres[t]) - jnp.asarray(x_calib[:, t], jnp.float32) @ (np.asarray(p["w_x"]) * scale),
+                steps=refine_steps,
+            )
+    return peg
+
+
+def pegasus_rnn_apply(peg: PegasusRNN, x: jax.Array) -> jax.Array:
+    """Hard-routed deployment forward. x: [B, W, 2] uint8."""
+    xf = x.astype(jnp.float32)
+    h_pre = apply_gather(peg.x_banks[0], xf[:, 0])
+    for t in range(1, peg.window):
+        h_pre = apply_gather(peg.x_banks[t], xf[:, t]) + apply_gather(
+            peg.h_banks[t - 1], h_pre
+        )
+    return apply_gather(peg.out_bank, h_pre)

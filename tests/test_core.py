@@ -1,0 +1,304 @@
+"""Unit tests for repro.core: fuzzy trees, primitives, fusion, quantization, AMM."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FixedPointSpec,
+    PegasusLinear,
+    PrimitiveGraph,
+    MapOp,
+    PartitionOp,
+    SumReduceOp,
+    advanced_nam,
+    advanced_remove_nonlinear,
+    build_matmul_lut,
+    choose_qspec,
+    dequantize,
+    fake_quant_spec,
+    fit_tree,
+    fuse_basic,
+    hard_index,
+    init_pegasus_linear,
+    partition,
+    pegasus_linear_apply,
+    quantize,
+    soft_index,
+    stack_trees,
+    sum_reduce,
+)
+from repro.core.amm import apply_gather, apply_onehot, apply_soft, dense_reference
+from repro.core.fuzzy_tree import hard_index_stacked, leaf_one_hot
+
+
+# ---------------------------------------------------------------------------
+# fuzzy tree
+# ---------------------------------------------------------------------------
+
+
+def test_fit_tree_paper_figure3():
+    """Reproduce Figure 3: split C0 on x1@5 etc., centroid C6 = mean."""
+    data = np.array(
+        [[1.0, 2.0], [2.0, 3.0], [3.0, 7.0], [2.0, 8.0], [4.0, 9.0], [5.0, 10.0]],
+        np.float32,
+    )
+    tree = fit_tree(data, depth=2)
+    # all points land in a leaf whose centroid is the mean of its members
+    idx = hard_index(tree, jnp.asarray(data))
+    for leaf in np.unique(np.asarray(idx)):
+        members = data[np.asarray(idx) == leaf]
+        np.testing.assert_allclose(
+            np.asarray(tree.centroids)[leaf], members.mean(axis=0), rtol=1e-5
+        )
+
+
+def test_hard_index_routes_to_nearest_region():
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(512, 4)).astype(np.float32)
+    tree = fit_tree(data, depth=4)
+    idx = np.asarray(hard_index(tree, jnp.asarray(data)))
+    assert idx.min() >= 0 and idx.max() < 16
+    # quantization error must beat the trivial single-centroid baseline
+    cent = np.asarray(tree.centroids)[idx]
+    err = ((data - cent) ** 2).sum()
+    base = ((data - data.mean(0)) ** 2).sum()
+    assert err < 0.6 * base
+
+
+def test_soft_index_matches_hard_at_low_temperature():
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(256, 3)).astype(np.float32)
+    tree = fit_tree(data, depth=3)
+    x = jnp.asarray(data[:32])
+    hard = np.asarray(hard_index(tree, x))
+    soft = np.asarray(soft_index(tree, x, temperature=1e-4))
+    np.testing.assert_array_equal(soft.argmax(-1), hard)
+    np.testing.assert_allclose(soft.sum(-1), 1.0, rtol=1e-4)
+
+
+def test_soft_index_is_differentiable():
+    rng = np.random.default_rng(2)
+    data = rng.normal(size=(128, 2)).astype(np.float32)
+    tree = fit_tree(data, depth=2)
+
+    def loss(thr):
+        from repro.core.fuzzy_tree import FuzzyTree
+
+        t = FuzzyTree(tree.features, thr, tree.centroids)
+        p = soft_index(t, jnp.asarray(data[:16]), temperature=0.5)
+        return (p * jnp.arange(4)).sum()
+
+    g = jax.grad(loss)(tree.thresholds)
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).sum() > 0
+
+
+def test_stacked_index_matches_per_tree():
+    rng = np.random.default_rng(3)
+    data = rng.normal(size=(256, 8)).astype(np.float32)
+    trees = [fit_tree(data[:, i * 2 : (i + 1) * 2], 3) for i in range(4)]
+    stacked = stack_trees(trees)
+    xg = jnp.asarray(data[:16].reshape(16, 4, 2))
+    got = np.asarray(hard_index_stacked(stacked, xg))
+    for k in range(4):
+        want = np.asarray(hard_index(trees[k], xg[:, k]))
+        np.testing.assert_array_equal(got[:, k], want)
+
+
+# ---------------------------------------------------------------------------
+# primitives + fusion
+# ---------------------------------------------------------------------------
+
+
+def test_partition_shapes_and_stride():
+    x = jnp.arange(12.0)
+    g = partition(x, dim=4)
+    assert g.shape == (3, 4)
+    g2 = partition(x, dim=4, stride=2)
+    assert g2.shape == (5, 4)
+    np.testing.assert_allclose(np.asarray(g2[1]), [2, 3, 4, 5])
+
+
+def _mlp_graph(w1, b1, w2, gamma, beta):
+    """BN -> FC -> ReLU -> FC chain as a primitive graph (Fig. 5 shape).
+
+    Affine ops keep their constant in ``bias`` (fn strictly linear) so the
+    fusion passes can hoist it correctly across SumReduce.
+    """
+    from repro.core.fusion import identity
+
+    k, v = 2, 2
+
+    def bn_scale(xg):
+        return gamma * xg
+
+    def fc_groups(xg):  # per-group partial matmul [.., K, v] -> [.., K, N]
+        return jnp.einsum("...kv,kvn->...kn", xg, w1.reshape(k, v, -1))
+
+    def relu(x):
+        return jax.nn.relu(x)
+
+    def fc2(x):
+        return x @ w2
+
+    n = w1.shape[1]
+    return PrimitiveGraph(
+        [
+            PartitionOp(dim=v, name="part"),
+            MapOp(fn=bn_scale, linear=True, in_dim=v, out_dim=v, table_entries=16, bias=beta, name="bn"),
+            MapOp(fn=fc_groups, linear=True, in_dim=v, out_dim=n, table_entries=16, bias=None, name="fc1"),
+            SumReduceOp(),
+            MapOp(fn=identity, linear=True, in_dim=n, out_dim=n, table_entries=0, bias=b1, name="bias1"),
+            MapOp(fn=relu, linear=False, in_dim=n, out_dim=n, table_entries=16, name="relu"),
+            MapOp(fn=fc2, linear=True, in_dim=n, out_dim=w2.shape[1], table_entries=16, name="fc2"),
+        ]
+    )
+
+
+def test_basic_fusion_preserves_semantics_and_reduces_lookups():
+    rng = np.random.default_rng(4)
+    w1 = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+    gamma = jnp.float32(1.3)
+    beta = jnp.asarray(rng.normal(size=(2, 2)), jnp.float32)
+    g = _mlp_graph(w1, b1, w2, gamma, beta)
+    fused = fuse_basic(g)
+    x = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(g.evaluate(x)), np.asarray(fused.evaluate(x)), rtol=1e-4, atol=1e-5
+    )
+    assert fused.num_lookups() < g.num_lookups()
+
+
+def test_advanced_remove_nonlinear_single_lookup():
+    rng = np.random.default_rng(5)
+    w1 = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+    g = _mlp_graph(w1, b1, w2, jnp.float32(1.0), jnp.zeros((2, 2), jnp.float32))
+    lin = advanced_remove_nonlinear(g)
+    # linear pipeline: the only lookup(s) left are the fused per-group maps
+    assert lin.num_lookups() <= 2
+    # and it is exactly the linear part of the model
+    x = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+    want = ((x @ w1) + b1) @ w2
+    np.testing.assert_allclose(np.asarray(lin.evaluate(x)), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_advanced_nam_structure():
+    rng = np.random.default_rng(6)
+    w1 = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+    g = _mlp_graph(w1, b1, w2, jnp.float32(1.0), jnp.zeros((2, 2), jnp.float32))
+    nam = advanced_nam(g)
+    assert nam.num_lookups() == 1
+    assert isinstance(nam.ops[0], PartitionOp)
+    assert isinstance(nam.ops[-1], SumReduceOp)
+    x = jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)
+    out = nam.evaluate(x)
+    assert out.shape == (4, 3)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+
+def test_choose_qspec_ranges():
+    spec = choose_qspec(np.array([-100.0, 100.0]), bits=16)
+    # values up to 128 must be representable
+    q = quantize(jnp.asarray([99.7]), spec)
+    x = dequantize(q, spec)
+    np.testing.assert_allclose(np.asarray(x), [99.7], atol=2.0 / spec.scale)
+    spec_small = choose_qspec(np.array([0.0, 5.0]), bits=16)
+    assert spec_small.frac_bits > spec.frac_bits  # adaptive binary point
+
+
+def test_fake_quant_ste_gradient():
+    spec = FixedPointSpec(bits=8, frac_bits=4)
+    g = jax.grad(lambda x: fake_quant_spec(x, spec).sum())(jnp.asarray([0.3, 7.9, 100.0]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0, 0.0])  # clip STE
+
+
+# ---------------------------------------------------------------------------
+# approximate matmul (PegasusLinear)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_layer():
+    rng = np.random.default_rng(7)
+    d, n, s = 16, 8, 4096
+    w = rng.normal(size=(d, n)).astype(np.float32) / np.sqrt(d)
+    b = rng.normal(size=(n,)).astype(np.float32)
+    calib = rng.normal(size=(s, d)).astype(np.float32)
+    layer = init_pegasus_linear(w, b, calib, group_size=4, depth=4, lut_bits=None)
+    return w, b, calib, layer
+
+
+def test_amm_paths_agree(small_layer):
+    w, b, calib, layer = small_layer
+    x = jnp.asarray(calib[:64])
+    y_g = apply_gather(layer, x)
+    y_o = apply_onehot(layer, x)
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_o), rtol=1e-4, atol=1e-5)
+
+
+def test_amm_approximates_dense(small_layer):
+    w, b, calib, layer = small_layer
+    x = jnp.asarray(calib[:512])
+    y_ref = dense_reference(jnp.asarray(w), jnp.asarray(b), x)
+    y_amm = apply_gather(layer, x)
+    # relative RMSE well below 1 (it IS an approximation)
+    rel = float(jnp.linalg.norm(y_amm - y_ref) / jnp.linalg.norm(y_ref))
+    assert rel < 0.45, rel
+
+
+def test_amm_soft_path_low_temp_matches_hard(small_layer):
+    _, _, calib, layer = small_layer
+    x = jnp.asarray(calib[:32])
+    hard = apply_gather(layer, x)
+    soft = apply_soft(layer, x, temperature=1e-4)
+    # points can sit exactly on a learned threshold (sigmoid ties → 0.5/0.5
+    # leaf split), so compare in aggregate, not elementwise-exactly
+    diff = np.abs(np.asarray(soft) - np.asarray(hard))
+    assert np.median(diff) < 1e-5
+    assert diff.max() < 0.1
+
+
+def test_refine_improves_hard_error():
+    """Paper §4.4: backprop re-aligns tables when the clustering is stale.
+
+    With mean centroids and a linear teacher, the initial LUT is already
+    conditionally optimal — so to exercise refinement we fit the trees on a
+    SHIFTED calibration distribution (a deployment-drift scenario) and let
+    backprop re-align thresholds + LUT against the true data.
+    """
+    from repro.core.finetune import hard_mse, refine
+
+    rng = np.random.default_rng(17)
+    d, n, s = 16, 8, 4096
+    w = rng.normal(size=(d, n)).astype(np.float32) / np.sqrt(d)
+    b = rng.normal(size=(n,)).astype(np.float32)
+    stale = (rng.normal(size=(s, d)) * 2.0 + 1.5).astype(np.float32)  # drifted
+    true = rng.normal(size=(s, d)).astype(np.float32)
+    layer = init_pegasus_linear(w, b, stale, group_size=4, depth=4, lut_bits=None)
+    x = jnp.asarray(true)
+    y_teacher = dense_reference(jnp.asarray(w), jnp.asarray(b), x)
+    before = hard_mse(layer, x, y_teacher)
+    refined = refine(layer, x, y_teacher, steps=150, lr=3e-3)
+    after = hard_mse(refined, x, y_teacher)
+    assert after < 0.9 * before, (before, after)
+
+
+def test_build_matmul_lut_shapes():
+    cents = jnp.ones((4, 16, 2))
+    w = jnp.ones((8, 5))
+    lut = build_matmul_lut(cents, w, 2)
+    assert lut.shape == (4, 16, 5)
+    np.testing.assert_allclose(np.asarray(lut), 2.0)

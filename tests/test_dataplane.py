@@ -1,0 +1,114 @@
+"""Tests for the Tofino-2 MAT emulator: CRC, integer pipeline, resources."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import init_pegasus_linear
+from repro.core.amm import apply_gather
+from repro.core.quantization import choose_qspec
+from repro.dataplane.compile import compile_model, place_physical
+from repro.dataplane.crc import leaf_tcam_rules, range_to_ternary, tree_leaf_boxes
+from repro.dataplane.resources import TOFINO2
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def test_range_to_ternary_exact_cover():
+    rules = range_to_ternary(3, 12, 4)
+    for x in range(16):
+        matched = sum(r.matches(x) for r in rules)
+        assert matched == (1 if 3 <= x <= 12 else 0)
+
+
+def test_range_to_ternary_full_and_single():
+    assert len(range_to_ternary(0, 255, 8)) == 1       # one wildcard rule
+    assert len(range_to_ternary(77, 77, 8)) == 8 or len(range_to_ternary(77, 77, 8)) == 1
+    # single value needs exactly one exact rule
+    rules = range_to_ternary(77, 77, 8)
+    assert len(rules) == 1 and rules[0].mask == 255
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(data=st.data(), bits=st.sampled_from([4, 8]))
+    def test_property_crc_partition(data, bits):
+        """CRC rules cover [lo,hi] exactly once and nothing else."""
+        hi = data.draw(st.integers(0, 2**bits - 1))
+        lo = data.draw(st.integers(0, hi))
+        rules = range_to_ternary(lo, hi, bits)
+        for x in range(2**bits):
+            assert sum(r.matches(x) for r in rules) == (1 if lo <= x <= hi else 0)
+
+
+def _two_layer(rng, depth=4):
+    d, h, o, s = 8, 8, 4, 4096
+    X = rng.integers(0, 256, size=(s, d)).astype(np.float32)
+    w1 = rng.normal(size=(d, h)).astype(np.float32) * 0.05
+    b1 = rng.normal(size=(h,)).astype(np.float32)
+    w2 = rng.normal(size=(h, o)).astype(np.float32) * 0.3
+    l1 = init_pegasus_linear(w1, b1, X, group_size=2, depth=depth, lut_bits=None)
+    h_pre = np.asarray(apply_gather(l1, jnp.asarray(X)))
+    l2 = init_pegasus_linear(
+        w2, None, h_pre, group_size=2, depth=depth, lut_bits=None,
+        act_fn=lambda c: jnp.maximum(c, 0),
+    )
+    y = np.asarray(apply_gather(l2, jnp.asarray(h_pre)))
+    return X, [l1, l2], y
+
+
+def test_integer_pipeline_matches_float_model():
+    rng = np.random.default_rng(0)
+    X, layers, y_float = _two_layer(rng)
+    pipe = compile_model(layers, stateful_bits_per_flow=80)
+    out = pipe.run_batch(X[:128])
+    spec = choose_qspec(np.asarray(layers[-1].lut), bits=16)
+    y_int = out / spec.scale
+    # fixed-point error only: bounded by a few quanta of each layer
+    assert np.abs(y_int - y_float[:128]).max() < 0.05 * np.abs(y_float).max()
+
+
+def test_tree_leaf_boxes_partition_input_space():
+    """Leaf boxes tile the quantized input space (disjoint + complete)."""
+    rng = np.random.default_rng(3)
+    X = rng.integers(0, 16, size=(512, 2)).astype(np.float32)
+    from repro.core import fit_tree
+
+    tree = fit_tree(X, depth=3)
+    boxes = tree_leaf_boxes(
+        np.asarray(tree.features), np.asarray(tree.thresholds), 3, 2, bits=4
+    )
+    count = np.zeros((16, 16), dtype=int)
+    for box in boxes:
+        (l0, h0), (l1, h1) = box
+        if l0 > h0 or l1 > h1:
+            continue
+        count[l0 : h0 + 1, l1 : h1 + 1] += 1
+    np.testing.assert_array_equal(count, 1)
+
+
+def test_resource_report_within_budget_and_stages():
+    rng = np.random.default_rng(4)
+    X, layers, _ = _two_layer(rng)
+    pipe = compile_model(layers, stateful_bits_per_flow=80)
+    rep = pipe.report()
+    assert rep.validate() == []
+    assert rep.stages_used >= 2  # at least one physical stage per layer
+    assert 0 < rep.sram_pct < 100 and 0 <= rep.tcam_pct < 100
+
+
+def test_place_physical_splits_oversized_logical_stage():
+    """A logical stage whose tables exceed one stage's bus must split."""
+    rng = np.random.default_rng(5)
+    d, n, s = 32, 64, 2048  # 16 tables × 64×16b rows = wide bus demand
+    X = rng.integers(0, 256, size=(s, d)).astype(np.float32)
+    w = rng.normal(size=(d, n)).astype(np.float32) * 0.05
+    layer = init_pegasus_linear(w, None, X, group_size=2, depth=4, lut_bits=None)
+    pipe = compile_model([layer])
+    assert place_physical(pipe) > 1

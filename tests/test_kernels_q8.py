@@ -1,0 +1,61 @@
+"""int8-LUT kernel validation: quantization properties + kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fuzzy_tree import fit_tree, stack_trees
+from repro.kernels.fuzzy_lut.ops import prepare_feat_onehot
+from repro.kernels.fuzzy_lut.quantized import (
+    fuzzy_lut_q8_pallas, fuzzy_lut_q8_ref, quantize_lut_int8,
+)
+from repro.kernels.fuzzy_lut.ref import fuzzy_lut_matmul_ref
+
+
+def _problem(rng, t, k, v, depth, n):
+    data = rng.normal(size=(max(4 * 2**depth, 64), k * v)).astype(np.float32)
+    trees = stack_trees(
+        [fit_tree(data[:, g * v : (g + 1) * v], depth) for g in range(k)])
+    lut = jnp.asarray(rng.normal(size=(k, 2**depth, n)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(t, k, v)).astype(np.float32))
+    return x, trees, lut
+
+
+def test_quantize_lut_int8_roundtrip():
+    rng = np.random.default_rng(0)
+    lut = jnp.asarray(rng.normal(size=(4, 16, 8)).astype(np.float32))
+    q, s = quantize_lut_int8(lut)
+    assert q.dtype == jnp.int8
+    deq = q.astype(jnp.float32) * s[:, None, None]
+    rel = float(jnp.linalg.norm(deq - lut) / jnp.linalg.norm(lut))
+    assert rel < 0.01  # int8 symmetric: ~0.4% rms for gaussian
+
+
+@pytest.mark.parametrize("t,k,v,depth,n,blocks", [
+    (16, 4, 4, 3, 8, (16, 8, 2)),
+    (64, 8, 2, 4, 16, (32, 16, 4)),
+])
+def test_q8_kernel_matches_ref(t, k, v, depth, n, blocks):
+    rng = np.random.default_rng(t + k)
+    x, trees, lut = _problem(rng, t, k, v, depth, n)
+    q, s = quantize_lut_int8(lut)
+    feat_oh = prepare_feat_onehot(trees.features, v)
+    bt, bn, bk = blocks
+    got = fuzzy_lut_q8_pallas(x, feat_oh, trees.thresholds, q, s,
+                              depth=depth, block_t=bt, block_n=bn, block_k=bk)
+    want = fuzzy_lut_q8_ref(x, trees.features, trees.thresholds, q, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_q8_close_to_fp32_path():
+    """End-to-end: int8 LUT result within quantization error of fp32 LUT."""
+    rng = np.random.default_rng(5)
+    x, trees, lut = _problem(rng, 32, 8, 4, 4, 16)
+    q, s = quantize_lut_int8(lut)
+    feat_oh = prepare_feat_onehot(trees.features, 4)
+    got = fuzzy_lut_q8_pallas(x, feat_oh, trees.thresholds, q, s,
+                              depth=4, block_t=32, block_n=16, block_k=8)
+    want = fuzzy_lut_matmul_ref(x, trees.features, trees.thresholds, lut)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.01, rel

@@ -1,0 +1,113 @@
+"""End-to-end tests for the paper's models + baselines on synthetic traffic.
+
+These assert the paper's QUALITATIVE claims (the quantitative ones live in
+benchmarks/): ordering between methods, small pegasusification deltas, AUC
+above chance, resource deployability.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data.synthetic_traffic import anomaly_testset, make_dataset
+from repro.nets.common import macro_f1
+
+FLOWS = 400
+STEPS = 250
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("peerrush", flows_per_class=FLOWS)
+
+
+def test_mlp_beats_n3ic_and_small_peg_delta(ds):
+    from repro.nets.baselines.n3ic import n3ic_apply, train_n3ic
+    from repro.nets.mlp import mlp_apply, pegasusify_mlp, pegasus_mlp_apply, train_mlp
+
+    stats, y = ds.train["stats"], ds.train["label"]
+    ts, ty = ds.test["stats"], ds.test["label"]
+    n3 = train_n3ic(stats, y, ds.num_classes, steps=STEPS)
+    f1_n3 = macro_f1(np.asarray(n3ic_apply(n3, jnp.asarray(ts))).argmax(-1), ty, ds.num_classes)
+    mlp = train_mlp(stats, y, ds.num_classes, steps=STEPS)
+    f1_dense = macro_f1(
+        np.asarray(mlp_apply(mlp, jnp.asarray(ts))).argmax(-1), ty, ds.num_classes)
+    peg = pegasusify_mlp(mlp, stats.astype(np.float32), refine_steps=40)
+    f1_peg = macro_f1(
+        np.asarray(pegasus_mlp_apply(peg, jnp.asarray(ts, jnp.float32))).argmax(-1),
+        ty, ds.num_classes)
+    assert f1_peg > f1_n3, (f1_peg, f1_n3)             # paper Table 5 ordering
+    assert f1_dense - f1_peg < 0.05, (f1_dense, f1_peg)  # §7.5 small delta
+
+
+def test_rnn_beats_bos(ds):
+    from repro.nets.baselines.bos import bos_apply, train_bos
+    from repro.nets.rnn import pegasusify_rnn, pegasus_rnn_apply, train_rnn
+
+    seq, y = ds.train["seq"], ds.train["label"]
+    ts, ty = ds.test["seq"], ds.test["label"]
+    bos = train_bos(seq, y, ds.num_classes, steps=STEPS)
+    f1_bos = macro_f1(np.asarray(bos_apply(bos, jnp.asarray(ts))).argmax(-1), ty, ds.num_classes)
+    rnn = train_rnn(seq, y, ds.num_classes, steps=STEPS)
+    peg = pegasusify_rnn(rnn, seq)
+    f1_peg = macro_f1(
+        np.asarray(pegasus_rnn_apply(peg, jnp.asarray(ts))).argmax(-1), ty, ds.num_classes)
+    assert f1_peg > f1_bos, (f1_peg, f1_bos)
+
+
+def test_cnn_l_scale_beats_cnn_b(ds):
+    from repro.nets.cnn import (
+        pegasus_cnn_apply, pegasus_cnn_l_apply, pegasusify_cnn, pegasusify_cnn_l,
+        train_cnn, train_cnn_l,
+    )
+
+    seq, payload, y = ds.train["seq"], ds.train["bytes"], ds.train["label"]
+    ts, tp, ty = ds.test["seq"], ds.test["bytes"], ds.test["label"]
+    cb = train_cnn(seq, y, ds.num_classes, size="B", steps=STEPS)
+    pegb = pegasusify_cnn(cb, seq)
+    f1_b = macro_f1(
+        np.asarray(pegasus_cnn_apply(pegb, jnp.asarray(ts))).argmax(-1), ty, ds.num_classes)
+    cl = train_cnn_l(seq, payload, y, ds.num_classes, steps=STEPS)
+    pegl = pegasusify_cnn_l(cl, seq, payload, index_bits=8)
+    f1_l = macro_f1(
+        np.asarray(pegasus_cnn_l_apply(pegl, jnp.asarray(ts), jnp.asarray(tp))).argmax(-1),
+        ty, ds.num_classes)
+    # input scale 3840b ≫ 128b → accuracy win (paper §7.3)
+    assert f1_l > f1_b, (f1_l, f1_b)
+
+
+def test_autoencoder_auc_above_chance(ds):
+    from repro.nets.autoencoder import (
+        auc_score, pegasus_ae_error, pegasusify_ae, train_autoencoder,
+    )
+
+    x_train = ds.train["seq"].reshape(len(ds.train["label"]), -1)
+    ae = train_autoencoder(x_train, steps=STEPS)
+    banks = pegasusify_ae(ae, x_train.astype(np.float32))
+    for kind in ("malware", "dos"):
+        test = anomaly_testset(ds, kind=kind)
+        x = test["seq"].reshape(len(test["label"]), -1)
+        scores = np.asarray(pegasus_ae_error(banks, jnp.asarray(x, jnp.float32)))
+        auc = auc_score(scores, test["label"])
+        assert auc > 0.8, (kind, auc)                   # paper Fig. 8: 0.89–0.99
+
+
+def test_resource_reports_deployable(ds):
+    from repro.dataplane.compile import compile_model
+    from repro.nets.mlp import pegasusify_mlp, train_mlp
+
+    stats, y = ds.train["stats"], ds.train["label"]
+    mlp = train_mlp(stats, y, ds.num_classes, steps=STEPS)
+    layers = pegasusify_mlp(mlp, stats.astype(np.float32), refine_steps=0)
+    rep = compile_model(layers, stateful_bits_per_flow=80).report()
+    assert rep.validate() == [], rep.validate()
+
+
+def test_leo_tree_reasonable(ds):
+    from repro.nets.baselines.leo import leo_predict, train_leo
+
+    stats, y = ds.train["stats"], ds.train["label"]
+    tree = train_leo(stats, y, ds.num_classes, max_nodes=512)
+    f1 = macro_f1(leo_predict(tree, ds.test["stats"]), ds.test["label"], ds.num_classes)
+    assert f1 > 0.7, f1
+    assert tree.node_count <= 512

@@ -1,0 +1,135 @@
+"""Pegasus Syntax translator tests (paper §6.2 / Fig. 6) + extra property
+tests on fusion and quantization invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fuse_basic
+from repro.core.syntax import (
+    SyntaxError_, map_op, partition, program, sumreduce, translate,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _fig6_program(w):
+    """The paper's Fig. 6 snippet: Partition(dim=2,stride=2) → Map(CNN) →
+    SumReduce, over an 8-byte input vector."""
+    k, v, n = 4, 2, 8
+
+    def conv_map(xg):
+        return jnp.einsum("...kv,kvn->...kn", xg, w)
+
+    return program(
+        partition(dim=2, stride=2),
+        map_op(clustering_depth=4, fn=conv_map, linear=True, out_dim=n,
+               name="cnn_kernel"),
+        sumreduce(),
+    )
+
+
+def test_translate_fig6_and_evaluate():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(4, 2, 8)), jnp.float32)
+    graph = translate(_fig6_program(w), input_dim=8)
+    x = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    out = graph.evaluate(x)
+    want = jnp.einsum("bkv,kvn->bn", x.reshape(3, 4, 2), w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+    assert graph.num_lookups() == 1
+    assert graph.table_entries() == 16          # 2^clustering_depth
+
+
+def test_translate_infers_out_dim():
+    spec = program(
+        partition(dim=4),
+        map_op(clustering_depth=3, fn=lambda xg: xg @ jnp.ones((4, 7)),
+               linear=True),
+        sumreduce(),
+    )
+    graph = translate(spec, input_dim=8)
+    assert graph.ops[1].out_dim == 7
+
+
+@pytest.mark.parametrize("bad,msg", [
+    (program(partition(dim=3)), "does not tile"),
+    (program(sumreduce()), "SumReduce before"),
+    (program(partition(dim=2), partition(dim=2)), "nested Partition"),
+    (program({"op": "Conv"}), "unknown op"),
+    (program(partition(dim=2),
+             map_op(clustering_depth=0, fn=lambda x: x)), "out of range"),
+])
+def test_translate_rejects_illformed(bad, msg):
+    with pytest.raises(SyntaxError_, match=msg):
+        translate(bad, input_dim=8)
+
+
+def test_translated_graph_fuses():
+    """Syntax output is a normal PrimitiveGraph: Basic Fusion applies."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(4, 2, 8)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(8, 3)), jnp.float32)
+    spec = program(
+        partition(dim=2, stride=2),
+        map_op(clustering_depth=4, fn=lambda xg: jnp.einsum("...kv,kvn->...kn", xg, w),
+               linear=True, out_dim=8),
+        sumreduce(),
+        map_op(clustering_depth=8, fn=lambda x: x @ w2, linear=True, out_dim=3),
+    )
+    graph = translate(spec, input_dim=8)
+    fused = fuse_basic(graph)
+    x = jnp.asarray(rng.normal(size=(5, 8)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(graph.evaluate(x)),
+                               np.asarray(fused.evaluate(x)), rtol=1e-4, atol=1e-5)
+    assert fused.num_lookups() < graph.num_lookups()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        k=st.sampled_from([2, 4]),
+        v=st.sampled_from([2, 3]),
+        n=st.sampled_from([4, 8]),
+    )
+    def test_property_fusion_preserves_semantics(seed, k, v, n):
+        """Basic fusion is semantics-preserving for random affine chains."""
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(k, v, n)), jnp.float32)
+        w2 = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        spec = program(
+            partition(dim=v),
+            map_op(clustering_depth=4, linear=True, out_dim=n,
+                   fn=lambda xg: jnp.einsum("...kv,kvn->...kn", xg, w)),
+            sumreduce(),
+            map_op(clustering_depth=8, fn=jax.nn.relu, out_dim=n),
+            map_op(clustering_depth=8, fn=lambda x: x @ w2, linear=True,
+                   out_dim=3, bias=None),
+        )
+        graph = translate(spec, input_dim=k * v)
+        fused = fuse_basic(graph)
+        x = jnp.asarray(rng.normal(size=(4, k * v)), jnp.float32)
+        np.testing.assert_allclose(np.asarray(graph.evaluate(x)),
+                                   np.asarray(fused.evaluate(x)),
+                                   rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**16), bits=st.sampled_from([8, 12, 16]))
+    def test_property_fixed_point_error_bound(seed, bits):
+        """Quantization error ≤ half a quantum over the calibrated range."""
+        from repro.core import choose_qspec, dequantize, quantize
+
+        rng = np.random.default_rng(seed)
+        x = rng.normal(scale=10.0, size=(256,)).astype(np.float32)
+        spec = choose_qspec(x, bits=bits)
+        err = np.abs(np.asarray(dequantize(quantize(jnp.asarray(x), spec), spec)) - x)
+        assert err.max() <= 0.5 / spec.scale + 1e-6

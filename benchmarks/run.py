@@ -9,9 +9,13 @@ Prints one ``name,us_per_call,derived`` CSV line per benchmark at the end
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 import traceback
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_throughput.json"
 
 
 def main() -> None:
@@ -34,11 +38,13 @@ def main() -> None:
         benches = {k: v for k, v in benches.items() if args.only in k}
 
     csv_lines = ["name,us_per_call,derived"]
+    derived_by_name = {}
     for name, fn in benches.items():
         print(f"\n=== {name} {'(quick)' if args.quick else ''} ===")
         t0 = time.perf_counter()
         try:
             derived = fn(quick=args.quick)
+            derived_by_name[name] = derived
             us = (time.perf_counter() - t0) * 1e6
             summary = ""
             if isinstance(derived, list) and derived and isinstance(derived[0], dict):
@@ -52,6 +58,13 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             csv_lines.append(f"{name},-1,FAILED")
+
+    th = derived_by_name.get("throughput_fig9")
+    if isinstance(th, dict):
+        # machine-readable perf trajectory: tok/s, plan-build ms, per-call ms
+        # per backend — future PRs diff this file against their own run.
+        BENCH_JSON.write_text(json.dumps(th, indent=2, sort_keys=True) + "\n")
+        print(f"\nwrote {BENCH_JSON}")
 
     print("\n" + "\n".join(csv_lines))
     if any("FAILED" in l for l in csv_lines):

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.data.synthetic_traffic import make_dataset
-from repro.nets.mlp import mlp_apply, train_mlp
+from repro.engine import BACKENDS, build_plan
+from repro.nets.mlp import mlp_apply, pegasusify_mlp, train_mlp
 
 LINE_RATE_BPS = 12.8e12          # Tofino 2 aggregate
 AVG_PKT_BITS = 800 * 8           # 800B average packet
@@ -42,13 +43,65 @@ def measured_cpu_pps(batch: int = 4096, iters: int = 20) -> tuple[float, float]:
     return batch / dt, dt * 1e6
 
 
+def engine_backend_bench(quick: bool = False) -> dict:
+    """Plan caching vs per-call plan rebuild, per engine backend.
+
+    ``cold`` rebuilds the ExecutionPlan before every call; ``warm`` reuses
+    ONE plan. For the kernel/kernel_q8 backends cold matches the pre-engine
+    per-call behavior (one-hots, padding, quantization re-derived each
+    invocation); for gather/onehot — which never needed layouts — the ratio
+    measures pure plan-build overhead, not a pre-engine regression.
+    """
+    batch = 256 if quick else 1024
+    iters = 3 if quick else 10
+    ds = make_dataset("peerrush", flows_per_class=120 if quick else 300)
+    m = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes,
+                  steps=60 if quick else 150)
+    banks = pegasusify_mlp(m, ds.train["stats"].astype(np.float32), refine_steps=0)
+    x = jnp.asarray(
+        np.tile(ds.test["stats"], (batch // len(ds.test["stats"]) + 1, 1))[:batch],
+        jnp.float32)
+
+    t0 = time.perf_counter()
+    plan = build_plan(banks)
+    plan_build_ms = (time.perf_counter() - t0) * 1e3
+
+    from repro.kernels.fuzzy_lut.ops import _Q8_MEMO
+
+    result = {"plan_build_ms": plan_build_ms, "batch": batch, "iters": iters,
+              "quick": quick, "backends": {}}
+    for be in BACKENDS:
+        plan(x, backend=be).block_until_ready()            # warmup/compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            plan(x, backend=be).block_until_ready()
+        warm_ms = (time.perf_counter() - t0) / iters * 1e3
+
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            _Q8_MEMO.clear()                               # defeat the q8 memo
+            build_plan(banks)(x, backend=be).block_until_ready()
+        cold_ms = (time.perf_counter() - t0) / iters * 1e3
+
+        result["backends"][be] = {
+            "per_call_ms": warm_ms,
+            "per_call_cold_ms": cold_ms,
+            "tok_s": batch / (warm_ms / 1e3),
+            "plan_cache_speedup": cold_ms / warm_ms,
+        }
+        print(f"engine[{be:9s}] warm {warm_ms:8.2f} ms  cold {cold_ms:8.2f} ms "
+              f"({cold_ms / warm_ms:5.1f}x)  {batch / (warm_ms / 1e3):12.0f} flows/s")
+    return result
+
+
 def main(quick: bool = False):
     sw = modeled_switch_pps()
     cpu_pps, us = measured_cpu_pps(batch=1024 if quick else 4096, iters=5 if quick else 20)
     print(f"switch(modeled, line-rate) pps={sw:.3e}")
     print(f"cpu(measured, this host)   pps={cpu_pps:.3e}  us_per_batch={us:.1f}")
     print(f"speedup(modeled/measured)  {sw / cpu_pps:.0f}x")
-    return dict(switch_pps=sw, cpu_pps=cpu_pps, speedup=sw / cpu_pps)
+    engine = engine_backend_bench(quick=quick)
+    return dict(switch_pps=sw, cpu_pps=cpu_pps, speedup=sw / cpu_pps, engine=engine)
 
 
 if __name__ == "__main__":

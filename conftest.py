@@ -1,0 +1,23 @@
+"""Repo-level pytest config: make ``src`` importable without an install and
+auto-tag the kernel test modules.
+
+CI lanes map to markers (see .github/workflows/ci.yml):
+  fast lane  → ``-m "not slow"``   (every push, well under 2 minutes)
+  full lane  → no filter           (the tier-1 suite)
+"""
+
+import pathlib
+import sys
+
+import pytest
+
+SRC = pathlib.Path(__file__).resolve().parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        # interpret-mode Pallas kernel suites, tagged wholesale
+        if item.module.__name__.startswith("test_kernels"):
+            item.add_marker(pytest.mark.kernel)

@@ -85,6 +85,15 @@ class PegasusLinear:
     def tree_unflatten(cls, aux, children):
         return cls(*children, group_size=aux[0])
 
+    def compile(self, *, backend: str = "onehot", **kw):
+        """Compile this layer into a single-bank ExecutionPlan
+        (`repro.engine`): kernel layouts + int8 LUT precomputed once, the
+        backend bound globally. Preferred over repeated ``path="kernel*"``
+        calls on the serving hot path."""
+        from repro.engine import build_plan
+
+        return build_plan(self, backend=backend, **kw)
+
 
 def init_pegasus_linear(
     weight: np.ndarray,

@@ -1,0 +1,31 @@
+"""Unified Pegasus execution engine (backend-dispatched, plan-cached).
+
+One compilation step — :func:`build_plan` — turns ANY pegasusified model
+(MLP bank list, PegasusRNN, PegasusCNN, PegasusCNNL, AutoEncoder bank list)
+into a reusable :class:`ExecutionPlan`: the kernel layouts (feature one-hots,
+block-padded LUT/threshold tensors, int8-quantized LUT + scales) are built
+ONCE at plan time, and every subsequent call is pure compute on one of the
+four backends ``{"gather", "onehot", "kernel", "kernel_q8"}``.
+"""
+
+from .plan import (
+    BACKENDS,
+    STATS,
+    CompiledBank,
+    EngineStats,
+    ExecutionPlan,
+    build_plan,
+    plan_for,
+    reset_plan_cache,
+)
+
+__all__ = [
+    "BACKENDS",
+    "STATS",
+    "CompiledBank",
+    "EngineStats",
+    "ExecutionPlan",
+    "build_plan",
+    "plan_for",
+    "reset_plan_cache",
+]

@@ -1,0 +1,406 @@
+"""ExecutionPlan: compile a pegasusified model once, call it many times.
+
+The hand-rolled apply paths in ``repro.nets.*`` re-derived the kernel layout
+on every invocation — feature one-hots, block padding, and (for the q8 path)
+int8 quantization of the whole LUT bank. Quark-style all-on-dataplane designs
+and FENIX's offload pipeline both treat that state as *precompiled*; this
+module does the same for the TPU realization:
+
+  * :class:`CompiledBank` — one ``PegasusLinear`` plus every tensor the fused
+    Pallas kernel needs, built exactly once (`feat_onehot`, +inf-padded
+    thresholds, block-padded LUT, int8 LUT + per-group scales).
+  * :class:`ExecutionPlan` — the whole model: compiled banks + a structural
+    forward (sequential stack, windowed CNN, unrolled RNN, two-level NAM)
+    with the backend chosen globally instead of per-layer-call.
+  * :func:`build_plan` / :func:`plan_for` — compile, or fetch the memoized
+    plan for a model object (bounded cache, strong refs pin ids).
+
+Backends are semantics-identical up to quantization:
+  ``gather``    — take_along_axis reference (XLA)
+  ``onehot``    — one-hot × LUT matmul (MXU-friendly XLA)
+  ``kernel``    — fused Pallas fuzzy-LUT kernel
+  ``kernel_q8`` — fused Pallas kernel over the cached int8 LUT
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amm import PegasusLinear, apply_gather, apply_onehot
+from repro.core.fuzzy_tree import hard_index
+from repro.kernels.fuzzy_lut.kernel import fuzzy_lut_pallas
+from repro.kernels.fuzzy_lut.ops import prepare_feat_onehot, quantized_lut_cached
+from repro.kernels.fuzzy_lut.quantized import fuzzy_lut_q8_pallas
+
+__all__ = [
+    "BACKENDS",
+    "STATS",
+    "CompiledBank",
+    "EngineStats",
+    "ExecutionPlan",
+    "build_plan",
+    "plan_for",
+    "reset_plan_cache",
+]
+
+BACKENDS = ("gather", "onehot", "kernel", "kernel_q8")
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Global counters — the parity/caching tests assert layout work happens
+    at plan-build time only, never on the call path."""
+
+    layout_builds: int = 0   # CompiledBank layout preparations
+    plan_builds: int = 0     # ExecutionPlan compilations
+    plan_cache_hits: int = 0  # plan_for() served from the memo
+    bank_calls: int = 0      # CompiledBank.apply invocations
+
+    def reset(self) -> None:
+        self.layout_builds = 0
+        self.plan_builds = 0
+        self.plan_cache_hits = 0
+        self.bank_calls = 0
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+STATS = EngineStats()
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+class CompiledBank:
+    """One PegasusLinear with its kernel layout precomputed and frozen.
+
+    All layout work (one-hot of split features, +inf threshold padding,
+    block padding of the LUT along K and N, int8 quantization + scales)
+    happens in ``__init__``; ``apply`` only pads the activations.
+    """
+
+    def __init__(
+        self,
+        layer: PegasusLinear,
+        *,
+        block_t: int = 256,
+        block_n: int = 256,
+        block_k: int = 128,
+        interpret: bool = True,
+    ):
+        self.layer = layer
+        self.block_t = block_t
+        self.interpret = interpret
+
+        k, v, n = layer.num_groups, layer.group_size, layer.out_features
+        self.depth = int(np.log2(layer.num_centroids) + 0.5)
+
+        # -- layout prep: done ONCE here, never on the call path -----------
+        bk = min(block_k, k)
+        kp = k + (-k) % bk
+        feat_oh = prepare_feat_onehot(layer.trees.features, v)
+        thr = layer.trees.thresholds
+        lut = layer.lut
+        lut_q8, scales = quantized_lut_cached(layer)
+        if kp != k:
+            feat_oh = _pad_to(feat_oh, 0, bk)
+            thr = jnp.pad(thr, ((0, kp - k), (0, 0)), constant_values=jnp.inf)
+            lut = _pad_to(lut, 0, bk)
+            lut_q8 = _pad_to(lut_q8, 0, bk)
+            scales = jnp.pad(scales, (0, kp - k))
+        bn = min(block_n, n)
+        self.feat_oh = feat_oh
+        self.thr = thr
+        self.lut_p = _pad_to(lut, 2, bn)
+        self.lut_q8_p = _pad_to(lut_q8, 2, bn)
+        self.scales = scales
+        self.kp = kp
+        self.block_n = min(block_n, self.lut_p.shape[2])
+        self.block_k = min(block_k, kp)
+        STATS.layout_builds += 1
+
+    # -- backend dispatch ---------------------------------------------------
+
+    def apply(self, x: jax.Array, backend: str) -> jax.Array:
+        STATS.bank_calls += 1
+        if backend == "gather":
+            return apply_gather(self.layer, x)
+        if backend == "onehot":
+            return apply_onehot(self.layer, x)
+        if backend == "kernel":
+            return self._apply_kernel(x, self.lut_p, None)
+        if backend == "kernel_q8":
+            return self._apply_kernel(x, self.lut_q8_p, self.scales)
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+
+    def _apply_kernel(self, x, lut, scales) -> jax.Array:
+        p = self.layer
+        k, v, n = p.num_groups, p.group_size, p.out_features
+        lead = x.shape[:-1]
+        xg = x.reshape(-1, k, v).astype(jnp.float32)
+        t = xg.shape[0]
+        bt = min(self.block_t, max(8, t))
+        xg = _pad_to(_pad_to(xg, 0, bt), 1, self.block_k)
+        if scales is None:
+            y = fuzzy_lut_pallas(
+                xg, self.feat_oh, self.thr, lut,
+                depth=self.depth, block_t=bt, block_n=self.block_n,
+                block_k=self.block_k, interpret=self.interpret,
+            )
+        else:
+            y = fuzzy_lut_q8_pallas(
+                xg, self.feat_oh, self.thr, lut, scales,
+                depth=self.depth, block_t=bt, block_n=self.block_n,
+                block_k=self.block_k, interpret=self.interpret,
+            )
+        y = y[:t, :n]
+        if p.bias is not None:
+            y = y + p.bias
+        return y.reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan + per-family structural forwards
+# ---------------------------------------------------------------------------
+
+
+class ExecutionPlan:
+    """Compiled model: banks + structural forward, backend bound globally."""
+
+    def __init__(
+        self,
+        banks: Sequence[CompiledBank],
+        forward: Callable[..., jax.Array],
+        *,
+        backend: str = "onehot",
+        family: str = "sequential",
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+        self.banks = list(banks)
+        self._forward = forward
+        self.backend = backend
+        self.family = family
+        STATS.plan_builds += 1
+
+    def __call__(self, *inputs: jax.Array, backend: str | None = None) -> jax.Array:
+        be = self.backend if backend is None else backend
+        if be not in BACKENDS:
+            raise ValueError(f"unknown backend {be!r}; expected one of {BACKENDS}")
+        return self._forward(lambda bank, x: bank.apply(x, be), *inputs)
+
+    @property
+    def num_banks(self) -> int:
+        return len(self.banks)
+
+    def bank_inputs(self, *inputs: jax.Array, backend: str = "gather") -> list:
+        """Forward once, recording the first activation each bank receives —
+        a debugging/parity-test aid (None for banks the input never reaches)."""
+        rec: dict[int, jax.Array] = {}
+
+        def apply(bank: CompiledBank, x: jax.Array) -> jax.Array:
+            rec.setdefault(id(bank), x)
+            return bank.apply(x, backend)
+
+        self._forward(apply, *inputs)
+        return [rec.get(id(b)) for b in self.banks]
+
+    def table_bytes(self) -> int:
+        """Total LUT bytes held by the plan (fp + q8 layouts)."""
+        total = 0
+        for b in self.banks:
+            total += b.lut_p.size * b.lut_p.dtype.itemsize
+            total += b.lut_q8_p.size * b.lut_q8_p.dtype.itemsize
+        return total
+
+
+def _compile_banks(layers: Sequence[PegasusLinear], **kw) -> list[CompiledBank]:
+    return [CompiledBank(l, **kw) for l in layers]
+
+
+def _sequential_plan(layers, backend, kw) -> ExecutionPlan:
+    banks = _compile_banks(layers, **kw)
+
+    def forward(apply, x):
+        h = x.astype(jnp.float32)
+        for bank in banks:
+            h = apply(bank, h)
+        return h
+
+    return ExecutionPlan(banks, forward, backend=backend, family="sequential")
+
+
+def _rnn_plan(model, backend, kw) -> ExecutionPlan:
+    x_banks = _compile_banks(model.x_banks, **kw)
+    h_banks = _compile_banks(model.h_banks, **kw)
+    out_bank = CompiledBank(model.out_bank, **kw)
+
+    # non-bank attrs are read from ``model`` LIVE at call time, so attribute
+    # updates after compilation are honored (banks themselves are guarded by
+    # plan_for's _model_banks identity check)
+    def forward(apply, x):
+        xf = x.astype(jnp.float32)
+        h_pre = apply(x_banks[0], xf[:, 0])
+        for t in range(1, model.window):
+            h_pre = apply(x_banks[t], xf[:, t]) + apply(h_banks[t - 1], h_pre)
+        return apply(out_bank, h_pre)
+
+    return ExecutionPlan(
+        x_banks + h_banks + [out_bank], forward, backend=backend, family="rnn"
+    )
+
+
+def _cnn_plan(model, backend, kw) -> ExecutionPlan:
+    from repro.nets.cnn import _windows  # structural helper, no cycle at call time
+
+    window_bank = CompiledBank(model.window_bank, **kw)
+    head_banks = _compile_banks(model.head_banks, **kw)
+
+    def forward(apply, x):
+        win = _windows(x.astype(jnp.float32))          # [B, P, KERNEL*f]
+        b, pcount, wdim = win.shape
+        contrib = apply(window_bank, win.reshape(-1, wdim)).reshape(b, pcount, -1)
+        if model.nam:
+            return contrib.sum(axis=1) + model.out_bias  # single SumReduce
+        h = contrib.mean(axis=1)                       # rows already ReLU'd
+        for bank in head_banks:
+            h = apply(bank, h)
+        return h
+
+    return ExecutionPlan(
+        [window_bank] + head_banks, forward, backend=backend, family="cnn"
+    )
+
+
+def _cnn_l_plan(model, backend, kw) -> ExecutionPlan:
+    from repro.nets.cnn import _packet_feats
+
+    bank1 = CompiledBank(model.bank1, **kw)
+    bank2 = CompiledBank(model.bank2, **kw)
+
+    def forward(apply, seq, payload):
+        x = _packet_feats(seq, payload) * 255.0        # [B, W, 62]
+        b, w, d = x.shape
+        h_pre = apply(bank1, x.reshape(-1, d))
+        e_pre = apply(bank2, h_pre)
+        emb = jnp.tanh(e_pre)
+        idx = hard_index(model.emb_tree, emb)
+        contrib = model.logit_lut[idx].reshape(b, w, -1)
+        return contrib.sum(axis=1) + model.bias
+
+    return ExecutionPlan([bank1, bank2], forward, backend=backend, family="cnn_l")
+
+
+def build_plan(
+    model: Any,
+    *,
+    backend: str = "onehot",
+    block_t: int = 256,
+    block_n: int = 256,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> ExecutionPlan:
+    """Compile any pegasusified model into an ExecutionPlan.
+
+    Dispatch is structural (no imports of the net modules at module scope):
+      * list/tuple of PegasusLinear  → sequential stack (MLP, AutoEncoder)
+      * ``.x_banks``/``.h_banks``    → PegasusRNN
+      * ``.window_bank``             → PegasusCNN (B and M/NAM)
+      * ``.emb_tree``/``.logit_lut`` → PegasusCNNL (two-level NAM)
+    """
+    kw = dict(block_t=block_t, block_n=block_n, block_k=block_k, interpret=interpret)
+    if isinstance(model, PegasusLinear):
+        return _sequential_plan([model], backend, kw)
+    if isinstance(model, (list, tuple)):
+        if not all(isinstance(l, PegasusLinear) for l in model):
+            raise TypeError("bank list must contain only PegasusLinear")
+        return _sequential_plan(model, backend, kw)
+    if hasattr(model, "x_banks") and hasattr(model, "h_banks"):
+        return _rnn_plan(model, backend, kw)
+    if hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
+        return _cnn_l_plan(model, backend, kw)
+    if hasattr(model, "window_bank"):
+        return _cnn_plan(model, backend, kw)
+    raise TypeError(f"don't know how to compile {type(model).__name__} into a plan")
+
+
+# ---------------------------------------------------------------------------
+# Plan memo — serving/benchmark call sites reuse one plan per model object.
+# ---------------------------------------------------------------------------
+
+# key → (model, plan): the entry pins the MODEL object itself, so a live
+# entry's id() can never be reused by a different model (CPython id reuse
+# only happens after the object is freed).
+_PLAN_CACHE: dict[tuple, tuple[Any, ExecutionPlan]] = {}
+_PLAN_CACHE_MAX = 64
+
+
+def _model_key(model: Any, interpret: bool, kw: dict) -> tuple:
+    if isinstance(model, (list, tuple)):
+        ids: tuple = tuple(id(l) for l in model)
+    else:
+        ids = (id(model),)
+    return (*ids, interpret, tuple(sorted(kw.items())))
+
+
+def _model_banks(model: Any) -> tuple:
+    """Current bank layers of a model, in plan construction order — used to
+    detect in-place mutation (e.g. ``peg.window_bank = refine(...)``) that
+    would otherwise hit the memo with a stale compiled plan."""
+    if isinstance(model, PegasusLinear):
+        return (model,)
+    if isinstance(model, (list, tuple)):
+        return tuple(model)
+    if hasattr(model, "x_banks") and hasattr(model, "h_banks"):
+        return (*model.x_banks, *model.h_banks, model.out_bank)
+    if hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
+        return (model.bank1, model.bank2)
+    if hasattr(model, "window_bank"):
+        return (model.window_bank, *model.head_banks)
+    return ()
+
+
+def plan_for(model: Any, *, interpret: bool = True, **kw) -> ExecutionPlan:
+    """Memoized build_plan. Plans are backend-agnostic here — pass the
+    backend per call (``plan(x, backend=...)``); binding a default belongs
+    to explicit build_plan. Block-size overrides participate in the key."""
+    key = _model_key(model, interpret, kw)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        cached_model, cached_plan = hit
+        if isinstance(model, (list, tuple)) and isinstance(cached_model, (list, tuple)):
+            same = len(cached_model) == len(model) and all(
+                a is b for a, b in zip(cached_model, model))
+        else:
+            same = cached_model is model
+        # reject hits whose compiled banks no longer match the model's
+        # current banks (in-place mutation like ``peg.out_bank = refine(...)``)
+        banks_now = _model_banks(model)
+        same = same and len(banks_now) == len(cached_plan.banks) and all(
+            cb.layer is l for cb, l in zip(cached_plan.banks, banks_now))
+        if same:
+            STATS.plan_cache_hits += 1
+            return cached_plan
+        del _PLAN_CACHE[key]
+    plan = build_plan(model, interpret=interpret, **kw)
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
+    _PLAN_CACHE[key] = (model, plan)
+    return plan
+
+
+def reset_plan_cache() -> None:
+    _PLAN_CACHE.clear()

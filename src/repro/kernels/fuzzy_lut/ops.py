@@ -7,13 +7,41 @@ and exposes a `PegasusLinear`-level entry point used by the serving stack
 
 from __future__ import annotations
 
+import weakref
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .kernel import fuzzy_lut_pallas
 
-__all__ = ["fuzzy_lut_matmul", "fuzzy_lut_matmul_q8", "prepare_feat_onehot"]
+__all__ = [
+    "fuzzy_lut_matmul", "fuzzy_lut_matmul_q8", "prepare_feat_onehot",
+    "quantized_lut_cached", "QUANT_STATS",
+]
+
+# int8-LUT memo: production deployments quantize offline exactly once; the
+# convenience wrapper below used to re-quantize the whole bank on EVERY call.
+# Keyed on the layer instance id; a weakref finalizer evicts the entry when
+# the layer dies so ids can be reused safely.
+QUANT_STATS = {"quantize_calls": 0, "cache_hits": 0}
+_Q8_MEMO: dict[int, tuple] = {}
+
+
+def quantized_lut_cached(layer) -> tuple[jax.Array, jax.Array]:
+    """(int8 LUT, per-group f32 scales) for a PegasusLinear, memoized."""
+    from .quantized import quantize_lut_int8
+
+    key = id(layer)
+    entry = _Q8_MEMO.get(key)
+    if entry is not None and entry[0]() is layer:
+        QUANT_STATS["cache_hits"] += 1
+        return entry[1], entry[2]
+    lut_q8, scales = quantize_lut_int8(layer.lut.astype(jnp.float32))
+    QUANT_STATS["quantize_calls"] += 1
+    ref = weakref.ref(layer, lambda _ref, key=key: _Q8_MEMO.pop(key, None))
+    _Q8_MEMO[key] = (ref, lut_q8, scales)
+    return lut_q8, scales
 
 
 def prepare_feat_onehot(features: jax.Array, group_size: int) -> jax.Array:
@@ -89,9 +117,10 @@ def fuzzy_lut_matmul_q8(
 
     Production deployments quantize offline and keep only the int8 LUT in
     HBM (half the bytes — the decode-roofline lever, EXPERIMENTS §Perf D4);
-    this wrapper quantizes on the fly for convenience.
+    the quantization is memoized per layer (``quantized_lut_cached``) so
+    repeated calls pay it exactly once.
     """
-    from .quantized import fuzzy_lut_q8_pallas, quantize_lut_int8
+    from .quantized import fuzzy_lut_q8_pallas
 
     k, v = layer.num_groups, layer.group_size
     n = layer.out_features
@@ -101,7 +130,7 @@ def fuzzy_lut_matmul_q8(
 
     feat_oh = prepare_feat_onehot(layer.trees.features, v)
     thr = layer.trees.thresholds
-    lut_q8, scales = quantize_lut_int8(layer.lut.astype(jnp.float32))
+    lut_q8, scales = quantized_lut_cached(layer)
 
     bt = min(block_t, max(8, t))
     xg_p = _pad_to(xg, 0, bt)

@@ -3,6 +3,11 @@ Pegasus LUT path as a first-class serving feature (--pegasus).
 
 ``serve_step`` is the unit the decode_32k/long_500k dry-run cells lower:
 one new token for the whole batch against preallocated caches/states.
+
+``PegasusServer`` is the dataplane-model analog: ONE compiled
+:class:`repro.engine.ExecutionPlan` (layouts + int8 LUTs precomputed at
+plan-build) reused across every request batch, with the backend —
+``gather | onehot | kernel | kernel_q8`` — chosen once via ``--backend``.
 """
 
 from __future__ import annotations
@@ -22,7 +27,7 @@ from repro.models.transformer import (
 
 from .mesh import batch_specs, decode_state_specs, named, param_specs
 
-__all__ = ["make_serve_step", "make_prefill_step", "Server"]
+__all__ = ["make_serve_step", "make_prefill_step", "Server", "PegasusServer"]
 
 
 def make_serve_step(cfg: ArchConfig):
@@ -74,13 +79,98 @@ class Server:
         return np.concatenate([np.asarray(t) for t in out], axis=1)
 
 
+class PegasusServer:
+    """Batched multi-request server over ONE cached ExecutionPlan.
+
+    The plan is compiled once in ``__init__`` (feature one-hots, padded
+    LUT/threshold tensors, int8 LUT + scales); every request batch after
+    that is pure compute on the bound backend. Requests may be single
+    inputs or tuples (e.g. ``(seq, payload)`` for CNN-L); requests are
+    fused into one plan call (chunked at ``max_batch``) and the outputs
+    split back out.
+
+    Every request input MUST carry a leading batch dim (wrap a single flow
+    as ``x[None]``) — axis 0 is always interpreted as the batch axis.
+    """
+
+    def __init__(self, model, *, backend: str = "onehot", interpret: bool = True,
+                 max_batch: int = 1024):
+        from repro.engine import build_plan
+
+        t0 = time.perf_counter()
+        self.plan = build_plan(model, backend=backend, interpret=interpret)
+        self.plan_build_ms = (time.perf_counter() - t0) * 1e3
+        self.backend = backend
+        self.max_batch = max_batch
+        self.requests_served = 0
+        self.batches_run = 0
+
+    def infer(self, *inputs, backend: str | None = None) -> jax.Array:
+        """One already-batched call through the cached plan (one request)."""
+        self.batches_run += 1
+        self.requests_served += 1
+        return self.plan(*inputs, backend=backend)
+
+    def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
+        """Fuse a list of requests into plan-sized batches and split results."""
+        if not requests:
+            return []
+        reqs = [tuple(r) if isinstance(r, (tuple, list)) else (r,) for r in requests]
+        sizes = [int(np.shape(r[0])[0]) for r in reqs]
+        n_in = len(reqs[0])
+        cat = [jnp.concatenate([jnp.asarray(r[i]) for r in reqs], axis=0)
+               for i in range(n_in)]
+        total = sum(sizes)
+        chunks = []
+        for start in range(0, total, self.max_batch):
+            sl = [c[start : start + self.max_batch] for c in cat]
+            chunks.append(self.plan(*sl, backend=backend))
+            self.batches_run += 1
+        out = jnp.concatenate(chunks, axis=0) if len(chunks) > 1 else chunks[0]
+        self.requests_served += len(reqs)
+        return [np.asarray(o) for o in jnp.split(out, np.cumsum(sizes)[:-1], axis=0)]
+
+
+def _pegasus_demo(args) -> None:
+    """--pegasus: train a tiny MLP on synthetic traffic, compile one plan,
+    and serve request batches on the chosen backend."""
+    from repro.data.synthetic_traffic import make_dataset
+    from repro.nets.mlp import pegasusify_mlp, train_mlp
+
+    ds = make_dataset("peerrush", flows_per_class=120)
+    mlp = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes, steps=120)
+    banks = pegasusify_mlp(mlp, ds.train["stats"].astype(np.float32), refine_steps=0)
+    server = PegasusServer(banks, backend=args.backend)
+    print(f"plan compiled in {server.plan_build_ms:.1f} ms "
+          f"({server.plan.num_banks} banks, backend={args.backend})")
+    x = ds.test["stats"].astype(np.float32)
+    requests = [x[i : i + args.batch] for i in range(0, min(len(x), 8 * args.batch), args.batch)]
+    server.serve(requests)  # warmup/compile
+    t0 = time.perf_counter()
+    outs = server.serve(requests)
+    dt = time.perf_counter() - t0
+    flows = sum(len(o) for o in outs)
+    print(f"served {len(requests)} requests ({flows} flows) in {dt * 1e3:.1f} ms "
+          f"→ {flows / dt:.0f} flows/s on backend={args.backend}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--pegasus", action="store_true",
+                    help="serve a pegasusified model via the execution engine")
+    ap.add_argument("--backend", default="onehot",
+                    choices=["gather", "onehot", "kernel", "kernel_q8"],
+                    help="engine backend bound to the serving plan")
     args = ap.parse_args()
+    if args.pegasus:
+        _pegasus_demo(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --pegasus is given")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     server = Server(cfg, mesh, batch_size=args.batch)

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.amm import PegasusLinear, apply_gather, init_pegasus_linear
+from repro.core.amm import PegasusLinear, init_pegasus_linear
+from repro.engine import plan_for
 from repro.train.optimizer import adamw_init, adamw_update, cosine_schedule
 
 __all__ = ["AutoEncoder", "train_autoencoder", "ae_apply", "reconstruction_error",
@@ -115,10 +116,11 @@ def pegasusify_ae(ae: AutoEncoder, x_calib: np.ndarray, *, depth: int = 8) -> li
     return banks
 
 
-def pegasus_ae_error(banks: list[PegasusLinear], x: jax.Array) -> jax.Array:
-    h = x.astype(jnp.float32)
-    for bank in banks:
-        h = apply_gather(bank, h)
+def pegasus_ae_error(
+    banks: list[PegasusLinear], x: jax.Array, *, backend: str = "gather"
+) -> jax.Array:
+    """Reconstruction MAE through the engine's bank-stack plan."""
+    h = plan_for(banks)(x, backend=backend)
     return jnp.abs(h - x.astype(jnp.float32) / 255.0).mean(axis=-1)
 
 

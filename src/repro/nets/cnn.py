@@ -24,11 +24,11 @@ import numpy as np
 
 from repro.core.amm import (
     PegasusLinear,
-    apply_gather,
     init_pegasus_bank,
     init_pegasus_linear,
 )
-from repro.core.fuzzy_tree import FuzzyTree, fit_tree, hard_index
+from repro.core.fuzzy_tree import FuzzyTree, fit_tree
+from repro.engine import plan_for
 
 from .common import train_classifier
 
@@ -172,17 +172,9 @@ def pegasusify_cnn(
     )
 
 
-def pegasus_cnn_apply(peg: PegasusCNN, x: jax.Array) -> jax.Array:
-    xf = x.astype(jnp.float32)
-    win = _windows(xf)                                   # [B, P, 6]
-    b, pcount, wdim = win.shape
-    flat = win.reshape(-1, wdim)
-    contrib = apply_gather(peg.window_bank, flat).reshape(b, pcount, -1)
-    if peg.nam:
-        return contrib.sum(axis=1) + peg.out_bias        # single SumReduce
-    h = contrib.mean(axis=1)                             # rows already ReLU'd
-    h = apply_gather(peg.head_banks[0], h)
-    return apply_gather(peg.head_banks[1], h)
+def pegasus_cnn_apply(peg: PegasusCNN, x: jax.Array, *, backend: str = "gather") -> jax.Array:
+    """Windowed deployment forward via the engine (B and M/NAM variants)."""
+    return plan_for(peg)(x, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -290,14 +282,9 @@ def pegasusify_cnn_l(
     )
 
 
-def pegasus_cnn_l_apply(peg: PegasusCNNL, seq: jax.Array, payload: jax.Array) -> jax.Array:
-    """Deployment forward: all-table encoding → 4-bit index → LUT sum."""
-    x = _packet_feats(seq, payload) * 255.0               # [B, W, 62]
-    b, w, d = x.shape
-    flat = x.reshape(-1, d)
-    h_pre = apply_gather(peg.bank1, flat)                 # tables
-    e_pre = apply_gather(peg.bank2, h_pre)                # tables (ReLU folded)
-    emb = jnp.tanh(e_pre)                                 # folds into emb_tree thresholds on-switch
-    idx = hard_index(peg.emb_tree, emb)                   # [B*W] fuzzy index
-    contrib = peg.logit_lut[idx].reshape(b, w, -1)
-    return contrib.sum(axis=1) + peg.bias
+def pegasus_cnn_l_apply(
+    peg: PegasusCNNL, seq: jax.Array, payload: jax.Array, *, backend: str = "gather"
+) -> jax.Array:
+    """Deployment forward via the engine: all-table encoding → fuzzy index →
+    LUT sum (the two-level NAM)."""
+    return plan_for(peg)(seq, payload, backend=backend)

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.amm import PegasusLinear, apply_gather, init_pegasus_linear
-from repro.kernels.fuzzy_lut.ops import fuzzy_lut_matmul
+from repro.core.amm import PegasusLinear, init_pegasus_linear
+from repro.engine import plan_for
 
 from .common import train_classifier
 
@@ -174,12 +174,10 @@ def pegasusify_mlp(
     return layers
 
 
-def pegasus_mlp_apply(layers: list[PegasusLinear], x: jax.Array, *, path: str = "gather") -> jax.Array:
-    """Run the fused bank stack (hard routing, deployment semantics)."""
-    h = x.astype(jnp.float32)
-    for layer in layers:
-        if path == "kernel":
-            h = fuzzy_lut_matmul(layer, h)
-        else:
-            h = apply_gather(layer, h)
-    return h
+def pegasus_mlp_apply(
+    layers: list[PegasusLinear], x: jax.Array, *,
+    backend: str = "gather", path: str | None = None,
+) -> jax.Array:
+    """Run the fused bank stack via the execution engine (hard routing,
+    deployment semantics). ``path`` is a deprecated alias for ``backend``."""
+    return plan_for(layers)(x, backend=path if path is not None else backend)

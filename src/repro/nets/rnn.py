@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.amm import PegasusLinear, apply_gather, init_pegasus_linear
+from repro.core.amm import PegasusLinear, init_pegasus_linear
+from repro.engine import plan_for
 
 from .common import train_classifier
 
@@ -146,12 +147,6 @@ def pegasusify_rnn(
     return peg
 
 
-def pegasus_rnn_apply(peg: PegasusRNN, x: jax.Array) -> jax.Array:
-    """Hard-routed deployment forward. x: [B, W, 2] uint8."""
-    xf = x.astype(jnp.float32)
-    h_pre = apply_gather(peg.x_banks[0], xf[:, 0])
-    for t in range(1, peg.window):
-        h_pre = apply_gather(peg.x_banks[t], xf[:, t]) + apply_gather(
-            peg.h_banks[t - 1], h_pre
-        )
-    return apply_gather(peg.out_bank, h_pre)
+def pegasus_rnn_apply(peg: PegasusRNN, x: jax.Array, *, backend: str = "gather") -> jax.Array:
+    """Hard-routed deployment forward via the engine. x: [B, W, 2] uint8."""
+    return plan_for(peg)(x, backend=backend)

@@ -14,6 +14,12 @@ from repro.models.transformer import (
 
 B, S = 2, 32
 
+# the heaviest smoke configs ride the full lane only
+_HEAVY = {"whisper_large_v3", "qwen2_vl_2b", "nemotron_4_340b", "phi3_5_moe"}
+ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a for a in ARCH_IDS
+]
+
 
 def _batch(cfg, key):
     ks = jax.random.split(key, 3)
@@ -31,7 +37,7 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_forward_and_loss(arch):
     cfg = smoke_config(arch)
     key = jax.random.PRNGKey(0)
@@ -47,6 +53,7 @@ def test_smoke_forward_and_loss(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_train_step_reduces_loss(arch):
     from repro.train.optimizer import adamw_init, adamw_update
 
@@ -69,7 +76,7 @@ def test_smoke_train_step_reduces_loss(arch):
     assert losses[-1] < losses[0], (arch, losses)  # memorizing one batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_decode_step(arch):
     cfg = smoke_config(arch)
     params = init_model(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
@@ -91,6 +98,7 @@ def test_smoke_decode_step(arch):
     assert changed, arch
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_for_dense():
     """Prefill-vs-decode consistency: greedy logits agree step by step."""
     cfg = smoke_config("deepseek_coder_33b")
@@ -126,6 +134,7 @@ def test_full_configs_param_counts():
         assert lo <= n <= hi, (arch, f"{n:.3e}", lo, hi)
 
 
+@pytest.mark.slow
 def test_chunked_attention_matches_naive():
     from repro.models.attention import _sdpa, _sdpa_chunked
     import jax

@@ -67,6 +67,7 @@ def test_hard_index_routes_to_nearest_region():
     assert err < 0.6 * base
 
 
+@pytest.mark.slow
 def test_soft_index_matches_hard_at_low_temperature():
     rng = np.random.default_rng(1)
     data = rng.normal(size=(256, 3)).astype(np.float32)
@@ -78,6 +79,7 @@ def test_soft_index_matches_hard_at_low_temperature():
     np.testing.assert_allclose(soft.sum(-1), 1.0, rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_soft_index_is_differentiable():
     rng = np.random.default_rng(2)
     data = rng.normal(size=(128, 2)).astype(np.float32)
@@ -259,6 +261,7 @@ def test_amm_approximates_dense(small_layer):
     assert rel < 0.45, rel
 
 
+@pytest.mark.slow
 def test_amm_soft_path_low_temp_matches_hard(small_layer):
     _, _, calib, layer = small_layer
     x = jnp.asarray(calib[:32])
@@ -271,6 +274,7 @@ def test_amm_soft_path_low_temp_matches_hard(small_layer):
     assert diff.max() < 0.1
 
 
+@pytest.mark.slow
 def test_refine_improves_hard_error():
     """Paper §4.4: backprop re-aligns tables when the clustering is stale.
 

@@ -1,0 +1,300 @@
+"""Execution-engine tests: backend parity across every net family, plan
+caching (no layout prep / quantization on the call path), and the q8 memo.
+
+Parity contract (ISSUE acceptance): through one ExecutionPlan,
+``gather == onehot == kernel`` bitwise-closely for MLP, RNN, CNN, CNN-L and
+AutoEncoder pegasus variants, and ``kernel_q8`` matches within int8
+quantization tolerance — exactly per-bank, and by prediction agreement at
+the net level (index flips near thresholds compound across stacked banks,
+so elementwise net-level bounds would be vacuous).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data.synthetic_traffic import make_dataset
+from repro.engine import BACKENDS, STATS, CompiledBank, build_plan, plan_for
+from repro.kernels.fuzzy_lut import ops
+
+pytestmark = pytest.mark.kernel   # every case exercises the Pallas backends
+
+FLOWS = 48
+STEPS = 5          # parity needs a trained-enough model, not an accurate one
+BATCH = 16
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset("peerrush", flows_per_class=FLOWS)
+
+
+def _mlp(ds):
+    from repro.nets.mlp import pegasusify_mlp, train_mlp
+
+    m = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes, steps=STEPS)
+    banks = pegasusify_mlp(m, ds.train["stats"].astype(np.float32),
+                           depth=3, refine_steps=0)
+    return banks, (jnp.asarray(ds.test["stats"][:BATCH], jnp.float32),)
+
+
+def _rnn(ds):
+    from repro.nets.rnn import pegasusify_rnn, train_rnn
+
+    m = train_rnn(ds.train["seq"], ds.train["label"], ds.num_classes, steps=STEPS)
+    return pegasusify_rnn(m, ds.train["seq"], depth=4), (
+        jnp.asarray(ds.test["seq"][:BATCH]),)
+
+
+def _cnn(ds):
+    from repro.nets.cnn import pegasusify_cnn, train_cnn
+
+    m = train_cnn(ds.train["seq"], ds.train["label"], ds.num_classes,
+                  size="B", steps=STEPS)
+    return pegasusify_cnn(m, ds.train["seq"], depth=5), (
+        jnp.asarray(ds.test["seq"][:BATCH]),)
+
+
+def _cnn_l(ds):
+    from repro.nets.cnn import pegasusify_cnn_l, train_cnn_l
+
+    m = train_cnn_l(ds.train["seq"], ds.train["bytes"], ds.train["label"],
+                    ds.num_classes, steps=STEPS)
+    peg = pegasusify_cnn_l(m, ds.train["seq"], ds.train["bytes"],
+                           enc_depth=4, index_bits=3)
+    return peg, (jnp.asarray(ds.test["seq"][:BATCH]),
+                 jnp.asarray(ds.test["bytes"][:BATCH]))
+
+
+def _ae(ds):
+    from repro.nets.autoencoder import pegasusify_ae, train_autoencoder
+
+    x = ds.train["seq"].reshape(len(ds.train["label"]), -1)
+    m = train_autoencoder(x, steps=STEPS)
+    banks = pegasusify_ae(m, x.astype(np.float32), depth=4)
+    xt = ds.test["seq"][:BATCH].reshape(BATCH, -1)
+    return banks, (jnp.asarray(xt, jnp.float32),)
+
+
+FAMILIES = {"mlp": _mlp, "rnn": _rnn, "cnn": _cnn, "cnn_l": _cnn_l, "ae": _ae}
+
+# mlp + ae are cheap enough for the fast CI lane; the windowed/unrolled
+# families train + compile for tens of seconds and ride the full lane.
+FAMILY_PARAMS = [
+    pytest.param("mlp"),
+    pytest.param("ae"),
+    pytest.param("rnn", marks=pytest.mark.slow),
+    pytest.param("cnn", marks=pytest.mark.slow),
+    pytest.param("cnn_l", marks=pytest.mark.slow),
+]
+
+_COMPILED: dict[str, tuple] = {}
+
+
+def _family(ds, family):
+    """Lazy per-family (model, plan, inputs) — built once, on first use."""
+    if family not in _COMPILED:
+        model, inputs = FAMILIES[family](ds)
+        _COMPILED[family] = (model, build_plan(model), inputs)
+    return _COMPILED[family]
+
+
+def _compiled(ds, family):
+    _, plan, inputs = _family(ds, family)
+    return plan, inputs
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_backend_parity(ds, family):
+    plan, inputs = _compiled(ds, family)
+    ref = np.asarray(plan(*inputs, backend="gather"))
+    assert np.isfinite(ref).all()
+
+    # exact backends: identical up to fp32 accumulation order
+    for be in ("onehot", "kernel"):
+        out = np.asarray(plan(*inputs, backend=be))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{family}:{be}")
+
+    # q8: quantization tolerance per bank, on the REAL activations each bank
+    # sees (random inputs land in degenerate leaves and say nothing)
+    for i, xb in enumerate(plan.bank_inputs(*inputs)):
+        bank = plan.banks[i]
+        yg = np.asarray(bank.apply(xb, "gather"))
+        yq = np.asarray(bank.apply(xb, "kernel_q8"))
+        denom = max(float(np.linalg.norm(yg)), 1e-6)
+        rel = float(np.linalg.norm(yq - yg)) / denom
+        assert rel < 0.12, (family, i, rel)
+    # … and agreeing predictions end-to-end (flips compound across banks)
+    outq = np.asarray(plan(*inputs, backend="kernel_q8"))
+    assert np.isfinite(outq).all()
+    if family != "ae":
+        agree = float((outq.argmax(-1) == ref.argmax(-1)).mean())
+        assert agree >= 0.75, (family, agree)
+    else:
+        rel = float(np.linalg.norm(outq - ref) / np.linalg.norm(ref))
+        assert rel < 0.25, (family, rel)
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_plan_call_does_no_layout_work(ds, family):
+    """Acceptance: after one warm call, further calls perform ZERO layout
+    prep and ZERO quantization on any backend."""
+    plan, inputs = _compiled(ds, family)
+    for be in BACKENDS:
+        plan(*inputs, backend=be)            # warm (layouts were plan-time anyway)
+    before_layout = STATS.layout_builds
+    before_quant = ops.QUANT_STATS["quantize_calls"]
+    for be in BACKENDS:
+        plan(*inputs, backend=be)
+    assert STATS.layout_builds == before_layout
+    assert ops.QUANT_STATS["quantize_calls"] == before_quant
+
+
+def test_bank_layout_built_once():
+    """CompiledBank does its layout work in __init__, not in apply()."""
+    from repro.core.amm import init_pegasus_linear
+
+    rng = np.random.default_rng(0)
+    layer = init_pegasus_linear(
+        rng.normal(size=(8, 6)).astype(np.float32), None,
+        rng.normal(size=(64, 8)).astype(np.float32), group_size=2, depth=3,
+        lut_bits=None)
+    before = STATS.layout_builds
+    bank = CompiledBank(layer)
+    assert STATS.layout_builds == before + 1
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    ref = np.asarray(bank.apply(x, "gather"))
+    for be in ("onehot", "kernel"):
+        np.testing.assert_allclose(np.asarray(bank.apply(x, be)), ref,
+                                   rtol=1e-4, atol=1e-5)
+    assert STATS.layout_builds == before + 1   # apply() never re-preps
+
+
+def test_pegasus_linear_compile_method():
+    """core/amm hook: PegasusLinear.compile() yields a single-bank plan."""
+    from repro.core.amm import apply_gather, init_pegasus_linear
+
+    rng = np.random.default_rng(3)
+    layer = init_pegasus_linear(
+        rng.normal(size=(8, 6)).astype(np.float32), None,
+        rng.normal(size=(64, 8)).astype(np.float32), group_size=2, depth=3,
+        lut_bits=None)
+    plan = layer.compile()
+    assert plan.num_banks == 1
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    ref = np.asarray(apply_gather(layer, x))
+    for be in BACKENDS[:3]:
+        np.testing.assert_allclose(np.asarray(plan(x, backend=be)), ref,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_q8_memo_quantizes_once():
+    """Satellite fix: fuzzy_lut_matmul_q8 must not re-quantize per call."""
+    from repro.core.amm import init_pegasus_linear
+    from repro.kernels.fuzzy_lut.ops import fuzzy_lut_matmul_q8
+
+    rng = np.random.default_rng(1)
+    layer = init_pegasus_linear(
+        rng.normal(size=(8, 6)).astype(np.float32), None,
+        rng.normal(size=(64, 8)).astype(np.float32), group_size=2, depth=3,
+        lut_bits=None)
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    fuzzy_lut_matmul_q8(layer, x)
+    calls = ops.QUANT_STATS["quantize_calls"]
+    hits = ops.QUANT_STATS["cache_hits"]
+    fuzzy_lut_matmul_q8(layer, x)
+    fuzzy_lut_matmul_q8(layer, x)
+    assert ops.QUANT_STATS["quantize_calls"] == calls        # no re-quant
+    assert ops.QUANT_STATS["cache_hits"] >= hits + 2
+
+
+def test_q8_memo_evicts_dead_layers():
+    import gc
+
+    from repro.core.amm import init_pegasus_linear
+
+    rng = np.random.default_rng(2)
+    layer = init_pegasus_linear(
+        rng.normal(size=(4, 3)).astype(np.float32), None,
+        rng.normal(size=(32, 4)).astype(np.float32), group_size=2, depth=2,
+        lut_bits=None)
+    ops.quantized_lut_cached(layer)
+    key = id(layer)
+    assert key in ops._Q8_MEMO
+    del layer
+    gc.collect()
+    assert key not in ops._Q8_MEMO
+
+
+def test_plan_for_memoizes(ds):
+    banks, _, inputs = _family(ds, "mlp")
+    hits = STATS.plan_cache_hits
+    p1 = plan_for(banks)
+    p2 = plan_for(banks)
+    assert p1 is p2
+    assert STATS.plan_cache_hits == hits + 1
+    np.testing.assert_allclose(
+        np.asarray(p1(*inputs, backend="onehot")),
+        np.asarray(p1(*inputs, backend="gather")), rtol=1e-4, atol=1e-4)
+
+
+def test_plan_for_detects_inplace_mutation(ds):
+    """Reassigning a bank on the model must invalidate the memo — otherwise
+    the engine would keep serving logits from the pre-mutation tables."""
+    import dataclasses as dc
+
+    banks, _, inputs = _family(ds, "mlp")
+    model = list(banks)
+    p1 = plan_for(model)
+    y1 = np.asarray(p1(*inputs, backend="gather"))
+    assert plan_for(model) is p1                    # unchanged → memo hit
+    # simulate refine(): replace a bank with a copy (new object, same arrays)
+    model[-1] = dc.replace(model[-1])
+    p2 = plan_for(model)
+    assert p2 is not p1                             # mutation → rebuilt
+    np.testing.assert_allclose(
+        np.asarray(p2(*inputs, backend="gather")), y1, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_plan_for_detects_wrapper_mutation(ds):
+    """Same for attribute reassignment on a wrapper model (id-stable key):
+    the memo must notice the compiled banks no longer match the model's."""
+    import dataclasses as dc
+
+    model, _, inputs = _family(ds, "cnn")
+    p1 = plan_for(model)
+    assert plan_for(model) is p1
+    model.window_bank = dc.replace(model.window_bank)   # refine()-style swap
+    p2 = plan_for(model)
+    assert p2 is not p1
+    np.testing.assert_allclose(
+        np.asarray(p2(*inputs, backend="gather")),
+        np.asarray(p1(*inputs, backend="gather")), rtol=1e-6, atol=1e-6)
+
+
+def test_unknown_backend_rejected(ds):
+    banks, plan, inputs = _family(ds, "mlp")
+    with pytest.raises(ValueError, match="unknown backend"):
+        plan(*inputs, backend="dense")
+    with pytest.raises(ValueError, match="unknown backend"):
+        build_plan(banks, backend="nope")
+
+
+def test_pegasus_server_batches(ds):
+    from repro.launch.serve import PegasusServer
+
+    banks, plan, (x,) = _family(ds, "mlp")
+    server = PegasusServer(banks, backend="onehot", max_batch=8)
+    reqs = [np.asarray(x[i : i + 4]) for i in range(0, 16, 4)]
+    outs = server.serve(reqs)
+    assert len(outs) == 4 and all(o.shape[0] == 4 for o in outs)
+    ref = np.asarray(plan(x, backend="onehot"))
+    np.testing.assert_allclose(np.concatenate(outs), ref, rtol=1e-5, atol=1e-5)
+    assert server.requests_served == 4
+    assert server.batches_run == 2                 # 16 flows / max_batch=8
+    # second round reuses the SAME plan: no new layout/quant work
+    before = STATS.layout_builds
+    server.serve(reqs)
+    assert STATS.layout_builds == before

@@ -39,8 +39,8 @@ SHAPE_SWEEP = [
     (16, 4, 4, 2, 8, (8, 8, 2)),
     (32, 8, 4, 3, 16, (16, 16, 4)),
     (64, 16, 8, 4, 32, (32, 32, 8)),
-    (128, 32, 4, 4, 64, (64, 64, 16)),
-    (256, 64, 2, 5, 128, (128, 128, 32)),
+    pytest.param(128, 32, 4, 4, 64, (64, 64, 16), marks=pytest.mark.slow),
+    pytest.param(256, 64, 2, 5, 128, (128, 128, 32), marks=pytest.mark.slow),
 ]
 
 

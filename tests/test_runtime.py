@@ -123,6 +123,7 @@ def test_trainloop_runs_and_loss_finite(small_mesh, tmp_path):
     assert ckpt.latest_step(str(tmp_path)) == 4
 
 
+@pytest.mark.slow
 def test_crash_recovery_resumes_identically(small_mesh, tmp_path):
     """Train 6 steps straight vs 3 + 'crash' + restore + 3: same params."""
     cfg = smoke_config("qwen2_vl_2b")
@@ -152,6 +153,7 @@ def test_crash_recovery_resumes_identically(small_mesh, tmp_path):
     np.testing.assert_allclose(w_straight, w_resumed, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_grad_compression_small_error():
     """bf16 gradient compression: <1% relative error on the update."""
     cfg = smoke_config("granite_20b")
@@ -165,6 +167,7 @@ def test_grad_compression_small_error():
     assert (num / den) ** 0.5 < 0.01
 
 
+@pytest.mark.slow
 def test_microbatched_step_matches_full_batch():
     cfg = smoke_config("qwen2_vl_2b")
     params = init_model(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)

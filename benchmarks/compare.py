@@ -1,0 +1,183 @@
+"""Bench-regression gate: diff a fresh throughput run against the committed
+baseline and fail CI on warm per-call regressions.
+
+Usage (what the ``bench-quick`` CI job runs):
+
+    python -m benchmarks.compare --baseline /tmp/bench-baseline.json \
+        --fresh BENCH_throughput.json --history-dir .bench-history
+
+Gate: for every backend present in BOTH files' ``engine.backends``, the
+fresh jit-warm ``per_call_ms`` must not exceed baseline by more than
+``--threshold`` (default 25%). The engine bench always runs at the same
+batch (throughput.ENGINE_BATCH) in quick and full mode precisely so this
+comparison is apples-to-apples; a batch mismatch aborts rather than gating
+on garbage.
+
+Caveat the threshold must absorb: the committed baseline carries the
+absolute ms of whatever host produced it. Timings use min-of-N (stable
+within ~10% across runs on one host), but a materially slower/faster runner
+class shifts every backend together — if CI moves hosts, regenerate the
+baseline there (run the quick bench on the new host and commit its JSON)
+rather than widening the threshold.
+
+History: ``--history-dir`` appends the fresh JSON (one file per run) and
+prints a per-backend trajectory table across the stored runs — to stdout
+and, when ``$GITHUB_STEP_SUMMARY`` is set, to the job summary. CI persists
+the directory across runs via ``actions/cache``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import shutil
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+GATED_SECTION = ("engine", "backends")
+HISTORY_KEEP = 30
+
+
+def _load(path: pathlib.Path) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _engine_backends(doc: dict) -> dict:
+    sec = doc
+    for k in GATED_SECTION:
+        sec = sec.get(k, {})
+    return sec
+
+
+def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], list[str]]:
+    """Return (report lines, regression lines). Non-empty regressions = fail."""
+    base_be = _engine_backends(baseline)
+    fresh_be = _engine_backends(fresh)
+    b_batch = baseline.get("engine", {}).get("batch")
+    f_batch = fresh.get("engine", {}).get("batch")
+    if not base_be or not fresh_be:
+        raise SystemExit("compare: engine.backends missing from baseline or fresh run")
+    if b_batch != f_batch:
+        raise SystemExit(
+            f"compare: engine batch mismatch (baseline {b_batch} vs fresh {f_batch}); "
+            "refusing to gate on incomparable runs")
+
+    lines, regressions = [], []
+    lines.append(f"gate: engine.backends per_call_ms @ batch {f_batch}, "
+                 f"threshold +{threshold:.0%}")
+    for be in sorted(set(base_be) & set(fresh_be)):
+        b = base_be[be]["per_call_ms"]
+        f = fresh_be[be]["per_call_ms"]
+        ratio = f / b if b > 0 else float("inf")
+        verdict = "OK"
+        if ratio > 1 + threshold:
+            verdict = "REGRESSION"
+            regressions.append(
+                f"{be}: {b:.2f} ms → {f:.2f} ms ({ratio:.2f}x > {1 + threshold:.2f}x)")
+        lines.append(f"  {be:9s} {b:9.2f} ms → {f:9.2f} ms  ({ratio:5.2f}x)  {verdict}")
+    missing = sorted(set(base_be) - set(fresh_be))
+    if missing:
+        regressions.append(f"backends missing from fresh run: {missing}")
+
+    # families are informational (not gated): different PRs may add/resize them
+    for fam, fres in sorted(fresh.get("families", {}).items()):
+        bres = baseline.get("families", {}).get(fam)
+        for be, v in sorted(fres.get("backends", {}).items()):
+            prev = (bres or {}).get("backends", {}).get(be, {}).get("per_call_ms")
+            delta = f" (was {prev:.2f})" if prev else ""
+            lines.append(f"  [info] {fam}/{be}: {v['per_call_ms']:.2f} ms{delta}")
+    return lines, regressions
+
+
+def _append_history(history_dir: pathlib.Path, fresh_path: pathlib.Path) -> list[pathlib.Path]:
+    history_dir.mkdir(parents=True, exist_ok=True)
+    run_id = os.environ.get("GITHUB_RUN_ID", "local")
+    stamp = time.strftime("%Y%m%dT%H%M%S", time.gmtime())
+    shutil.copy(fresh_path, history_dir / f"{stamp}-{run_id}.json")
+    runs = sorted(history_dir.glob("*.json"))
+    for old in runs[:-HISTORY_KEEP]:          # bound the cache size
+        old.unlink()
+    return sorted(history_dir.glob("*.json"))
+
+
+def trajectory_table(runs: list[pathlib.Path], limit: int = 10) -> str:
+    """Markdown table: one row per stored run, one column per backend."""
+    rows = []
+    backends: list[str] = []
+    for p in runs[-limit:]:
+        try:
+            doc = _load(p)
+        except (OSError, json.JSONDecodeError):
+            continue
+        be = _engine_backends(doc)
+        if not be:
+            continue
+        backends = sorted(set(backends) | set(be))
+        rows.append((p.stem, {k: v.get("per_call_ms") for k, v in be.items()}))
+    if not rows:
+        return "(no bench history yet)"
+    head = "| run | " + " | ".join(f"{b} ms" for b in backends) + " |"
+    sep = "|---" * (len(backends) + 1) + "|"
+    body = [
+        "| " + name + " | " + " | ".join(
+            f"{vals.get(b):.2f}" if vals.get(b) is not None else "—"
+            for b in backends) + " |"
+        for name, vals in rows
+    ]
+    return "\n".join([head, sep, *body])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=pathlib.Path,
+                    default=REPO / "BENCH_throughput.json",
+                    help="committed baseline JSON (gate reference)")
+    ap.add_argument("--fresh", type=pathlib.Path,
+                    default=REPO / "BENCH_throughput.json",
+                    help="freshly produced bench JSON")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed warm per-call regression (0.25 = +25%%)")
+    ap.add_argument("--history-dir", type=pathlib.Path, default=None,
+                    help="append the fresh run and print a trajectory table")
+    args = ap.parse_args()
+    if args.baseline.resolve() == args.fresh.resolve():
+        raise SystemExit(
+            "compare: --baseline and --fresh resolve to the same file "
+            f"({args.baseline}) — comparing a run with itself always passes. "
+            "Stash the committed baseline first (e.g. `git show "
+            "HEAD:BENCH_throughput.json > /tmp/baseline.json`) or write the "
+            "fresh run elsewhere (`benchmarks.run --out fresh.json`).")
+
+    baseline = _load(args.baseline)
+    fresh = _load(args.fresh)
+    lines, regressions = compare(baseline, fresh, args.threshold)
+    report = "\n".join(lines)
+    print(report)
+
+    summary_parts = ["## Bench gate", "```", report, "```"]
+    if args.history_dir is not None:
+        runs = _append_history(args.history_dir, args.fresh)
+        table = trajectory_table(runs)
+        print("\nbench trajectory (jit-warm per-call ms):\n" + table)
+        summary_parts += ["## Bench trajectory (warm per-call ms)", table]
+
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write("\n".join(summary_parts) + "\n")
+
+    if regressions:
+        print("\nBENCH REGRESSION (>" + f"{args.threshold:.0%} warm per-call):",
+              file=sys.stderr)
+        for r in regressions:
+            print("  " + r, file=sys.stderr)
+        sys.exit(1)
+    print("\nbench gate: PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small sizes for CI")
     ap.add_argument("--only", default=None, help="run a single benchmark")
+    ap.add_argument("--out", type=pathlib.Path, default=BENCH_JSON,
+                    help="where to write the throughput trajectory JSON")
     args = ap.parse_args()
 
     from benchmarks import accuracy, anomaly, flow_scalability, fusion_ablation, resources, throughput
@@ -62,9 +64,10 @@ def main() -> None:
     th = derived_by_name.get("throughput_fig9")
     if isinstance(th, dict):
         # machine-readable perf trajectory: tok/s, plan-build ms, per-call ms
-        # per backend — future PRs diff this file against their own run.
-        BENCH_JSON.write_text(json.dumps(th, indent=2, sort_keys=True) + "\n")
-        print(f"\nwrote {BENCH_JSON}")
+        # per backend — benchmarks/compare.py gates CI on regressions vs the
+        # committed copy of this file.
+        args.out.write_text(json.dumps(th, indent=2, sort_keys=True) + "\n")
+        print(f"\nwrote {args.out}")
 
     print("\n" + "\n".join(csv_lines))
     if any("FAILED" in l for l in csv_lines):

@@ -5,6 +5,16 @@ compiles runs at line rate — 12.8 Tb/s on Tofino 2 regardless of DL model
 size). The CPU side is MEASURED: batched dense inference in JAX on this
 host. GPU numbers from the paper's setup cannot be measured here and are
 reported as n/a. Clearly labeled modeled-vs-measured, per DESIGN.md §7.
+
+Engine sections (the perf-trajectory JSON future PRs gate against,
+see benchmarks/compare.py):
+  * ``engine``       — MLP plan at batch 1024 (the acceptance anchor):
+                       jit-warm vs eager per-bank dispatch vs plan-rebuild
+                       cold, per backend, plus whole-plan compile counts.
+  * ``families``     — RNN / CNN / AE plans, jit-warm per backend.
+  * ``batch_ladder`` — one MLP plan called across a ladder of odd batch
+                       sizes: the bucket set stays smaller than the batch
+                       set, proving bucketing bounds the compile cache.
 """
 
 from __future__ import annotations
@@ -21,6 +31,13 @@ from repro.nets.mlp import mlp_apply, pegasusify_mlp, train_mlp
 
 LINE_RATE_BPS = 12.8e12          # Tofino 2 aggregate
 AVG_PKT_BITS = 800 * 8           # 800B average packet
+
+# acceptance anchor: the committed BENCH_throughput.json measures THIS batch;
+# quick mode shrinks training/iters but never the batch, so CI quick runs
+# stay comparable to the committed baseline (compare.py refuses mismatches).
+ENGINE_BATCH = 1024
+FAMILY_BATCH = 256
+
 
 def modeled_switch_pps() -> float:
     return LINE_RATE_BPS / AVG_PKT_BITS
@@ -43,24 +60,48 @@ def measured_cpu_pps(batch: int = 4096, iters: int = 20) -> tuple[float, float]:
     return batch / dt, dt * 1e6
 
 
-def engine_backend_bench(quick: bool = False) -> dict:
-    """Plan caching vs per-call plan rebuild, per engine backend.
+def _tile_to(x: np.ndarray, batch: int) -> np.ndarray:
+    reps = (batch // len(x) + 1,) + (1,) * (x.ndim - 1)
+    return np.tile(x, reps)[:batch]
 
-    ``cold`` rebuilds the ExecutionPlan before every call; ``warm`` reuses
-    ONE plan. For the kernel/kernel_q8 backends cold matches the pre-engine
-    per-call behavior (one-hots, padding, quantization re-derived each
-    invocation); for gather/onehot — which never needed layouts — the ratio
-    measures pure plan-build overhead, not a pre-engine regression.
+
+def _timed_call(fn, iters: int) -> float:
+    """Min wall ms over ``iters`` calls.
+
+    Min, not mean/median: on shared 2-core CI runners the per-iteration
+    spread is routinely 2-3x (scheduler bursts, cgroup throttling), and the
+    regression gate compares absolute numbers across runs — the minimum is
+    the reproducible compute floor (noise only ever ADDS latency), measured
+    stable within ~10% across configs and repeats on the reference host.
     """
-    batch = 256 if quick else 1024
-    iters = 3 if quick else 10
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.min(times))
+
+
+def engine_backend_bench(quick: bool = False) -> dict:
+    """Whole-plan jit vs eager per-bank dispatch vs per-call plan rebuild.
+
+    ``per_call_ms`` (the regression-gated number) is the jit-warm MIN over
+    ``iters`` calls (see ``_timed_call`` for why min): one XLA computation
+    per (backend, bucket), zero Python-per-bank work.
+    ``per_call_eager_ms`` is the pre-jit engine behavior (plan cached, but
+    every bank dispatched eagerly per call); ``per_call_cold_ms`` rebuilds
+    the plan before every call (the pre-engine behavior: layout prep +
+    quantization re-derived each invocation).
+    """
+    batch = ENGINE_BATCH
+    iters = 30 if quick else 40       # warm min needs samples (see _timed_call)
+    eager_iters = 5 if quick else 10
+    cold_iters = 2 if quick else 5
     ds = make_dataset("peerrush", flows_per_class=120 if quick else 300)
     m = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes,
                   steps=60 if quick else 150)
     banks = pegasusify_mlp(m, ds.train["stats"].astype(np.float32), refine_steps=0)
-    x = jnp.asarray(
-        np.tile(ds.test["stats"], (batch // len(ds.test["stats"]) + 1, 1))[:batch],
-        jnp.float32)
+    x = jnp.asarray(_tile_to(ds.test["stats"], batch), jnp.float32)
 
     t0 = time.perf_counter()
     plan = build_plan(banks)
@@ -71,27 +112,126 @@ def engine_backend_bench(quick: bool = False) -> dict:
     result = {"plan_build_ms": plan_build_ms, "batch": batch, "iters": iters,
               "quick": quick, "backends": {}}
     for be in BACKENDS:
-        plan(x, backend=be).block_until_ready()            # warmup/compile
         t0 = time.perf_counter()
-        for _ in range(iters):
-            plan(x, backend=be).block_until_ready()
-        warm_ms = (time.perf_counter() - t0) / iters * 1e3
+        plan(x, backend=be).block_until_ready()            # trace + compile
+        compile_ms = (time.perf_counter() - t0) * 1e3
+        warm_ms = _timed_call(lambda: plan(x, backend=be), iters)
+
+        plan(x, backend=be, jit=False).block_until_ready()
+        eager_ms = _timed_call(lambda: plan(x, backend=be, jit=False), eager_iters)
 
         t0 = time.perf_counter()
-        for _ in range(iters):
+        for _ in range(cold_iters):
             _Q8_MEMO.clear()                               # defeat the q8 memo
-            build_plan(banks)(x, backend=be).block_until_ready()
-        cold_ms = (time.perf_counter() - t0) / iters * 1e3
+            build_plan(banks)(x, backend=be, jit=False).block_until_ready()
+        cold_ms = (time.perf_counter() - t0) / cold_iters * 1e3
 
         result["backends"][be] = {
             "per_call_ms": warm_ms,
+            "per_call_eager_ms": eager_ms,
             "per_call_cold_ms": cold_ms,
+            "compile_ms": compile_ms,
             "tok_s": batch / (warm_ms / 1e3),
-            "plan_cache_speedup": cold_ms / warm_ms,
+            "jit_speedup": eager_ms / warm_ms,
+            # cold/eager, NOT cold/warm: both sides run the same eager
+            # per-bank mode, so this isolates plan caching from the jit win
+            # (which jit_speedup reports) and stays comparable across PRs.
+            "plan_cache_speedup": cold_ms / eager_ms,
         }
-        print(f"engine[{be:9s}] warm {warm_ms:8.2f} ms  cold {cold_ms:8.2f} ms "
-              f"({cold_ms / warm_ms:5.1f}x)  {batch / (warm_ms / 1e3):12.0f} flows/s")
+        print(f"engine[{be:9s}] warm {warm_ms:8.2f} ms  eager {eager_ms:8.2f} ms "
+              f"cold {cold_ms:8.2f} ms  ({eager_ms / warm_ms:4.1f}x jit, "
+              f"{cold_ms / eager_ms:4.1f}x vs rebuild)  "
+              f"{batch / (warm_ms / 1e3):12.0f} flows/s")
+    result["compile"] = plan.compile_stats()
     return result
+
+
+def batch_ladder_bench(quick: bool = False) -> dict:
+    """Call ONE plan across a ladder of odd batch sizes.
+
+    Bucketing means the number of compiled buckets stays below the number of
+    distinct batch sizes — the trajectory JSON records both so regressions
+    in the bucket policy (e.g. retrace-per-shape) are visible.
+    """
+    batches = (48, 64, 100, 256, 777) if quick else (48, 64, 100, 256, 777, 1024)
+    iters = 5 if quick else 8
+    ds = make_dataset("peerrush", flows_per_class=120)
+    m = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes, steps=60)
+    banks = pegasusify_mlp(m, ds.train["stats"].astype(np.float32), refine_steps=0)
+    plan = build_plan(banks)
+    xs = {b: jnp.asarray(_tile_to(ds.test["stats"], b), jnp.float32) for b in batches}
+
+    per_backend: dict = {}
+    for be in ("gather", "kernel"):
+        per_backend[be] = {}
+        for b in batches:
+            plan(xs[b], backend=be).block_until_ready()    # warm the bucket
+            per_backend[be][str(b)] = _timed_call(
+                lambda: plan(xs[b], backend=be), iters)
+    stats = plan.compile_stats()
+    buckets = sorted({bk for _, bk in stats["buckets"]})
+    print(f"ladder: {len(batches)} batch sizes → {len(buckets)} buckets "
+          f"{buckets}, {stats['traces']} traces, "
+          f"{stats['bucket_hits']} bucket hits")
+    return {"batches": list(batches), "per_backend": per_backend,
+            "buckets": buckets, "traces": stats["traces"],
+            "jit_calls": stats["jit_calls"]}
+
+
+def _family_models(ds, quick: bool):
+    """Small-but-valid teachers per family (parity needs a trained-enough
+    model, not an accurate one — same trade the engine tests make)."""
+    steps = 30 if quick else 60
+
+    def rnn():
+        from repro.nets.rnn import pegasusify_rnn, train_rnn
+
+        m = train_rnn(ds.train["seq"], ds.train["label"], ds.num_classes, steps=steps)
+        return pegasusify_rnn(m, ds.train["seq"], depth=4), (ds.test["seq"],)
+
+    def cnn():
+        from repro.nets.cnn import pegasusify_cnn, train_cnn
+
+        m = train_cnn(ds.train["seq"], ds.train["label"], ds.num_classes,
+                      size="B", steps=steps)
+        return pegasusify_cnn(m, ds.train["seq"], depth=5), (ds.test["seq"],)
+
+    def ae():
+        from repro.nets.autoencoder import pegasusify_ae, train_autoencoder
+
+        x = ds.train["seq"].reshape(len(ds.train["label"]), -1)
+        m = train_autoencoder(x, steps=steps)
+        banks = pegasusify_ae(m, x.astype(np.float32), depth=4)
+        return banks, (ds.test["seq"].reshape(len(ds.test["label"]), -1),)
+
+    return {"rnn": rnn, "cnn": cnn, "ae": ae}
+
+
+def family_sweep(quick: bool = False) -> dict:
+    """Jit-warm per-call per backend for the non-MLP families."""
+    batch = FAMILY_BATCH
+    iters = 8 if quick else 12
+    ds = make_dataset("peerrush", flows_per_class=48 if quick else 96)
+    out: dict = {}
+    for fam, make in _family_models(ds, quick).items():
+        model, raw_inputs = make()
+        inputs = tuple(jnp.asarray(_tile_to(np.asarray(r), batch)) for r in raw_inputs)
+        t0 = time.perf_counter()
+        plan = build_plan(model)
+        build_ms = (time.perf_counter() - t0) * 1e3
+        fam_res = {"batch": batch, "plan_build_ms": build_ms, "backends": {}}
+        for be in BACKENDS:
+            plan(*inputs, backend=be).block_until_ready()   # trace + compile
+            warm_ms = _timed_call(lambda: plan(*inputs, backend=be), iters)
+            fam_res["backends"][be] = {
+                "per_call_ms": warm_ms,
+                "tok_s": batch / (warm_ms / 1e3),
+            }
+            print(f"family[{fam:4s}][{be:9s}] warm {warm_ms:8.2f} ms  "
+                  f"{batch / (warm_ms / 1e3):12.0f} flows/s")
+        fam_res["jit_traces"] = plan.compile_stats()["traces"]
+        out[fam] = fam_res
+    return out
 
 
 def main(quick: bool = False):
@@ -101,7 +241,10 @@ def main(quick: bool = False):
     print(f"cpu(measured, this host)   pps={cpu_pps:.3e}  us_per_batch={us:.1f}")
     print(f"speedup(modeled/measured)  {sw / cpu_pps:.0f}x")
     engine = engine_backend_bench(quick=quick)
-    return dict(switch_pps=sw, cpu_pps=cpu_pps, speedup=sw / cpu_pps, engine=engine)
+    ladder = batch_ladder_bench(quick=quick)
+    families = family_sweep(quick=quick)
+    return dict(switch_pps=sw, cpu_pps=cpu_pps, speedup=sw / cpu_pps,
+                engine=engine, batch_ladder=ladder, families=families)
 
 
 if __name__ == "__main__":

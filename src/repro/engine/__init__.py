@@ -1,19 +1,25 @@
-"""Unified Pegasus execution engine (backend-dispatched, plan-cached).
+"""Unified Pegasus execution engine (whole-plan jitted, backend-dispatched).
 
 One compilation step — :func:`build_plan` — turns ANY pegasusified model
 (MLP bank list, PegasusRNN, PegasusCNN, PegasusCNNL, AutoEncoder bank list)
 into a reusable :class:`ExecutionPlan`: the kernel layouts (feature one-hots,
 block-padded LUT/threshold tensors, int8-quantized LUT + scales) are built
-ONCE at plan time, and every subsequent call is pure compute on one of the
-four backends ``{"gather", "onehot", "kernel", "kernel_q8"}``.
+ONCE at plan time, and every call traces the ENTIRE forward into one jitted
+XLA computation per ``(backend, batch-bucket)`` — request batches are padded
+up to a bounded bucket ladder (:data:`DEFAULT_BUCKETS`) so varying sizes hit
+a warm compile cache. Backends: ``{"gather", "onehot", "kernel",
+"kernel_q8"}``; compile-cache behavior is observable via :data:`STATS`
+(``jit_traces`` / ``jit_calls``) and ``plan.compile_stats()``.
 """
 
 from .plan import (
     BACKENDS,
+    DEFAULT_BUCKETS,
     STATS,
     CompiledBank,
     EngineStats,
     ExecutionPlan,
+    bucket_batch,
     build_plan,
     plan_for,
     reset_plan_cache,
@@ -21,10 +27,12 @@ from .plan import (
 
 __all__ = [
     "BACKENDS",
+    "DEFAULT_BUCKETS",
     "STATS",
     "CompiledBank",
     "EngineStats",
     "ExecutionPlan",
+    "bucket_batch",
     "build_plan",
     "plan_for",
     "reset_plan_cache",

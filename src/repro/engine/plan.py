@@ -8,10 +8,19 @@ module does the same for the TPU realization:
 
   * :class:`CompiledBank` — one ``PegasusLinear`` plus every tensor the fused
     Pallas kernel needs, built exactly once (`feat_onehot`, +inf-padded
-    thresholds, block-padded LUT, int8 LUT + per-group scales).
+    thresholds, block-padded LUT, int8 LUT + per-group scales). Registered as
+    a jax pytree so a whole plan's banks flow through ``jax.jit`` as traced
+    state rather than baked-in constants.
   * :class:`ExecutionPlan` — the whole model: compiled banks + a structural
     forward (sequential stack, windowed CNN, unrolled RNN, two-level NAM)
-    with the backend chosen globally instead of per-layer-call.
+    that is a *pure function* of ``(state, inputs)`` closed over static
+    shapes, so the entire forward traces into ONE jitted XLA computation per
+    ``(backend, batch-bucket)``.
+  * **Batch bucketing** — request batches are zero-padded up to a bounded
+    set of bucket sizes (powers of two by default, multiples of the largest
+    bucket beyond it), so varying request sizes hit a warm compile cache
+    instead of retracing per shape. ``EngineStats.jit_traces`` counts actual
+    XLA traces; the compile-count tests pin the invariants.
   * :func:`build_plan` / :func:`plan_for` — compile, or fetch the memoized
     plan for a model object (bounded cache, strong refs pin ids).
 
@@ -33,16 +42,22 @@ import numpy as np
 
 from repro.core.amm import PegasusLinear, apply_gather, apply_onehot
 from repro.core.fuzzy_tree import hard_index
-from repro.kernels.fuzzy_lut.kernel import fuzzy_lut_pallas
+from repro.kernels.fuzzy_lut.kernel import (
+    default_interpret,
+    fuzzy_lut_pallas,
+    resolve_strategy,
+)
 from repro.kernels.fuzzy_lut.ops import prepare_feat_onehot, quantized_lut_cached
 from repro.kernels.fuzzy_lut.quantized import fuzzy_lut_q8_pallas
 
 __all__ = [
     "BACKENDS",
+    "DEFAULT_BUCKETS",
     "STATS",
     "CompiledBank",
     "EngineStats",
     "ExecutionPlan",
+    "bucket_batch",
     "build_plan",
     "plan_for",
     "reset_plan_cache",
@@ -50,22 +65,45 @@ __all__ = [
 
 BACKENDS = ("gather", "onehot", "kernel", "kernel_q8")
 
+# Bounded bucket set: odd batch sizes round UP to the nearest bucket (zero
+# rows are sliced off after the call), so the jit cache holds at most
+# ``len(DEFAULT_BUCKETS)`` entries per backend for any batch ≤ the largest
+# bucket; beyond it, batches round to multiples of the largest bucket.
+DEFAULT_BUCKETS: tuple[int, ...] = (8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096)
+
+
+def bucket_batch(b: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
+    """Round a batch size up to its compile bucket (smallest bucket ≥ b;
+    beyond the largest, the next multiple of it)."""
+    if b <= 0:
+        raise ValueError(f"batch must be positive, got {b}")
+    for s in sorted(buckets):
+        if b <= s:
+            return int(s)
+    top = int(max(buckets))
+    return -(-b // top) * top
+
 
 @dataclasses.dataclass
 class EngineStats:
     """Global counters — the parity/caching tests assert layout work happens
-    at plan-build time only, never on the call path."""
+    at plan-build time only, and whole-plan XLA traces happen at most once
+    per (backend, batch-bucket), never per call."""
 
     layout_builds: int = 0   # CompiledBank layout preparations
     plan_builds: int = 0     # ExecutionPlan compilations
     plan_cache_hits: int = 0  # plan_for() served from the memo
-    bank_calls: int = 0      # CompiledBank.apply invocations
+    bank_calls: int = 0      # CompiledBank.apply invocations (eager or trace)
+    jit_traces: int = 0      # whole-plan forward traces (one per compile)
+    jit_calls: int = 0       # jitted plan dispatches (hits = calls - traces)
 
     def reset(self) -> None:
         self.layout_builds = 0
         self.plan_builds = 0
         self.plan_cache_hits = 0
         self.bank_calls = 0
+        self.jit_traces = 0
+        self.jit_calls = 0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -84,12 +122,18 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array
     return jnp.pad(x, pad, constant_values=value)
 
 
+@jax.tree_util.register_pytree_node_class
 class CompiledBank:
     """One PegasusLinear with its kernel layout precomputed and frozen.
 
     All layout work (one-hot of split features, +inf threshold padding,
     block padding of the LUT along K and N, int8 quantization + scales)
     happens in ``__init__``; ``apply`` only pads the activations.
+
+    Pytree protocol: the tensors are leaves, the block geometry is static
+    aux data — so banks can ride through ``jax.jit`` as arguments (shared
+    across every compiled bucket) instead of being re-embedded as XLA
+    constants in each executable.
     """
 
     def __init__(
@@ -99,11 +143,13 @@ class CompiledBank:
         block_t: int = 256,
         block_n: int = 256,
         block_k: int = 128,
-        interpret: bool = True,
+        interpret: bool | None = None,
+        strategy: str = "auto",
     ):
         self.layer = layer
         self.block_t = block_t
-        self.interpret = interpret
+        self.interpret = default_interpret() if interpret is None else interpret
+        self.strategy = resolve_strategy(strategy, self.interpret)
 
         k, v, n = layer.num_groups, layer.group_size, layer.out_features
         self.depth = int(np.log2(layer.num_centroids) + 0.5)
@@ -132,6 +178,26 @@ class CompiledBank:
         self.block_k = min(block_k, kp)
         STATS.layout_builds += 1
 
+    # -- pytree protocol ----------------------------------------------------
+
+    def tree_flatten(self):
+        children = (self.layer, self.feat_oh, self.thr,
+                    self.lut_p, self.lut_q8_p, self.scales)
+        aux = (self.block_t, self.block_n, self.block_k,
+               self.depth, self.kp, self.interpret, self.strategy)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        # bypass __init__: no layout work, no STATS increment — this path
+        # runs on every jit flatten/unflatten round-trip
+        obj = object.__new__(cls)
+        (obj.layer, obj.feat_oh, obj.thr,
+         obj.lut_p, obj.lut_q8_p, obj.scales) = children
+        (obj.block_t, obj.block_n, obj.block_k,
+         obj.depth, obj.kp, obj.interpret, obj.strategy) = aux
+        return obj
+
     # -- backend dispatch ---------------------------------------------------
 
     def apply(self, x: jax.Array, backend: str) -> jax.Array:
@@ -159,12 +225,14 @@ class CompiledBank:
                 xg, self.feat_oh, self.thr, lut,
                 depth=self.depth, block_t=bt, block_n=self.block_n,
                 block_k=self.block_k, interpret=self.interpret,
+                strategy=self.strategy,
             )
         else:
             y = fuzzy_lut_q8_pallas(
                 xg, self.feat_oh, self.thr, lut, scales,
                 depth=self.depth, block_t=bt, block_n=self.block_n,
                 block_k=self.block_k, interpret=self.interpret,
+                strategy=self.strategy,
             )
         y = y[:t, :n]
         if p.bias is not None:
@@ -178,44 +246,101 @@ class CompiledBank:
 
 
 class ExecutionPlan:
-    """Compiled model: banks + structural forward, backend bound globally."""
+    """Compiled model: banks + structural forward, backend bound globally.
+
+    The forward is a pure function ``forward(apply, state, *inputs)`` where
+    ``state`` is a jax pytree (banks + any captured arrays) and every other
+    degree of freedom (window length, NAM flag, block geometry, interpret
+    mode) is a static Python value closed over at plan-build. ``__call__``
+    pads the batch up to its bucket, dispatches the jitted forward, and
+    slices the padding back off — so the whole model is ONE XLA computation
+    per ``(backend, bucket)`` and repeated calls at any batch size that maps
+    to a warm bucket perform zero Python-per-bank dispatch and zero retraces.
+    """
 
     def __init__(
         self,
         banks: Sequence[CompiledBank],
         forward: Callable[..., jax.Array],
+        state: Any,
         *,
         backend: str = "onehot",
         family: str = "sequential",
+        bucket_sizes: Sequence[int] | None = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
         self.banks = list(banks)
         self._forward = forward
+        self._state = state
         self.backend = backend
         self.family = family
+        self.buckets = tuple(sorted(bucket_sizes)) if bucket_sizes else DEFAULT_BUCKETS
+        # compile-cache instrumentation (per plan; STATS mirrors globally)
+        self.trace_count = 0
+        self.jit_calls = 0
+        self.compiled_buckets: set[tuple[str, int]] = set()
+
+        def _pure(state, *inputs, backend):
+            # body runs at TRACE time only — this is the retrace counter the
+            # bucketing tests assert on
+            STATS.jit_traces += 1
+            self.trace_count += 1
+            self.compiled_buckets.add((backend, int(inputs[0].shape[0])))
+            return forward(lambda bank, x: bank.apply(x, backend), state, *inputs)
+
+        self._jit = jax.jit(_pure, static_argnames=("backend",))
         STATS.plan_builds += 1
 
-    def __call__(self, *inputs: jax.Array, backend: str | None = None) -> jax.Array:
+    def __call__(
+        self, *inputs: jax.Array, backend: str | None = None, jit: bool = True
+    ) -> jax.Array:
         be = self.backend if backend is None else backend
         if be not in BACKENDS:
             raise ValueError(f"unknown backend {be!r}; expected one of {BACKENDS}")
-        return self._forward(lambda bank, x: bank.apply(x, be), *inputs)
+        if not jit:
+            return self._forward(
+                lambda bank, x: bank.apply(x, be), self._state, *inputs)
+        b = int(np.shape(inputs[0])[0])
+        bucket = bucket_batch(b, self.buckets)
+        padded = tuple(self._pad_batch(x, bucket) for x in inputs)
+        STATS.jit_calls += 1
+        self.jit_calls += 1
+        y = self._jit(self._state, *padded, backend=be)
+        return y if bucket == b else y[:b]
+
+    @staticmethod
+    def _pad_batch(x: jax.Array, bucket: int) -> jax.Array:
+        x = jnp.asarray(x)
+        b = x.shape[0]
+        if b == bucket:
+            return x
+        pad = [(0, bucket - b)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, pad)
+
+    def compile_stats(self) -> dict:
+        """Per-plan jit-cache counters (the serving stats surface)."""
+        return {
+            "traces": self.trace_count,
+            "jit_calls": self.jit_calls,
+            "bucket_hits": self.jit_calls - self.trace_count,
+            "buckets": sorted(self.compiled_buckets),
+        }
 
     @property
     def num_banks(self) -> int:
         return len(self.banks)
 
     def bank_inputs(self, *inputs: jax.Array, backend: str = "gather") -> list:
-        """Forward once, recording the first activation each bank receives —
-        a debugging/parity-test aid (None for banks the input never reaches)."""
+        """Forward once (eagerly), recording the first activation each bank
+        receives — a debugging/parity-test aid (None for unreached banks)."""
         rec: dict[int, jax.Array] = {}
 
         def apply(bank: CompiledBank, x: jax.Array) -> jax.Array:
             rec.setdefault(id(bank), x)
             return bank.apply(x, backend)
 
-        self._forward(apply, *inputs)
+        self._forward(apply, self._state, *inputs)
         return [rec.get(id(b)) for b in self.banks]
 
     def table_bytes(self) -> int:
@@ -231,77 +356,91 @@ def _compile_banks(layers: Sequence[PegasusLinear], **kw) -> list[CompiledBank]:
     return [CompiledBank(l, **kw) for l in layers]
 
 
-def _sequential_plan(layers, backend, kw) -> ExecutionPlan:
+def _sequential_plan(layers, backend, kw, buckets) -> ExecutionPlan:
     banks = _compile_banks(layers, **kw)
 
-    def forward(apply, x):
+    def forward(apply, state, x):
         h = x.astype(jnp.float32)
-        for bank in banks:
+        for bank in state["banks"]:
             h = apply(bank, h)
         return h
 
-    return ExecutionPlan(banks, forward, backend=backend, family="sequential")
+    return ExecutionPlan(banks, forward, {"banks": banks}, backend=backend,
+                         family="sequential", bucket_sizes=buckets)
 
 
-def _rnn_plan(model, backend, kw) -> ExecutionPlan:
+def _rnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
     x_banks = _compile_banks(model.x_banks, **kw)
     h_banks = _compile_banks(model.h_banks, **kw)
     out_bank = CompiledBank(model.out_bank, **kw)
+    window = int(model.window)   # static: the unroll length is frozen into
+    # the plan (bank swaps after compilation are caught by plan_for's
+    # _model_banks identity check, which rebuilds the plan)
 
-    # non-bank attrs are read from ``model`` LIVE at call time, so attribute
-    # updates after compilation are honored (banks themselves are guarded by
-    # plan_for's _model_banks identity check)
-    def forward(apply, x):
+    def forward(apply, state, x):
         xf = x.astype(jnp.float32)
-        h_pre = apply(x_banks[0], xf[:, 0])
-        for t in range(1, model.window):
-            h_pre = apply(x_banks[t], xf[:, t]) + apply(h_banks[t - 1], h_pre)
-        return apply(out_bank, h_pre)
+        h_pre = apply(state["x"][0], xf[:, 0])
+        for t in range(1, window):
+            h_pre = apply(state["x"][t], xf[:, t]) + apply(state["h"][t - 1], h_pre)
+        return apply(state["out"], h_pre)
 
-    return ExecutionPlan(
-        x_banks + h_banks + [out_bank], forward, backend=backend, family="rnn"
-    )
+    state = {"x": x_banks, "h": h_banks, "out": out_bank}
+    return ExecutionPlan(x_banks + h_banks + [out_bank], forward, state,
+                         backend=backend, family="rnn", bucket_sizes=buckets)
 
 
-def _cnn_plan(model, backend, kw) -> ExecutionPlan:
+def _cnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
     from repro.nets.cnn import _windows  # structural helper, no cycle at call time
 
     window_bank = CompiledBank(model.window_bank, **kw)
     head_banks = _compile_banks(model.head_banks, **kw)
+    nam = bool(model.nam)        # static branch selector
+    state = {
+        "window": window_bank,
+        "heads": head_banks,
+        "out_bias": None if model.out_bias is None else jnp.asarray(model.out_bias),
+    }
 
-    def forward(apply, x):
+    def forward(apply, state, x):
         win = _windows(x.astype(jnp.float32))          # [B, P, KERNEL*f]
         b, pcount, wdim = win.shape
-        contrib = apply(window_bank, win.reshape(-1, wdim)).reshape(b, pcount, -1)
-        if model.nam:
-            return contrib.sum(axis=1) + model.out_bias  # single SumReduce
+        contrib = apply(state["window"], win.reshape(-1, wdim)).reshape(b, pcount, -1)
+        if nam:
+            return contrib.sum(axis=1) + state["out_bias"]  # single SumReduce
         h = contrib.mean(axis=1)                       # rows already ReLU'd
-        for bank in head_banks:
+        for bank in state["heads"]:
             h = apply(bank, h)
         return h
 
-    return ExecutionPlan(
-        [window_bank] + head_banks, forward, backend=backend, family="cnn"
-    )
+    return ExecutionPlan([window_bank] + head_banks, forward, state,
+                         backend=backend, family="cnn", bucket_sizes=buckets)
 
 
-def _cnn_l_plan(model, backend, kw) -> ExecutionPlan:
+def _cnn_l_plan(model, backend, kw, buckets) -> ExecutionPlan:
     from repro.nets.cnn import _packet_feats
 
     bank1 = CompiledBank(model.bank1, **kw)
     bank2 = CompiledBank(model.bank2, **kw)
+    state = {
+        "b1": bank1,
+        "b2": bank2,
+        "emb_tree": model.emb_tree,                    # FuzzyTree is a pytree
+        "logit_lut": jnp.asarray(model.logit_lut),
+        "bias": jnp.asarray(model.bias),
+    }
 
-    def forward(apply, seq, payload):
+    def forward(apply, state, seq, payload):
         x = _packet_feats(seq, payload) * 255.0        # [B, W, 62]
         b, w, d = x.shape
-        h_pre = apply(bank1, x.reshape(-1, d))
-        e_pre = apply(bank2, h_pre)
+        h_pre = apply(state["b1"], x.reshape(-1, d))
+        e_pre = apply(state["b2"], h_pre)
         emb = jnp.tanh(e_pre)
-        idx = hard_index(model.emb_tree, emb)
-        contrib = model.logit_lut[idx].reshape(b, w, -1)
-        return contrib.sum(axis=1) + model.bias
+        idx = hard_index(state["emb_tree"], emb)
+        contrib = state["logit_lut"][idx].reshape(b, w, -1)
+        return contrib.sum(axis=1) + state["bias"]
 
-    return ExecutionPlan([bank1, bank2], forward, backend=backend, family="cnn_l")
+    return ExecutionPlan([bank1, bank2], forward, state, backend=backend,
+                         family="cnn_l", bucket_sizes=buckets)
 
 
 def build_plan(
@@ -311,7 +450,9 @@ def build_plan(
     block_t: int = 256,
     block_n: int = 256,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    strategy: str = "auto",
+    bucket_sizes: Sequence[int] | None = None,
 ) -> ExecutionPlan:
     """Compile any pegasusified model into an ExecutionPlan.
 
@@ -320,21 +461,38 @@ def build_plan(
       * ``.x_banks``/``.h_banks``    → PegasusRNN
       * ``.window_bank``             → PegasusCNN (B and M/NAM)
       * ``.emb_tree``/``.logit_lut`` → PegasusCNNL (two-level NAM)
+
+    ``interpret=None`` resolves via :func:`default_interpret` (Pallas
+    interpret mode everywhere except a real TPU backend); ``bucket_sizes``
+    overrides the batch-bucket ladder (default :data:`DEFAULT_BUCKETS`).
+
+    The plan freezes ALL model state at build time — banks and non-bank
+    attributes alike (RNN window, CNN nam/out_bias, CNN-L
+    emb_tree/logit_lut/bias). Mutating the model afterwards does NOT affect
+    a plan you hold: rebuild it, or go through :func:`plan_for`, whose memo
+    detects bank swaps and non-bank reassignment and recompiles.
     """
-    kw = dict(block_t=block_t, block_n=block_n, block_k=block_k, interpret=interpret)
+    kw = dict(block_t=block_t, block_n=block_n, block_k=block_k,
+              interpret=default_interpret() if interpret is None else interpret,
+              strategy=strategy)
     if isinstance(model, PegasusLinear):
-        return _sequential_plan([model], backend, kw)
-    if isinstance(model, (list, tuple)):
+        plan = _sequential_plan([model], backend, kw, bucket_sizes)
+    elif isinstance(model, (list, tuple)):
         if not all(isinstance(l, PegasusLinear) for l in model):
             raise TypeError("bank list must contain only PegasusLinear")
-        return _sequential_plan(model, backend, kw)
-    if hasattr(model, "x_banks") and hasattr(model, "h_banks"):
-        return _rnn_plan(model, backend, kw)
-    if hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
-        return _cnn_l_plan(model, backend, kw)
-    if hasattr(model, "window_bank"):
-        return _cnn_plan(model, backend, kw)
-    raise TypeError(f"don't know how to compile {type(model).__name__} into a plan")
+        plan = _sequential_plan(model, backend, kw, bucket_sizes)
+    elif hasattr(model, "x_banks") and hasattr(model, "h_banks"):
+        plan = _rnn_plan(model, backend, kw, bucket_sizes)
+    elif hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
+        plan = _cnn_l_plan(model, backend, kw, bucket_sizes)
+    elif hasattr(model, "window_bank"):
+        plan = _cnn_plan(model, backend, kw, bucket_sizes)
+    else:
+        raise TypeError(f"don't know how to compile {type(model).__name__} into a plan")
+    # the non-bank state the plan froze at build — plan_for compares this
+    # against the live model to catch attribute reassignment (see _model_aux)
+    plan._aux_token = _model_aux(model)
+    return plan
 
 
 # ---------------------------------------------------------------------------
@@ -356,6 +514,30 @@ def _model_key(model: Any, interpret: bool, kw: dict) -> tuple:
     return (*ids, interpret, tuple(sorted(kw.items())))
 
 
+def _model_aux(model: Any) -> tuple:
+    """Non-bank model state a compiled plan froze at build time (window
+    length, NAM flag, out-bias, embedding tree, logit LUT). plan_for must
+    rebuild when any of it is reassigned — the forwards no longer read these
+    attributes live, so a stale memo hit would silently serve outputs from
+    the pre-mutation tensors."""
+    if hasattr(model, "x_banks") and hasattr(model, "h_banks"):
+        return (int(model.window),)
+    if hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
+        return (model.emb_tree, model.logit_lut, model.bias)
+    if hasattr(model, "window_bank"):
+        return (bool(model.nam), model.out_bias)
+    return ()
+
+
+def _aux_matches(a: tuple, b: tuple) -> bool:
+    """Identity for array-like entries (``==`` on jax arrays is elementwise),
+    equality for plain scalars."""
+    return len(a) == len(b) and all(
+        x is y or (isinstance(x, (bool, int)) and isinstance(y, (bool, int))
+                   and x == y)
+        for x, y in zip(a, b))
+
+
 def _model_banks(model: Any) -> tuple:
     """Current bank layers of a model, in plan construction order — used to
     detect in-place mutation (e.g. ``peg.window_bank = refine(...)``) that
@@ -373,10 +555,13 @@ def _model_banks(model: Any) -> tuple:
     return ()
 
 
-def plan_for(model: Any, *, interpret: bool = True, **kw) -> ExecutionPlan:
+def plan_for(model: Any, *, interpret: bool | None = None, **kw) -> ExecutionPlan:
     """Memoized build_plan. Plans are backend-agnostic here — pass the
     backend per call (``plan(x, backend=...)``); binding a default belongs
     to explicit build_plan. Block-size overrides participate in the key."""
+    interpret = default_interpret() if interpret is None else interpret
+    if "bucket_sizes" in kw and kw["bucket_sizes"] is not None:
+        kw["bucket_sizes"] = tuple(kw["bucket_sizes"])
     key = _model_key(model, interpret, kw)
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
@@ -391,6 +576,8 @@ def plan_for(model: Any, *, interpret: bool = True, **kw) -> ExecutionPlan:
         banks_now = _model_banks(model)
         same = same and len(banks_now) == len(cached_plan.banks) and all(
             cb.layer is l for cb, l in zip(cached_plan.banks, banks_now))
+        # ... and whose frozen non-bank state still matches the live model
+        same = same and _aux_matches(cached_plan._aux_token, _model_aux(model))
         if same:
             STATS.plan_cache_hits += 1
             return cached_plan

@@ -33,7 +33,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fuzzy_lut_kernel", "fuzzy_lut_pallas"]
+__all__ = ["default_interpret", "fuzzy_lut_kernel", "fuzzy_lut_pallas",
+           "resolve_strategy"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless a real TPU backend is attached.
+
+    This is THE static gate for the non-interpret path: callers pass
+    ``interpret=None`` and get the Mosaic-compiled kernel on TPU, the
+    traceable interpreter everywhere else (CPU CI, tests). The flag is a
+    static jit arg throughout, so both modes live in separate compile-cache
+    entries and can coexist in one process.
+    """
+    return jax.default_backend() != "tpu"
 
 
 def _tpu_compiler_params(dimension_semantics: tuple[str, ...]):
@@ -44,14 +57,17 @@ def _tpu_compiler_params(dimension_semantics: tuple[str, ...]):
         return dict(mosaic=dict(dimension_semantics=dimension_semantics))
 
 
-def fuzzy_lut_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, out_ref, *, depth: int):
-    """One (Tt, Nt, Kt) tile: descend trees, accumulate LUT rows into out."""
-    x = x_ref[...].astype(jnp.float32)            # [Tt, Kt, v]
-    feat_oh = feat_oh_ref[...].astype(jnp.float32)  # [Kt, I, v]
-    thr = thr_ref[...].astype(jnp.float32)        # [Kt, I]
-    n_internal = thr.shape[-1]
-    c = n_internal + 1                            # leaves per tree
+def _tree_leaf(x, feat_oh, thr, *, depth: int, strategy: str):
+    """Shared descent: [Tt, Kt, v] activations → [Tt, Kt] leaf indices.
 
+    Both strategies compute the SAME bits (identical fp compare); they differ
+    only in how the per-level bit is *selected*:
+      ``mxu``    — one-hot reduction over nodes (branchless, gather-free;
+                   what the systolic/VPU path wants)
+      ``lookup`` — take_along_axis on the bit tensor (O(T·K) per level; what
+                   the interpreter/CPU wants — the one-hot form does C× the
+                   work a scalar core has to execute serially)
+    """
     # feature values at every internal node: vals[t,k,n] = x[t,k,feat[k,n]]
     # — expressed as an einsum against the precomputed one-hot, not a gather.
     vals = jax.lax.dot_general(
@@ -64,27 +80,67 @@ def fuzzy_lut_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, out_ref, *, depth: in
     vals = vals.transpose(1, 0, 2)                # [Tt, Kt, I]
     bits = (vals > thr[None]).astype(jnp.int32)   # decision at every node
 
-    # branchless descent: select this level's bit with a one-hot over nodes
     tt, kt = x.shape[0], x.shape[1]
+    n_internal = thr.shape[-1]
     node = jnp.zeros((tt, kt), dtype=jnp.int32)
-    iota_nodes = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, n_internal), 2)
-    for _ in range(depth):
-        node_oh = (iota_nodes == node[:, :, None]).astype(jnp.int32)
-        bit = jnp.sum(bits * node_oh, axis=-1)    # [Tt, Kt]
-        node = 2 * node + 1 + bit
-    leaf = node - n_internal                      # [Tt, Kt] in [0, C)
+    if strategy == "lookup":
+        for _ in range(depth):
+            bit = jnp.take_along_axis(bits, node[:, :, None], axis=-1)[..., 0]
+            node = 2 * node + 1 + bit
+    else:
+        # branchless: select this level's bit with a one-hot over nodes
+        iota_nodes = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, n_internal), 2)
+        for _ in range(depth):
+            node_oh = (iota_nodes == node[:, :, None]).astype(jnp.int32)
+            bit = jnp.sum(bits * node_oh, axis=-1)  # [Tt, Kt]
+            node = 2 * node + 1 + bit
+    return node - n_internal                      # [Tt, Kt] in [0, C)
 
-    # Map + SumReduce fused into one MXU matmul:
-    #   onehot(leaf) [Tt, Kt*C] @ lut [Kt*C, Nt]
+
+def _lut_contrib(leaf, lut, *, strategy: str, scale=None):
+    """Map + SumReduce over one tile: [Tt, Kt] leaves × [Kt, C, Nt] LUT →
+    [Tt, Nt] contributions. ``scale`` ([Kt] per-group dequant factors, q8
+    path) folds in exactly — it is constant within a group, and both
+    realizations sum over (group, centroid).
+
+      ``mxu``    — onehot(leaf) [Tt, Kt·C] @ lut [Kt·C, Nt]: one systolic
+                   matmul, gather-free.
+      ``lookup`` — take_along_axis gather-sum: O(T·K·N) instead of the
+                   matmul's O(T·K·C·N); the interpreter/CPU-fast form.
+    """
+    tt, kt = leaf.shape
+    c = lut.shape[1]
+    if strategy == "lookup":
+        rows = jnp.take_along_axis(
+            lut[None], leaf[:, :, None, None], axis=2
+        )[:, :, 0, :]                             # [Tt, Kt, Nt]
+        if scale is not None:
+            rows = rows * scale[None, :, None]
+        return rows.sum(axis=1)                   # [Tt, Nt]
     iota_c = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, c), 2)
     onehot = (iota_c == leaf[:, :, None]).astype(jnp.float32)
-    lut = lut_ref[...].astype(jnp.float32)        # [Kt, C, Nt]
-    contrib = jax.lax.dot_general(
+    if scale is not None:
+        onehot = onehot * scale[None, :, None]
+    return jax.lax.dot_general(
         onehot.reshape(tt, kt * c),
         lut.reshape(kt * c, -1),
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )                                             # [Tt, Nt]
+
+
+def fuzzy_lut_kernel(
+    x_ref, feat_oh_ref, thr_ref, lut_ref, out_ref, *, depth: int,
+    strategy: str = "mxu",
+):
+    """One (Tt, Nt, Kt) tile: descend trees, accumulate LUT rows into out."""
+    x = x_ref[...].astype(jnp.float32)            # [Tt, Kt, v]
+    feat_oh = feat_oh_ref[...].astype(jnp.float32)  # [Kt, I, v]
+    thr = thr_ref[...].astype(jnp.float32)        # [Kt, I]
+
+    leaf = _tree_leaf(x, feat_oh, thr, depth=depth, strategy=strategy)
+    lut = lut_ref[...].astype(jnp.float32)        # [Kt, C, Nt]
+    contrib = _lut_contrib(leaf, lut, strategy=strategy)
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -95,9 +151,22 @@ def fuzzy_lut_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, out_ref, *, depth: in
         out_ref[...] += contrib
 
 
+def resolve_strategy(strategy: str, interpret: bool) -> str:
+    """``auto`` → ``lookup`` under the interpreter (CPU executes the one-hot
+    matmul's C× redundant work serially), ``mxu`` on compiled TPU (systolic
+    arrays eat dense matmuls; gathers don't vectorize). Both strategies are
+    semantics-identical and parity-tested against each other."""
+    if strategy == "auto":
+        return "lookup" if interpret else "mxu"
+    if strategy not in ("mxu", "lookup"):
+        raise ValueError(f"unknown strategy {strategy!r}; expected auto|mxu|lookup")
+    return strategy
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("depth", "block_t", "block_n", "block_k", "interpret"),
+    static_argnames=("depth", "block_t", "block_n", "block_k", "interpret",
+                     "strategy"),
 )
 def fuzzy_lut_pallas(
     x: jax.Array,          # [T, K, v]
@@ -109,9 +178,19 @@ def fuzzy_lut_pallas(
     block_t: int = 256,
     block_n: int = 256,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    strategy: str = "auto",
 ) -> jax.Array:
-    """Pallas-tiled fused Pegasus matmul. Returns [T, N] f32 (no bias)."""
+    """Pallas-tiled fused Pegasus matmul. Returns [T, N] f32 (no bias).
+
+    Fully traceable inside an outer ``jax.jit`` (the engine jits whole-plan
+    forwards through here); ``interpret`` and ``strategy`` are static args,
+    ``None``/``"auto"`` resolve via :func:`default_interpret` /
+    :func:`resolve_strategy`.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    strategy = resolve_strategy(strategy, interpret)
     t, k, v = x.shape
     _, c, n = lut.shape
     bt, bn, bk = min(block_t, t), min(block_n, n), min(block_k, k)
@@ -123,7 +202,7 @@ def fuzzy_lut_pallas(
 
     grid = (t // bt, n // bn, k // bk)
     return pl.pallas_call(
-        functools.partial(fuzzy_lut_kernel, depth=depth),
+        functools.partial(fuzzy_lut_kernel, depth=depth, strategy=strategy),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bt, bk, v), lambda i, j, kk: (i, kk, 0)),

@@ -66,7 +66,7 @@ def fuzzy_lut_matmul(
     block_t: int = 256,
     block_n: int = 256,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Apply a PegasusLinear via the Pallas kernel. x: [..., D] → [..., N]."""
     k, v = layer.num_groups, layer.group_size
@@ -111,7 +111,7 @@ def fuzzy_lut_matmul(
 
 def fuzzy_lut_matmul_q8(
     layer, x: jax.Array, *, block_t: int = 256, block_n: int = 256,
-    block_k: int = 128, interpret: bool = True,
+    block_k: int = 128, interpret: bool | None = None,
 ) -> jax.Array:
     """int8-LUT kernel path: quantize the bank once, run the q8 kernel.
 

@@ -20,7 +20,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .kernel import _tpu_compiler_params
+from .kernel import (
+    _lut_contrib,
+    _tpu_compiler_params,
+    _tree_leaf,
+    default_interpret,
+    resolve_strategy,
+)
 
 __all__ = ["quantize_lut_int8", "fuzzy_lut_q8_pallas", "fuzzy_lut_q8_ref"]
 
@@ -45,37 +51,16 @@ def fuzzy_lut_q8_ref(x, features, thresholds, lut_q8, scales):
     return (gathered * scales[None, :, None]).sum(axis=1)
 
 
-def _q8_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, scale_ref, out_ref, *, depth):
+def _q8_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, scale_ref, out_ref, *,
+               depth, strategy: str = "mxu"):
     x = x_ref[...].astype(jnp.float32)
     feat_oh = feat_oh_ref[...].astype(jnp.float32)
     thr = thr_ref[...].astype(jnp.float32)
-    n_internal = thr.shape[-1]
-    c = n_internal + 1
 
-    vals = jax.lax.dot_general(
-        x, feat_oh, dimension_numbers=(((2,), (2,)), ((1,), (0,))),
-        preferred_element_type=jnp.float32,
-    ).transpose(1, 0, 2)
-    bits = (vals > thr[None]).astype(jnp.int32)
-
-    tt, kt = x.shape[0], x.shape[1]
-    node = jnp.zeros((tt, kt), dtype=jnp.int32)
-    iota_nodes = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, n_internal), 2)
-    for _ in range(depth):
-        node_oh = (iota_nodes == node[:, :, None]).astype(jnp.int32)
-        node = 2 * node + 1 + jnp.sum(bits * node_oh, axis=-1)
-    leaf = node - n_internal
-
-    iota_c = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, c), 2)
-    onehot = (iota_c == leaf[:, :, None]).astype(jnp.float32)
-    # fold the per-group dequant scale into the one-hot (exact)
-    onehot = onehot * scale_ref[...][None, :, None].astype(jnp.float32)
-    lut = lut_ref[...].astype(jnp.float32)
-    contrib = jax.lax.dot_general(
-        onehot.reshape(tt, kt * c), lut.reshape(kt * c, -1),
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
+    leaf = _tree_leaf(x, feat_oh, thr, depth=depth, strategy=strategy)
+    contrib = _lut_contrib(
+        leaf, lut_ref[...].astype(jnp.float32), strategy=strategy,
+        scale=scale_ref[...].astype(jnp.float32))
 
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -87,12 +72,16 @@ def _q8_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, scale_ref, out_ref, *, dept
 
 
 @functools.partial(
-    jax.jit, static_argnames=("depth", "block_t", "block_n", "block_k", "interpret"))
+    jax.jit, static_argnames=("depth", "block_t", "block_n", "block_k",
+                              "interpret", "strategy"))
 def fuzzy_lut_q8_pallas(
     x, feat_oh, thresholds, lut_q8, scales, *,
     depth: int, block_t: int = 256, block_n: int = 256, block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None, strategy: str = "auto",
 ):
+    if interpret is None:
+        interpret = default_interpret()
+    strategy = resolve_strategy(strategy, interpret)
     t, k, v = x.shape
     _, c, n = lut_q8.shape
     bt, bn, bk = min(block_t, t), min(block_n, n), min(block_k, k)
@@ -100,7 +89,7 @@ def fuzzy_lut_q8_pallas(
     n_internal = c - 1
     grid = (t // bt, n // bn, k // bk)
     return pl.pallas_call(
-        functools.partial(_q8_kernel, depth=depth),
+        functools.partial(_q8_kernel, depth=depth, strategy=strategy),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bt, bk, v), lambda i, j, kk: (i, kk, 0)),

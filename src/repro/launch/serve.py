@@ -84,17 +84,20 @@ class PegasusServer:
 
     The plan is compiled once in ``__init__`` (feature one-hots, padded
     LUT/threshold tensors, int8 LUT + scales); every request batch after
-    that is pure compute on the bound backend. Requests may be single
-    inputs or tuples (e.g. ``(seq, payload)`` for CNN-L); requests are
-    fused into one plan call (chunked at ``max_batch``) and the outputs
-    split back out.
+    that dispatches the whole-plan JITTED forward — the batch is padded up
+    to its compile bucket (powers of two by default), so arbitrary request
+    sizes hit a warm XLA executable instead of retracing per shape.
+    Requests may be single inputs or tuples (e.g. ``(seq, payload)`` for
+    CNN-L); requests are fused into one plan call (chunked at
+    ``max_batch``) and the outputs split back out. ``stats()`` reports the
+    compile-cache counters (traces vs bucket hits).
 
     Every request input MUST carry a leading batch dim (wrap a single flow
     as ``x[None]``) — axis 0 is always interpreted as the batch axis.
     """
 
-    def __init__(self, model, *, backend: str = "onehot", interpret: bool = True,
-                 max_batch: int = 1024):
+    def __init__(self, model, *, backend: str = "onehot",
+                 interpret: bool | None = None, max_batch: int = 1024):
         from repro.engine import build_plan
 
         t0 = time.perf_counter()
@@ -104,6 +107,17 @@ class PegasusServer:
         self.max_batch = max_batch
         self.requests_served = 0
         self.batches_run = 0
+
+    def stats(self) -> dict:
+        """Serving + compile-cache counters (the ops surface: a bucket_hits
+        to traces ratio near 1:1 means the bucket ladder is mis-sized)."""
+        return {
+            "backend": self.backend,
+            "plan_build_ms": self.plan_build_ms,
+            "requests_served": self.requests_served,
+            "batches_run": self.batches_run,
+            **self.plan.compile_stats(),
+        }
 
     def infer(self, *inputs, backend: str | None = None) -> jax.Array:
         """One already-batched call through the cached plan (one request)."""
@@ -152,6 +166,9 @@ def _pegasus_demo(args) -> None:
     flows = sum(len(o) for o in outs)
     print(f"served {len(requests)} requests ({flows} flows) in {dt * 1e3:.1f} ms "
           f"→ {flows / dt:.0f} flows/s on backend={args.backend}")
+    st = server.stats()
+    print(f"compile cache: {st['traces']} traces, {st['bucket_hits']} bucket "
+          f"hits over {st['jit_calls']} jit calls; buckets={st['buckets']}")
 
 
 def main():

@@ -117,10 +117,13 @@ def pegasusify_ae(ae: AutoEncoder, x_calib: np.ndarray, *, depth: int = 8) -> li
 
 
 def pegasus_ae_error(
-    banks: list[PegasusLinear], x: jax.Array, *, backend: str = "gather"
+    banks: list[PegasusLinear], x: jax.Array, *, backend: str = "gather",
+    jit: bool = False
 ) -> jax.Array:
-    """Reconstruction MAE through the engine's bank-stack plan."""
-    h = plan_for(banks)(x, backend=backend)
+    """Reconstruction MAE through the engine's bank-stack plan. Eager by
+    default — one-shot evaluation entry point; serving call sites get the
+    jitted path."""
+    h = plan_for(banks)(x, backend=backend, jit=jit)
     return jnp.abs(h - x.astype(jnp.float32) / 255.0).mean(axis=-1)
 
 

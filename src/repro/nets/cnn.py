@@ -172,9 +172,12 @@ def pegasusify_cnn(
     )
 
 
-def pegasus_cnn_apply(peg: PegasusCNN, x: jax.Array, *, backend: str = "gather") -> jax.Array:
-    """Windowed deployment forward via the engine (B and M/NAM variants)."""
-    return plan_for(peg)(x, backend=backend)
+def pegasus_cnn_apply(peg: PegasusCNN, x: jax.Array, *, backend: str = "gather",
+                      jit: bool = False) -> jax.Array:
+    """Windowed deployment forward via the engine (B and M/NAM variants).
+    Eager by default — one-shot evaluation entry point; serving call sites
+    (PegasusServer / build_plan) get the jitted path."""
+    return plan_for(peg)(x, backend=backend, jit=jit)
 
 
 # ---------------------------------------------------------------------------
@@ -283,8 +286,10 @@ def pegasusify_cnn_l(
 
 
 def pegasus_cnn_l_apply(
-    peg: PegasusCNNL, seq: jax.Array, payload: jax.Array, *, backend: str = "gather"
+    peg: PegasusCNNL, seq: jax.Array, payload: jax.Array, *,
+    backend: str = "gather", jit: bool = False
 ) -> jax.Array:
     """Deployment forward via the engine: all-table encoding → fuzzy index →
-    LUT sum (the two-level NAM)."""
-    return plan_for(peg)(seq, payload, backend=backend)
+    LUT sum (the two-level NAM). Eager by default — one-shot evaluation
+    entry point; serving call sites get the jitted path."""
+    return plan_for(peg)(seq, payload, backend=backend, jit=jit)

@@ -176,8 +176,11 @@ def pegasusify_mlp(
 
 def pegasus_mlp_apply(
     layers: list[PegasusLinear], x: jax.Array, *,
-    backend: str = "gather", path: str | None = None,
+    backend: str = "gather", path: str | None = None, jit: bool = False,
 ) -> jax.Array:
     """Run the fused bank stack via the execution engine (hard routing,
-    deployment semantics). ``path`` is a deprecated alias for ``backend``."""
-    return plan_for(layers)(x, backend=path if path is not None else backend)
+    deployment semantics). ``path`` is a deprecated alias for ``backend``.
+    Eager by default — one-shot evaluation entry point; serving call sites
+    (PegasusServer / build_plan) get the jitted path."""
+    return plan_for(layers)(x, backend=path if path is not None else backend,
+                            jit=jit)

@@ -147,6 +147,11 @@ def pegasusify_rnn(
     return peg
 
 
-def pegasus_rnn_apply(peg: PegasusRNN, x: jax.Array, *, backend: str = "gather") -> jax.Array:
-    """Hard-routed deployment forward via the engine. x: [B, W, 2] uint8."""
-    return plan_for(peg)(x, backend=backend)
+def pegasus_rnn_apply(peg: PegasusRNN, x: jax.Array, *, backend: str = "gather",
+                      jit: bool = False) -> jax.Array:
+    """Hard-routed deployment forward via the engine. x: [B, W, 2] uint8.
+
+    Eager by default: this is the one-shot evaluation entry point, and a
+    whole-plan XLA compile never amortizes over a single call — serving
+    call sites (PegasusServer / build_plan) get the jitted path."""
+    return plan_for(peg)(x, backend=backend, jit=jit)

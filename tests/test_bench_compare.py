@@ -1,0 +1,81 @@
+"""Unit tests for the CI bench-regression gate (benchmarks/compare.py):
+pure-dict comparisons — no benchmark execution, rides the fast lane."""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+# repo root on sys.path, so `benchmarks` imports the same way run.py does
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.compare import compare, trajectory_table
+
+
+def _doc(per_call, batch=1024, families=None):
+    return {
+        "engine": {
+            "batch": batch,
+            "backends": {be: {"per_call_ms": ms} for be, ms in per_call.items()},
+        },
+        "families": families or {},
+    }
+
+
+BASE = {"gather": 10.0, "onehot": 20.0, "kernel": 40.0, "kernel_q8": 40.0}
+
+
+def test_gate_passes_within_threshold():
+    fresh = _doc({**BASE, "kernel": 48.0})          # +20% < 25%
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert regressions == []
+
+
+def test_gate_fails_over_threshold():
+    fresh = _doc({**BASE, "kernel_q8": 55.0})       # +37.5%
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert len(regressions) == 1
+    assert "kernel_q8" in regressions[0]
+
+
+def test_gate_fails_on_missing_backend():
+    fresh = _doc({k: v for k, v in BASE.items() if k != "kernel"})
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert any("missing" in r for r in regressions)
+
+
+def test_gate_refuses_batch_mismatch():
+    with pytest.raises(SystemExit, match="batch mismatch"):
+        compare(_doc(BASE), _doc(BASE, batch=256), 0.25)
+
+
+def test_improvements_are_not_regressions():
+    fresh = _doc({be: ms / 3 for be, ms in BASE.items()})
+    lines, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert regressions == []
+    assert any("OK" in l for l in lines)
+
+
+def test_family_info_lines_not_gated():
+    fams = {"rnn": {"backends": {"kernel": {"per_call_ms": 999.0}}}}
+    lines, regressions = compare(_doc(BASE), _doc(BASE, families=fams), 0.25)
+    assert regressions == []                        # families are info-only
+    assert any("rnn/kernel" in l for l in lines)
+
+
+def test_trajectory_table(tmp_path):
+    for i, ms in enumerate((30.0, 20.0, 10.0)):
+        p = tmp_path / f"run{i}.json"
+        p.write_text(json.dumps(_doc({"kernel": ms})))
+    table = trajectory_table(sorted(tmp_path.glob("*.json")))
+    assert "kernel ms" in table
+    assert "30.00" in table and "10.00" in table
+    assert table.count("\n") == 4                   # header + sep + 3 rows
+
+
+def test_trajectory_table_empty(tmp_path):
+    assert "no bench history" in trajectory_table([])
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert "no bench history" in trajectory_table([bad])

@@ -274,6 +274,33 @@ def test_plan_for_detects_wrapper_mutation(ds):
         np.asarray(p1(*inputs, backend="gather")), rtol=1e-6, atol=1e-6)
 
 
+def test_plan_for_detects_aux_mutation():
+    """Non-bank attrs (NAM bias, logit LUT, window) are frozen into the plan
+    at build; reassigning one on the model must invalidate the memo even
+    though every bank is identity-unchanged."""
+    import types
+
+    from repro.core.amm import init_pegasus_linear
+
+    rng = np.random.default_rng(7)
+    layer = init_pegasus_linear(
+        rng.normal(size=(6, 4)).astype(np.float32), None,
+        rng.normal(size=(64, 6)).astype(np.float32), group_size=2, depth=3,
+        lut_bits=None)
+    model = types.SimpleNamespace(
+        window_bank=layer, head_banks=[], nam=True,
+        out_bias=jnp.zeros(4, jnp.float32), pool_windows=6)
+    x = jnp.asarray(rng.normal(size=(4, 8, 2)).astype(np.float32))
+    p1 = plan_for(model)
+    y1 = np.asarray(p1(x, backend="gather"))
+    assert plan_for(model) is p1                    # unchanged → memo hit
+    model.out_bias = jnp.ones(4, jnp.float32)       # recalibrated bias
+    p2 = plan_for(model)
+    assert p2 is not p1                             # aux mutation → rebuilt
+    np.testing.assert_allclose(np.asarray(p2(x, backend="gather")), y1 + 1.0,
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_unknown_backend_rejected(ds):
     banks, plan, inputs = _family(ds, "mlp")
     with pytest.raises(ValueError, match="unknown backend"):
@@ -298,3 +325,86 @@ def test_pegasus_server_batches(ds):
     before = STATS.layout_builds
     server.serve(reqs)
     assert STATS.layout_builds == before
+    # both rounds hit ONE compiled bucket (8): 4 jit calls, 1 trace
+    st = server.stats()
+    assert st["jit_calls"] == 4
+    assert st["traces"] == 1
+    assert st["bucket_hits"] == 3
+    assert st["buckets"] == [("onehot", 8)]
+
+
+# ---------------------------------------------------------------------------
+# Whole-plan jit + batch bucketing (ISSUE 2 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def test_jit_bucket_compile_invariants(ds):
+    """Acceptance: repeated calls at one bucket trigger ZERO retraces; a new
+    batch size triggers at most one (its bucket's first compile); sub-bucket
+    batches round up into already-warm buckets."""
+    _, plan, (x,) = _family(ds, "mlp")             # BATCH=16 → bucket 16
+    be = "onehot"
+    plan(x, backend=be)                            # warm bucket 16
+    t0 = STATS.jit_traces
+    plan(x, backend=be)
+    plan(x, backend=be)
+    assert STATS.jit_traces == t0                  # same bucket: no retrace
+    plan(x[:9], backend=be)                        # 9 → bucket 16: still warm
+    assert STATS.jit_traces == t0
+    plan(x[:4], backend=be)                        # 4 → bucket 8: ≤ 1 trace
+    assert STATS.jit_traces <= t0 + 1
+    traces_after_8 = STATS.jit_traces
+    plan(x[:3], backend=be)                        # 3 → bucket 8: warm again
+    plan(x[:7], backend=be)
+    assert STATS.jit_traces == traces_after_8
+    assert ("onehot", 16) in plan.compiled_buckets
+
+
+def test_bucket_padding_roundtrip(ds):
+    """Zero-row bucket padding must not leak into the sliced-off outputs."""
+    _, plan, (x,) = _family(ds, "mlp")
+    for be in BACKENDS:
+        full = np.asarray(plan(x, backend=be))
+        odd = np.asarray(plan(x[:11], backend=be))  # 11 → bucket 16
+        assert odd.shape[0] == 11
+        np.testing.assert_allclose(odd, full[:11], rtol=1e-5, atol=1e-5,
+                                   err_msg=f"bucket padding corrupted {be}")
+
+
+@pytest.mark.parametrize("family", FAMILY_PARAMS)
+def test_jit_matches_eager(ds, family):
+    """The jitted whole-plan forward is the same function as the eager
+    per-bank dispatch — every backend, every family."""
+    plan, inputs = _compiled(ds, family)
+    for be in BACKENDS:
+        np.testing.assert_allclose(
+            np.asarray(plan(*inputs, backend=be)),
+            np.asarray(plan(*inputs, backend=be, jit=False)),
+            rtol=1e-4, atol=1e-4, err_msg=f"{family}:{be} jit != eager")
+
+
+def test_kernel_strategy_parity(ds):
+    """The MXU one-hot-matmul and interpreter gather-sum kernel strategies
+    are semantics-identical (same descent bits, same rows accumulated)."""
+    banks, _, (x,) = _family(ds, "mlp")
+    p_mxu = build_plan(banks, strategy="mxu")
+    p_lookup = build_plan(banks, strategy="lookup")
+    for be in ("kernel", "kernel_q8"):
+        np.testing.assert_allclose(
+            np.asarray(p_mxu(x, backend=be)),
+            np.asarray(p_lookup(x, backend=be)),
+            rtol=1e-4, atol=1e-4, err_msg=f"strategy parity broke for {be}")
+
+
+def test_bucket_batch_policy():
+    from repro.engine import DEFAULT_BUCKETS, bucket_batch
+
+    assert bucket_batch(1) == DEFAULT_BUCKETS[0]
+    assert bucket_batch(8) == 8
+    assert bucket_batch(9) == 16
+    assert bucket_batch(1024) == 1024
+    top = DEFAULT_BUCKETS[-1]
+    assert bucket_batch(top + 1) == 2 * top       # beyond the ladder:
+    assert bucket_batch(2 * top) == 2 * top       # multiples of the largest
+    with pytest.raises(ValueError):
+        bucket_batch(0)

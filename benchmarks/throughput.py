@@ -15,6 +15,11 @@ see benchmarks/compare.py):
   * ``batch_ladder`` — one MLP plan called across a ladder of odd batch
                        sizes: the bucket set stays smaller than the batch
                        set, proving bucketing bounds the compile cache.
+  * ``multi_plan``   — N heterogeneous models (MLP/RNN/AE) behind ONE
+                       MultiModelServer: per-model warm latency through the
+                       server vs the same plan called standalone at batch
+                       256 (the acceptance bound: ≤ 25% overhead), plus
+                       aggregate flows/s over a mixed-size request sweep.
 """
 
 from __future__ import annotations
@@ -111,11 +116,48 @@ def engine_backend_bench(quick: bool = False) -> dict:
 
     result = {"plan_build_ms": plan_build_ms, "batch": batch, "iters": iters,
               "quick": quick, "backends": {}}
+    compile_ms_by_be = {}
     for be in BACKENDS:
         t0 = time.perf_counter()
         plan(x, backend=be).block_until_ready()            # trace + compile
-        compile_ms = (time.perf_counter() - t0) * 1e3
-        warm_ms = _timed_call(lambda: plan(x, backend=be), iters)
+        compile_ms_by_be[be] = (time.perf_counter() - t0) * 1e3
+
+    # warm timing: interleaved rounds across backends, with a fixed dense
+    # matmul reference sampled in the SAME loop. Interleaving fixes the
+    # observed gate-flake mode where contiguous per-backend sampling let one
+    # host-throttle burst clip every sample of exactly one backend (a
+    # different backend "regressed" each run). The dense reference is a
+    # host-speed DIAGNOSTIC for compare.py's report — gating on the
+    # normalized ratio was tried and rejected (throttling hits the MXU-bound
+    # reference and the gather-bound LUT paths differently).
+    ref_a = jnp.asarray(np.random.default_rng(0).normal(
+        size=(512, 512)).astype(np.float32))
+
+    @jax.jit
+    def _ref(a):
+        return a @ a
+
+    _ref(ref_a).block_until_ready()
+    warm_samples: dict = {be: [] for be in BACKENDS}
+    ref_samples: list = []
+    rounds = 3
+    per_round = max(1, iters // rounds)
+    for _ in range(rounds):
+        for be in BACKENDS:
+            for _ in range(per_round):
+                t0 = time.perf_counter()
+                plan(x, backend=be).block_until_ready()
+                warm_samples[be].append((time.perf_counter() - t0) * 1e3)
+        for _ in range(per_round):
+            t0 = time.perf_counter()
+            _ref(ref_a).block_until_ready()
+            ref_samples.append((time.perf_counter() - t0) * 1e3)
+    ref_ms = float(np.min(ref_samples))
+    result["ref_dense_ms"] = ref_ms
+
+    for be in BACKENDS:
+        compile_ms = compile_ms_by_be[be]
+        warm_ms = float(np.min(warm_samples[be]))
 
         plan(x, backend=be, jit=False).block_until_ready()
         eager_ms = _timed_call(lambda: plan(x, backend=be, jit=False), eager_iters)
@@ -128,6 +170,7 @@ def engine_backend_bench(quick: bool = False) -> dict:
 
         result["backends"][be] = {
             "per_call_ms": warm_ms,
+            "per_call_vs_dense": warm_ms / ref_ms,   # diagnostic, not gated
             "per_call_eager_ms": eager_ms,
             "per_call_cold_ms": cold_ms,
             "compile_ms": compile_ms,
@@ -197,12 +240,14 @@ def _family_models(ds, quick: bool):
         return pegasusify_cnn(m, ds.train["seq"], depth=5), (ds.test["seq"],)
 
     def ae():
-        from repro.nets.autoencoder import pegasusify_ae, train_autoencoder
+        from repro.nets.autoencoder import anomaly_features, pegasusify_ae, train_autoencoder
 
         x = ds.train["seq"].reshape(len(ds.train["label"]), -1)
         m = train_autoencoder(x, steps=steps)
         banks = pegasusify_ae(m, x.astype(np.float32), depth=4)
-        return banks, (ds.test["seq"].reshape(len(ds.test["label"]), -1),)
+        xt = ds.test["seq"].reshape(len(ds.test["label"]), -1)
+        # the AE bank stack consumes the engineered feature view
+        return banks, (np.asarray(anomaly_features(xt)),)
 
     return {"rnn": rnn, "cnn": cnn, "ae": ae}
 
@@ -234,6 +279,122 @@ def family_sweep(quick: bool = False) -> dict:
     return out
 
 
+def multi_plan_bench(quick: bool = False) -> dict:
+    """N heterogeneous models behind ONE MultiModelServer (the scale step:
+    one process serving mixed traffic classes, Quark/FENIX-style).
+
+    ``served_ms`` is the warm per-model latency of one batch-256 request
+    through the full server path (submit → coalesce → bucket-chunk →
+    round-robin dispatch → split); ``single_ms`` is the same plan called
+    standalone. ``overhead_x = served_ms / single_ms`` is the acceptance
+    bound (≤ 1.25). The aggregate sweep drains a mixed-size request burst
+    across every model at once and reports total flows/s.
+    """
+    from repro.launch.serve import MultiModelServer
+
+    batch = FAMILY_BATCH
+    iters = 10 if quick else 25
+    backend = "onehot"
+    ds = make_dataset("peerrush", flows_per_class=48 if quick else 96)
+
+    fams = _family_models(ds, quick)
+    makers = {"rnn": fams["rnn"], "ae": fams["ae"]}
+
+    def mlp():
+        m = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes,
+                      steps=30 if quick else 60)
+        banks = pegasusify_mlp(m, ds.train["stats"].astype(np.float32),
+                               refine_steps=0)
+        return banks, (ds.test["stats"].astype(np.float32),)
+
+    makers = {"mlp": mlp, **makers}
+
+    server = MultiModelServer(backend=backend)
+    inputs = {}
+    result = {"batch": batch, "backend": backend, "quick": quick,
+              "models": {}, "aggregate": {}}
+    for name, make in makers.items():
+        model, raw_inputs = make()
+        inputs[name] = tuple(jnp.asarray(_tile_to(np.asarray(r), batch))
+                             for r in raw_inputs)
+        t0 = time.perf_counter()
+        plan = server.add_model(name, model)
+        build_ms = (time.perf_counter() - t0) * 1e3
+        result["models"][name] = {"plan_build_ms": build_ms,
+                                  "num_banks": plan.num_banks}
+
+    for name in makers:
+        plan = server.registry.get(name)
+        plan(*inputs[name]).block_until_ready()             # trace + compile
+
+        def served_once(name=name):
+            server.submit(name, *inputs[name])
+            return server.drain()[name][0]                  # np out: synced
+
+        served_once()                                       # warm server path
+        # interleave the two timings so host-load bursts hit both paths
+        # alike; overhead_x is the MEDIAN of pairwise ratios — each adjacent
+        # (single, served) pair runs under the same load, so the ratio is
+        # stable even when a throttling burst outlasts the whole window and
+        # shifts every min (observed 2x absolute swings on shared runners)
+        singles, serveds = [], []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            plan(*inputs[name]).block_until_ready()
+            singles.append((time.perf_counter() - t0) * 1e3)
+            t0 = time.perf_counter()
+            served_once()
+            serveds.append((time.perf_counter() - t0) * 1e3)
+        single_ms = float(np.min(singles))
+        served_ms = float(np.min(serveds))
+        overhead = float(np.median([s / b for s, b in zip(serveds, singles)]))
+        r = result["models"][name]
+        r.update(single_ms=single_ms, served_ms=served_ms, overhead_x=overhead)
+        print(f"multi[{name:4s}] single {single_ms:7.2f} ms  served "
+              f"{served_ms:7.2f} ms  ({overhead:4.2f}x overhead)")
+
+    # aggregate: a mixed-size burst across every model, drained at once.
+    # Same mix in quick and full mode (like ENGINE_BATCH): the committed
+    # baseline's flows/s must stay comparable to CI's quick run.
+    req_sizes = (64, 256, 100, 256)
+    def burst():
+        for name in makers:
+            for s in req_sizes:
+                server.submit(name, *[x[:s] for x in inputs[name]])
+        return server.drain()
+
+    burst()                                                  # warm all buckets
+    flows = sum(req_sizes) * len(makers)
+    # flows/s carries CI's 2x collapse gate (compare.py): a single ~100 ms
+    # timing window sits inside one host-throttle burst and swings ±45%
+    # run-to-run on shared runners. Median over groups spread across
+    # several seconds instead.
+    groups, rounds_per_group = (4, 2) if quick else (5, 3)
+    group_rates = []
+    for g in range(groups):
+        t0 = time.perf_counter()
+        for _ in range(rounds_per_group):
+            burst()
+        dt = (time.perf_counter() - t0) / rounds_per_group
+        group_rates.append(flows / dt)
+        if g + 1 < groups:
+            time.sleep(0.3)                # step past short throttle bursts
+    flows_s = float(np.median(group_rates))
+    result["aggregate"] = {
+        "models": len(makers), "requests": len(req_sizes) * len(makers),
+        "flows": flows, "wall_ms": flows / flows_s * 1e3, "flows_s": flows_s,
+        "group_flows_s": [round(r) for r in group_rates],
+    }
+    st = server.stats()
+    result["registry"] = {name: {k: m[k] for k in ("traces", "jit_calls")}
+                          for name, m in st["models"].items()}
+    print(f"multi-plan aggregate: {len(makers)} models, {flows} flows/burst "
+          f"→ {flows_s:.0f} flows/s median "
+          f"(groups {[round(r / 1e3, 1) for r in group_rates]} kflows/s, "
+          f"{st['batches_dispatched']} micro-batches total)")
+    return result
+
+
 def main(quick: bool = False):
     sw = modeled_switch_pps()
     cpu_pps, us = measured_cpu_pps(batch=1024 if quick else 4096, iters=5 if quick else 20)
@@ -243,8 +404,10 @@ def main(quick: bool = False):
     engine = engine_backend_bench(quick=quick)
     ladder = batch_ladder_bench(quick=quick)
     families = family_sweep(quick=quick)
+    multi = multi_plan_bench(quick=quick)
     return dict(switch_pps=sw, cpu_pps=cpu_pps, speedup=sw / cpu_pps,
-                engine=engine, batch_ladder=ladder, families=families)
+                engine=engine, batch_ladder=ladder, families=families,
+                multi_plan=multi)
 
 
 if __name__ == "__main__":

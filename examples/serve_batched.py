@@ -1,79 +1,98 @@
-"""End-to-end serving driver (the paper's kind is inference): batched greedy
-decoding of a small LM with sharded KV caches, with and without the Pegasus
-LUT path on its FFNs.
+"""Multi-model serving demo: many Pegasus models behind ONE server.
 
-Reports tokens/s and the LUT-vs-dense FFN output error — the LM-scale analog
-of the paper's accuracy-vs-throughput tradeoff (Fig. 9).
+The paper's pitch is a *shared* dataplane — one switch serving many traffic
+classes and models at once (Quark runs whole CNNs on one data plane; FENIX
+multiplexes DNN workloads through one pipeline). This demo is the host-side
+analog: an MLP classifier, an RNN classifier and an AutoEncoder anomaly
+scorer are trained on synthetic traffic, compiled into ExecutionPlans, and
+registered under names in one ``MultiModelServer``. A mixed burst of
+``(model_name, inputs)`` requests of assorted sizes is then coalesced into
+bucket-aligned micro-batches, scheduled round-robin across the models, and
+drained — followed by the per-model serving/compile-cache stats.
 
-Run:  PYTHONPATH=src python examples/serve_batched.py [--arch hymba_1_5b]
+Run:  PYTHONPATH=src python examples/serve_batched.py [--backend kernel]
 """
 
 import argparse
 import time
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.configs.registry import smoke_config
-from repro.launch.serve import Server
-from repro.models.pegasus_layer import (
-    dense_ffn_bytes, lut_bytes, pegasus_ffn_apply, pegasusify_ffn_layer,
-)
-from repro.models.layers import activation
+from repro.data.synthetic_traffic import make_dataset
+from repro.launch.serve import MultiModelServer
+from repro.nets.autoencoder import anomaly_features, pegasusify_ae, train_autoencoder
+from repro.nets.mlp import pegasusify_mlp, train_mlp
+from repro.nets.rnn import pegasusify_rnn, train_rnn
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="deepseek_coder_33b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--backend", default="onehot",
+                    choices=["gather", "onehot", "kernel", "kernel_q8"])
+    ap.add_argument("--steps", type=int, default=120, help="teacher train steps")
+    ap.add_argument("--rounds", type=int, default=3, help="timed burst rounds")
     args = ap.parse_args()
 
-    cfg = smoke_config(args.arch)
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ds = make_dataset("peerrush", flows_per_class=200)   # test split: 90 flows
+    flat = ds.train["seq"].reshape(len(ds.train["label"]), -1)
 
-    print(f"== serving {args.arch} (smoke config) batch={args.batch} ==")
-    server = Server(cfg, mesh, kv_len=64, batch_size=args.batch)
-    prompts = np.random.default_rng(0).integers(
-        1, cfg.vocab_size, (args.batch, 1)).astype(np.int32)
-    server.generate(prompts, max_new=2)  # warmup/compile
+    print(f"== training 3 teachers (steps={args.steps}) ==")
+    mlp = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes,
+                    steps=args.steps)
+    rnn = train_rnn(ds.train["seq"], ds.train["label"], ds.num_classes,
+                    steps=args.steps)
+    ae = train_autoencoder(flat, steps=args.steps)
+
+    print(f"== compiling + registering (backend={args.backend}) ==")
+    server = MultiModelServer(backend=args.backend)
     t0 = time.perf_counter()
-    out = server.generate(prompts, max_new=args.max_new)
-    dt = time.perf_counter() - t0
-    print(f"generated {out.shape[0]}×{out.shape[1]} tokens in {dt:.2f}s "
-          f"→ {args.batch * args.max_new / dt:.1f} tok/s")
+    server.add_model("mlp-stats", pegasusify_mlp(
+        mlp, ds.train["stats"].astype(np.float32), refine_steps=0))
+    server.add_model("rnn-seq", pegasusify_rnn(rnn, ds.train["seq"], depth=4))
+    server.add_model("ae-anomaly", pegasusify_ae(ae, flat.astype(np.float32)))
+    print(f"3 plans compiled in {(time.perf_counter() - t0) * 1e3:.0f} ms: "
+          f"{server.models()}")
 
-    print("== Pegasus LUT path on one FFN layer ==")
-    layer0 = jax.tree.map(lambda x: x[0], server.params["layers"])
-    if "ffn" not in layer0:
-        print("(arch has no dense FFN — skipping LUT demo)")
-        return
-    rng = np.random.default_rng(1)
-    calib = rng.normal(size=(4096, cfg.d_model)).astype(np.float32) * 0.5
-    # v=1, depth=8: per-scalar 2^8-entry tables — the paper's 8-bit
-    # fixed-point activation scheme; EXACT for the linear part, so the only
-    # error is the 256-level activation quantization.
-    peg = pegasusify_ffn_layer(cfg, layer0["ffn"], calib,
-                               group_size=1, depth=8)
-    x = jnp.asarray(rng.normal(size=(64, cfg.d_model)).astype(np.float32) * 0.5)
-    act = activation(cfg.act)
-    p = layer0["ffn"]
-    xin = x @ p["w_in"].astype(jnp.float32)
-    dense = (act(x @ p["w_gate"].astype(jnp.float32)) * xin if "w_gate" in p
-             else act(xin)) @ p["w_out"].astype(jnp.float32)
-    lut = pegasus_ffn_apply(peg, x)
-    rel = float(jnp.linalg.norm(lut - dense) / jnp.linalg.norm(dense))
-    print(f"LUT-FFN relative error vs dense: {rel:.3f}")
+    # a mixed burst: three models × assorted request sizes
+    x_stats = jnp.asarray(ds.test["stats"], jnp.float32)
+    x_seq = jnp.asarray(ds.test["seq"])
+    x_feat = jnp.asarray(anomaly_features(
+        ds.test["seq"].reshape(len(ds.test["label"]), -1)))
+    sizes = (48, 17, 80)
 
-    from repro.configs.registry import get_config
-    full = get_config(args.arch)
-    if full.d_ff:
-        d = dense_ffn_bytes(full)
-        l8 = lut_bytes(full, group_size=16, depth=4, lut_dtype_bytes=1)
-        print(f"full-size FFN bytes/layer: dense bf16 {d/2**20:.0f} MiB vs "
-              f"int8 LUT (v=16, C=16) {l8/2**20:.0f} MiB → {d/l8:.1f}x fewer "
-              f"bytes at decode (the §Perf lever)")
+    def burst():
+        for s in sizes:
+            server.submit("mlp-stats", x_stats[:s])
+            server.submit("rnn-seq", x_seq[:s])
+            server.submit("ae-anomaly", x_feat[:s])
+        return server.drain()
+
+    burst()  # warmup: traces one XLA computation per (model, bucket)
+    t0 = time.perf_counter()
+    log_before = server.batches_dispatched
+    for _ in range(args.rounds):
+        out = burst()
+    dt = (time.perf_counter() - t0) / args.rounds
+    flows = sum(sizes) * 3
+    per_burst = (server.batches_dispatched - log_before) // args.rounds
+    print(f"\nserved {len(sizes) * 3} requests ({flows} flows) per burst in "
+          f"{dt * 1e3:.1f} ms → {flows / dt:.0f} flows/s aggregate")
+    print(f"schedule (fair round-robin, {per_burst} micro-batches/burst): "
+          f"{list(server.schedule_log)[-per_burst:]}")
+    for name, outs in out.items():
+        print(f"  {name:11s} → {len(outs)} outputs, shapes "
+              f"{[tuple(o.shape) for o in outs]}")
+
+    print("\nper-model serving stats:")
+    st = server.stats()
+    for name, s in st["models"].items():
+        print(f"  {name:11s} requests={s['requests_served']:3d} "
+              f"batches={s['batches_run']:3d} flows={s['flows_served']:5d} "
+              f"traces={s['traces']} bucket_hits={s['bucket_hits']} "
+              f"build={s['plan_build_ms']:.0f} ms "
+              f"tables={s['table_bytes'] / 1024:.0f} KiB")
+    print(f"registry: {st['cache']}")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,12 @@ up to a bounded bucket ladder (:data:`DEFAULT_BUCKETS`) so varying sizes hit
 a warm compile cache. Backends: ``{"gather", "onehot", "kernel",
 "kernel_q8"}``; compile-cache behavior is observable via :data:`STATS`
 (``jit_traces`` / ``jit_calls``) and ``plan.compile_stats()``.
+
+Plan lifetime is owned by :class:`PlanRegistry` (``registry.py``): a
+weakref-watched, LRU-bounded memo behind :func:`plan_for` (dropped models
+evict their plans) plus named, strongly-pinned entries behind
+``register``/``get`` — the multi-model serving surface
+(``repro.launch.serve.MultiModelServer``).
 """
 
 from .plan import (
@@ -20,7 +26,12 @@ from .plan import (
     EngineStats,
     ExecutionPlan,
     bucket_batch,
+    bucket_chunks,
     build_plan,
+)
+from .registry import (
+    PlanRegistry,
+    default_registry,
     plan_for,
     reset_plan_cache,
 )
@@ -32,8 +43,11 @@ __all__ = [
     "CompiledBank",
     "EngineStats",
     "ExecutionPlan",
+    "PlanRegistry",
     "bucket_batch",
+    "bucket_chunks",
     "build_plan",
+    "default_registry",
     "plan_for",
     "reset_plan_cache",
 ]

@@ -21,8 +21,12 @@ module does the same for the TPU realization:
     bucket beyond it), so varying request sizes hit a warm compile cache
     instead of retracing per shape. ``EngineStats.jit_traces`` counts actual
     XLA traces; the compile-count tests pin the invariants.
-  * :func:`build_plan` / :func:`plan_for` — compile, or fetch the memoized
-    plan for a model object (bounded cache, strong refs pin ids).
+  * :func:`build_plan` — compile a model into a plan. Memoization lives in
+    :mod:`repro.engine.registry` (:class:`PlanRegistry` / :func:`plan_for`):
+    weakref-watched, bounded, explicitly evictable entries. To support that,
+    a plan holds a *detached replica* of each bank layer (same arrays, new
+    dataclass instance) — compiling a model never pins the caller's model
+    objects, so dropping the model lets the registry reclaim its plan.
 
 Backends are semantics-identical up to quantization:
   ``gather``    — take_along_axis reference (XLA)
@@ -58,9 +62,8 @@ __all__ = [
     "EngineStats",
     "ExecutionPlan",
     "bucket_batch",
+    "bucket_chunks",
     "build_plan",
-    "plan_for",
-    "reset_plan_cache",
 ]
 
 BACKENDS = ("gather", "onehot", "kernel", "kernel_q8")
@@ -82,6 +85,48 @@ def bucket_batch(b: int, buckets: Sequence[int] = DEFAULT_BUCKETS) -> int:
             return int(s)
     top = int(max(buckets))
     return -(-b // top) * top
+
+
+def bucket_chunks(
+    total: int,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    max_batch: int | None = None,
+) -> list[int]:
+    """Split ``total`` coalesced flows into bucket-aligned micro-batch sizes.
+
+    Full chunks are exact bucket sizes (zero pad rows); the tail dispatches
+    either as one padded chunk or as an exact bucket plus a smaller padded
+    chunk — whichever wastes fewer padded rows. This replaces fixed-stride
+    chunking (the old ``max_batch=1024`` slicing), which ignored the bucket
+    ladder and could split a 2048-flow batch that has its own exact bucket.
+    """
+    if total <= 0:
+        raise ValueError(f"total must be positive, got {total}")
+    bs = sorted(int(b) for b in buckets)
+    if max_batch is None:
+        top = bs[-1]
+    else:
+        fits = [b for b in bs if b <= max_batch]
+        # max_batch below the smallest bucket cannot bound anything: every
+        # dispatch pads up to bs[0] anyway, so sub-bucket chunking would
+        # only multiply padded work — clamp to one smallest-bucket chunk
+        top = fits[-1] if fits else bs[0]
+    sizes = []
+    remaining = total
+    while remaining > top:
+        sizes.append(top)
+        remaining -= top
+    if remaining:
+        fit = max((b for b in bs if b <= remaining), default=0)
+        if 0 < fit < remaining:
+            pad_whole = bucket_batch(remaining, bs) - remaining
+            rest = remaining - fit
+            pad_split = bucket_batch(rest, bs) - rest
+            if pad_split < pad_whole:
+                sizes.append(fit)
+                remaining = rest
+        sizes.append(remaining)
+    return sizes
 
 
 @dataclasses.dataclass
@@ -134,6 +179,12 @@ class CompiledBank:
     aux data — so banks can ride through ``jax.jit`` as arguments (shared
     across every compiled bucket) instead of being re-embedded as XLA
     constants in each executable.
+
+    ``self.layer`` is a *detached replica* of the source layer (same arrays,
+    fresh dataclass instance): a compiled bank must never pin the caller's
+    model object, or the registry's drop-the-model-evict-the-plan weakref
+    scheme could never fire (the registry keeps its own weakrefs to the
+    source layers for staleness checks).
     """
 
     def __init__(
@@ -146,7 +197,10 @@ class CompiledBank:
         interpret: bool | None = None,
         strategy: str = "auto",
     ):
-        self.layer = layer
+        # q8 memo keyed on the ORIGINAL layer id (shared across rebuilds of
+        # the same model); the replica below is what the bank retains.
+        lut_q8, scales = quantized_lut_cached(layer)
+        self.layer = dataclasses.replace(layer)
         self.block_t = block_t
         self.interpret = default_interpret() if interpret is None else interpret
         self.strategy = resolve_strategy(strategy, self.interpret)
@@ -160,7 +214,6 @@ class CompiledBank:
         feat_oh = prepare_feat_onehot(layer.trees.features, v)
         thr = layer.trees.thresholds
         lut = layer.lut
-        lut_q8, scales = quantized_lut_cached(layer)
         if kp != k:
             feat_oh = _pad_to(feat_oh, 0, bk)
             thr = jnp.pad(thr, ((0, kp - k), (0, 0)), constant_values=jnp.inf)
@@ -245,6 +298,17 @@ class CompiledBank:
 # ---------------------------------------------------------------------------
 
 
+class _PlanCounters:
+    """Per-plan trace instrumentation, held OUTSIDE the plan so the jitted
+    forward's closure never references the plan itself (see ExecutionPlan)."""
+
+    __slots__ = ("traces", "buckets")
+
+    def __init__(self):
+        self.traces = 0
+        self.buckets: set[tuple[str, int]] = set()
+
+
 class ExecutionPlan:
     """Compiled model: banks + structural forward, backend bound globally.
 
@@ -276,21 +340,32 @@ class ExecutionPlan:
         self.backend = backend
         self.family = family
         self.buckets = tuple(sorted(bucket_sizes)) if bucket_sizes else DEFAULT_BUCKETS
-        # compile-cache instrumentation (per plan; STATS mirrors globally)
-        self.trace_count = 0
+        # compile-cache instrumentation (per plan; STATS mirrors globally).
+        # The counters live in a detached holder: _pure must not close over
+        # `self`, or plan ↔ jit-closure would form a reference cycle and an
+        # evicted plan's executables/tensors would linger until a gen-2 GC
+        # pass instead of freeing on the registry's refcount drop.
+        self._ctr = ctr = _PlanCounters()
         self.jit_calls = 0
-        self.compiled_buckets: set[tuple[str, int]] = set()
 
         def _pure(state, *inputs, backend):
             # body runs at TRACE time only — this is the retrace counter the
             # bucketing tests assert on
             STATS.jit_traces += 1
-            self.trace_count += 1
-            self.compiled_buckets.add((backend, int(inputs[0].shape[0])))
+            ctr.traces += 1
+            ctr.buckets.add((backend, int(inputs[0].shape[0])))
             return forward(lambda bank, x: bank.apply(x, backend), state, *inputs)
 
         self._jit = jax.jit(_pure, static_argnames=("backend",))
         STATS.plan_builds += 1
+
+    @property
+    def trace_count(self) -> int:
+        return self._ctr.traces
+
+    @property
+    def compiled_buckets(self) -> set:
+        return self._ctr.buckets
 
     def __call__(
         self, *inputs: jax.Array, backend: str | None = None, jit: bool = True
@@ -311,7 +386,8 @@ class ExecutionPlan:
 
     @staticmethod
     def _pad_batch(x: jax.Array, bucket: int) -> jax.Array:
-        x = jnp.asarray(x)
+        if not isinstance(x, jax.Array):   # jnp.asarray on a device array
+            x = jnp.asarray(x)             # still costs ~0.1 ms in dtype checks
         b = x.shape[0]
         if b == bucket:
             return x
@@ -496,14 +572,9 @@ def build_plan(
 
 
 # ---------------------------------------------------------------------------
-# Plan memo — serving/benchmark call sites reuse one plan per model object.
+# Model-structure helpers shared with the registry (repro.engine.registry),
+# which owns all plan memoization: weakref-watched, bounded, evictable.
 # ---------------------------------------------------------------------------
-
-# key → (model, plan): the entry pins the MODEL object itself, so a live
-# entry's id() can never be reused by a different model (CPython id reuse
-# only happens after the object is freed).
-_PLAN_CACHE: dict[tuple, tuple[Any, ExecutionPlan]] = {}
-_PLAN_CACHE_MAX = 64
 
 
 def _model_key(model: Any, interpret: bool, kw: dict) -> tuple:
@@ -516,10 +587,10 @@ def _model_key(model: Any, interpret: bool, kw: dict) -> tuple:
 
 def _model_aux(model: Any) -> tuple:
     """Non-bank model state a compiled plan froze at build time (window
-    length, NAM flag, out-bias, embedding tree, logit LUT). plan_for must
-    rebuild when any of it is reassigned — the forwards no longer read these
-    attributes live, so a stale memo hit would silently serve outputs from
-    the pre-mutation tensors."""
+    length, NAM flag, out-bias, embedding tree, logit LUT). The registry
+    must rebuild when any of it is reassigned — the forwards no longer read
+    these attributes live, so a stale memo hit would silently serve outputs
+    from the pre-mutation tensors."""
     if hasattr(model, "x_banks") and hasattr(model, "h_banks"):
         return (int(model.window),)
     if hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
@@ -553,41 +624,3 @@ def _model_banks(model: Any) -> tuple:
     if hasattr(model, "window_bank"):
         return (model.window_bank, *model.head_banks)
     return ()
-
-
-def plan_for(model: Any, *, interpret: bool | None = None, **kw) -> ExecutionPlan:
-    """Memoized build_plan. Plans are backend-agnostic here — pass the
-    backend per call (``plan(x, backend=...)``); binding a default belongs
-    to explicit build_plan. Block-size overrides participate in the key."""
-    interpret = default_interpret() if interpret is None else interpret
-    if "bucket_sizes" in kw and kw["bucket_sizes"] is not None:
-        kw["bucket_sizes"] = tuple(kw["bucket_sizes"])
-    key = _model_key(model, interpret, kw)
-    hit = _PLAN_CACHE.get(key)
-    if hit is not None:
-        cached_model, cached_plan = hit
-        if isinstance(model, (list, tuple)) and isinstance(cached_model, (list, tuple)):
-            same = len(cached_model) == len(model) and all(
-                a is b for a, b in zip(cached_model, model))
-        else:
-            same = cached_model is model
-        # reject hits whose compiled banks no longer match the model's
-        # current banks (in-place mutation like ``peg.out_bank = refine(...)``)
-        banks_now = _model_banks(model)
-        same = same and len(banks_now) == len(cached_plan.banks) and all(
-            cb.layer is l for cb, l in zip(cached_plan.banks, banks_now))
-        # ... and whose frozen non-bank state still matches the live model
-        same = same and _aux_matches(cached_plan._aux_token, _model_aux(model))
-        if same:
-            STATS.plan_cache_hits += 1
-            return cached_plan
-        del _PLAN_CACHE[key]
-    plan = build_plan(model, interpret=interpret, **kw)
-    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
-        _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)))
-    _PLAN_CACHE[key] = (model, plan)
-    return plan
-
-
-def reset_plan_cache() -> None:
-    _PLAN_CACHE.clear()

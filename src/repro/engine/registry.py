@@ -1,0 +1,231 @@
+"""PlanRegistry: named + memoized ExecutionPlans with weakref lifetimes.
+
+Multi-model serving (Quark's all-on-dataplane sharing, FENIX's multiplexed
+pipeline) needs one process to hold MANY compiled plans and to reclaim them
+deterministically. This module owns ALL plan caching:
+
+  * **Anonymous memo** (:meth:`PlanRegistry.plan_for` / module-level
+    :func:`plan_for`) — the ``build_plan`` memo every ``pegasus_*_apply``
+    wrapper hits. Entries are *weakref-watched*: the registry never pins the
+    caller's model (plans hold detached bank replicas, see
+    ``CompiledBank``), and a weakref callback on each watched object evicts
+    the entry the moment the model is garbage-collected — dropped models
+    free their plans, and a recycled ``id()`` can never alias a stale plan
+    because the stale entry is gone before the id can be reused. The memo is
+    LRU-bounded (``max_plans``) and explicitly evictable
+    (:meth:`discard` / :meth:`clear`).
+  * **Named entries** (:meth:`register` / :meth:`get`) — the serving
+    surface: ``register("rnn-ids", model)`` pins the model + plan under a
+    stable name until :meth:`evict`. ``get`` re-validates against the live
+    model (bank swaps, aux reassignment) and transparently recompiles, so a
+    served name never returns stale tables.
+
+Staleness semantics are unchanged from the old strong-ref memo: a hit
+requires the same model identity, the same bank layers in plan order, and
+an unchanged non-bank aux token (window/NAM/bias/LUT — see ``_model_aux``).
+"""
+
+from __future__ import annotations
+
+import time
+import weakref
+from collections import OrderedDict
+from typing import Any
+
+from .plan import (
+    ExecutionPlan,
+    STATS,
+    _aux_matches,
+    _model_aux,
+    _model_banks,
+    _model_key,
+    build_plan,
+)
+from repro.kernels.fuzzy_lut.kernel import default_interpret
+
+__all__ = ["PlanRegistry", "plan_for", "reset_plan_cache", "default_registry"]
+
+
+class _Entry:
+    """One memoized plan + weakrefs to every object whose death evicts it."""
+
+    __slots__ = ("key", "plan", "wrapper_ref", "bank_refs", "__weakref__")
+
+    def __init__(self, key: tuple, model: Any, plan: ExecutionPlan,
+                 on_death) -> None:
+        self.key = key
+        self.plan = plan
+        watch = list(_model_banks(model))
+        # identity check, not `in`: dataclass __eq__ on jax-array fields is
+        # elementwise and has no truth value
+        self.wrapper_ref = None
+        if not isinstance(model, (list, tuple)) and all(model is not w for w in watch):
+            try:
+                self.wrapper_ref = weakref.ref(model, on_death)
+            except TypeError:
+                pass  # bare lists / slotted wrappers: bank refs carry eviction
+        self.bank_refs = tuple(weakref.ref(b, on_death) for b in watch)
+
+    def is_fresh(self, model: Any) -> bool:
+        if self.wrapper_ref is not None and self.wrapper_ref() is not model:
+            return False
+        banks_now = _model_banks(model)
+        if len(banks_now) != len(self.bank_refs):
+            return False
+        if any(r() is not b for r, b in zip(self.bank_refs, banks_now)):
+            return False
+        return _aux_matches(self.plan._aux_token, _model_aux(model))
+
+
+class PlanRegistry:
+    """Owns ExecutionPlans: a bounded weakref-watched memo plus named,
+    strongly-pinned serving entries. See the module docstring."""
+
+    def __init__(self, max_plans: int = 64):
+        self.max_plans = max_plans
+        self._memo: OrderedDict[tuple, _Entry] = OrderedDict()
+        self._named: dict[str, dict] = {}
+
+    # -- anonymous memo (the plan_for surface) ------------------------------
+
+    def plan_for(self, model: Any, *, interpret: bool | None = None,
+                 **kw) -> ExecutionPlan:
+        """Memoized :func:`build_plan`. Build options participate in the
+        key, so the same model may hold e.g. interpret and non-interpret
+        plans side by side."""
+        interpret = default_interpret() if interpret is None else interpret
+        if kw.get("bucket_sizes") is not None:
+            kw["bucket_sizes"] = tuple(kw["bucket_sizes"])
+        key = _model_key(model, interpret, kw)
+        entry = self._memo.get(key)
+        if entry is not None:
+            if entry.is_fresh(model):
+                STATS.plan_cache_hits += 1
+                self._memo.move_to_end(key)
+                return entry.plan
+            self._memo.pop(key, None)  # stale: bank/aux reassignment
+        plan = build_plan(model, interpret=interpret, **kw)
+        holder: list = []
+
+        def on_death(_ref, registry=weakref.ref(self)):
+            reg = registry()
+            if reg is not None and holder and reg._memo.get(key) is holder[0]:
+                del reg._memo[key]
+
+        entry = _Entry(key, model, plan, on_death)
+        holder.append(entry)
+        while len(self._memo) >= self.max_plans:
+            self._memo.popitem(last=False)
+        self._memo[key] = entry
+        return plan
+
+    def discard(self, model: Any) -> int:
+        """Explicitly evict every memo entry built for ``model`` (any build
+        options). Returns the number of entries dropped."""
+        banks = _model_banks(model)
+        # snapshot: a cyclic-GC pass during iteration may fire on_death
+        # callbacks that delete entries from the live dict
+        doomed = [k for k, e in list(self._memo.items())
+                  if (e.wrapper_ref is not None and e.wrapper_ref() is model)
+                  or (banks and len(banks) == len(e.bank_refs)
+                      and all(r() is b for r, b in zip(e.bank_refs, banks)))]
+        for k in doomed:
+            del self._memo[k]
+        return len(doomed)
+
+    def clear(self) -> None:
+        self._memo.clear()
+        self._named.clear()
+
+    def __len__(self) -> int:
+        return len(self._memo)
+
+    def cache_info(self) -> dict:
+        return {"entries": len(self._memo), "capacity": self.max_plans,
+                "named": sorted(self._named)}
+
+    # -- named serving entries ----------------------------------------------
+
+    def register(self, name: str, model: Any, *, backend: str = "onehot",
+                 **build_kw) -> ExecutionPlan:
+        """Compile (or reuse) a plan for ``model`` and pin it under ``name``.
+        Re-registering a name replaces its entry."""
+        t0 = time.perf_counter()
+        plan = self.plan_for(model, backend=backend, **build_kw)
+        self._named[name] = {
+            "model": model,
+            # the named store carries its own freshness watcher: named plans
+            # must survive memo LRU churn without recompiling (the memo is
+            # bounded; the pin is not)
+            "entry": _Entry(None, model, plan, lambda _ref: None),
+            "backend": backend,
+            "build_kw": dict(build_kw),
+            "plan_build_ms": (time.perf_counter() - t0) * 1e3,
+        }
+        return plan
+
+    def get(self, name: str) -> ExecutionPlan:
+        """The plan serving ``name`` — revalidated against the live model,
+        recompiling on bank/aux reassignment so a name never serves stale
+        tables."""
+        ent = self._named[name]
+        if ent["entry"].is_fresh(ent["model"]):
+            return ent["entry"].plan
+        plan = self.plan_for(ent["model"], backend=ent["backend"],
+                             **ent["build_kw"])
+        ent["entry"] = _Entry(None, ent["model"], plan, lambda _ref: None)
+        return plan
+
+    def model(self, name: str) -> Any:
+        return self._named[name]["model"]
+
+    def names(self) -> list[str]:
+        return sorted(self._named)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._named
+
+    def evict(self, name: str) -> bool:
+        """Drop a named entry (and its memo entry). The plan dies with the
+        registry's pins unless the caller holds it elsewhere."""
+        ent = self._named.pop(name, None)
+        if ent is None:
+            return False
+        self.discard(ent["model"])
+        return True
+
+    def stats(self) -> dict:
+        """Per-name compile-cache + build stats (the serving ops surface)."""
+        return {
+            name: {
+                "backend": ent["backend"],
+                "plan_build_ms": ent["plan_build_ms"],
+                "num_banks": ent["entry"].plan.num_banks,
+                "table_bytes": ent["entry"].plan.table_bytes(),
+                **ent["entry"].plan.compile_stats(),
+            }
+            for name, ent in sorted(self._named.items())
+        }
+
+
+# ---------------------------------------------------------------------------
+# Default (module-global) registry — the plan_for every wrapper hits.
+# ---------------------------------------------------------------------------
+
+_DEFAULT = PlanRegistry()
+
+
+def default_registry() -> PlanRegistry:
+    return _DEFAULT
+
+
+def plan_for(model: Any, *, interpret: bool | None = None, **kw) -> ExecutionPlan:
+    """Memoized build_plan against the default registry. Plans are
+    backend-agnostic here — pass the backend per call
+    (``plan(x, backend=...)``); binding a default belongs to explicit
+    build_plan/register. Block-size overrides participate in the key."""
+    return _DEFAULT.plan_for(model, interpret=interpret, **kw)
+
+
+def reset_plan_cache() -> None:
+    _DEFAULT.clear()

@@ -4,17 +4,25 @@ Pegasus LUT path as a first-class serving feature (--pegasus).
 ``serve_step`` is the unit the decode_32k/long_500k dry-run cells lower:
 one new token for the whole batch against preallocated caches/states.
 
-``PegasusServer`` is the dataplane-model analog: ONE compiled
+``PegasusServer`` is the dataplane-model analog for ONE model: a compiled
 :class:`repro.engine.ExecutionPlan` (layouts + int8 LUTs precomputed at
 plan-build) reused across every request batch, with the backend —
 ``gather | onehot | kernel | kernel_q8`` — chosen once via ``--backend``.
+
+``MultiModelServer`` is the scale step the paper's pitch implies (a shared
+dataplane serves MANY models and traffic classes at once — Quark runs whole
+CNNs on one switch, FENIX multiplexes DNN workloads through one pipeline):
+N named heterogeneous plans (MLP/RNN/CNN/AE) behind one server, requests
+addressed ``(model_name, inputs)``, same-model requests coalesced into
+bucket-aligned micro-batches, models scheduled fairly (round-robin), and
+per-model serving + compile-cache stats.
 """
 
 from __future__ import annotations
 
 import argparse
-import functools
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +35,8 @@ from repro.models.transformer import (
 
 from .mesh import batch_specs, decode_state_specs, named, param_specs
 
-__all__ = ["make_serve_step", "make_prefill_step", "Server", "PegasusServer"]
+__all__ = ["make_serve_step", "make_prefill_step", "Server", "PegasusServer",
+           "MultiModelServer"]
 
 
 def make_serve_step(cfg: ArchConfig):
@@ -88,23 +97,31 @@ class PegasusServer:
     to its compile bucket (powers of two by default), so arbitrary request
     sizes hit a warm XLA executable instead of retracing per shape.
     Requests may be single inputs or tuples (e.g. ``(seq, payload)`` for
-    CNN-L); requests are fused into one plan call (chunked at
-    ``max_batch``) and the outputs split back out. ``stats()`` reports the
+    CNN-L); requests are fused into one plan call, chunked along the
+    bucket ladder (``repro.engine.bucket_chunks``) so full chunks are exact
+    bucket sizes, and the outputs split back out. ``stats()`` reports the
     compile-cache counters (traces vs bucket hits).
 
     Every request input MUST carry a leading batch dim (wrap a single flow
     as ``x[None]``) — axis 0 is always interpreted as the batch axis.
+
+    Serving counters are incremented ONLY after the plan call succeeds — a
+    raising request (bad shape, unknown backend) must not corrupt
+    ``requests_served``/``batches_run``.
     """
 
     def __init__(self, model, *, backend: str = "onehot",
-                 interpret: bool | None = None, max_batch: int = 1024):
+                 interpret: bool | None = None, max_batch: int | None = None):
         from repro.engine import build_plan
 
         t0 = time.perf_counter()
         self.plan = build_plan(model, backend=backend, interpret=interpret)
         self.plan_build_ms = (time.perf_counter() - t0) * 1e3
         self.backend = backend
-        self.max_batch = max_batch
+        # default cap = the top of the plan's bucket ladder (4096), so a
+        # coalesced batch that has its own exact bucket is never split
+        self.max_batch = (max(self.plan.buckets) if max_batch is None
+                          else max_batch)
         self.requests_served = 0
         self.batches_run = 0
 
@@ -121,28 +138,274 @@ class PegasusServer:
 
     def infer(self, *inputs, backend: str | None = None) -> jax.Array:
         """One already-batched call through the cached plan (one request)."""
-        self.batches_run += 1
+        y = self.plan(*inputs, backend=backend)
+        self.batches_run += 1            # success-only counting
         self.requests_served += 1
-        return self.plan(*inputs, backend=backend)
+        return y
 
     def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
-        """Fuse a list of requests into plan-sized batches and split results."""
+        """Fuse a list of requests into bucket-aligned batches, split results."""
+        from repro.engine import bucket_chunks
+
         if not requests:
             return []
-        reqs = [tuple(r) if isinstance(r, (tuple, list)) else (r,) for r in requests]
-        sizes = [int(np.shape(r[0])[0]) for r in reqs]
-        n_in = len(reqs[0])
-        cat = [jnp.concatenate([jnp.asarray(r[i]) for r in reqs], axis=0)
-               for i in range(n_in)]
-        total = sum(sizes)
-        chunks = []
-        for start in range(0, total, self.max_batch):
-            sl = [c[start : start + self.max_batch] for c in cat]
+        cat, sizes, total = _coalesce(requests)
+        chunks, start = [], 0
+        for size in bucket_chunks(total, self.plan.buckets, self.max_batch):
+            sl = (cat if size == total
+                  else [c[start : start + size] for c in cat])
             chunks.append(self.plan(*sl, backend=backend))
-            self.batches_run += 1
+            start += size
         out = jnp.concatenate(chunks, axis=0) if len(chunks) > 1 else chunks[0]
-        self.requests_served += len(reqs)
-        return [np.asarray(o) for o in jnp.split(out, np.cumsum(sizes)[:-1], axis=0)]
+        # commit counters only once EVERY chunk dispatched — a failure on a
+        # later chunk must not leave batches_run ahead of requests_served
+        self.batches_run += len(chunks)
+        self.requests_served += len(sizes)
+        return _split(out, sizes)
+
+
+def _coalesce(requests) -> tuple[list, list[int], int]:
+    """Normalize a request list (arrays or input tuples, each with a leading
+    batch dim) into per-input concatenations + per-request sizes."""
+    reqs = [tuple(r) if isinstance(r, (tuple, list)) else (r,) for r in requests]
+    sizes = [int(np.shape(r[0])[0]) for r in reqs]
+    if len(reqs) == 1:
+        cat = [r if isinstance(r, jax.Array) else jnp.asarray(r)
+               for r in reqs[0]]
+    else:
+        cat = [jnp.concatenate([jnp.asarray(r[i]) for r in reqs], axis=0)
+               for i in range(len(reqs[0]))]
+    return cat, sizes, sum(sizes)
+
+
+def _split(out: jax.Array, sizes: list[int]) -> list[np.ndarray]:
+    """Cut a coalesced output back into per-request numpy arrays."""
+    if len(sizes) == 1:
+        return [np.asarray(out)]
+    return [np.asarray(o)
+            for o in jnp.split(out, np.cumsum(sizes)[:-1], axis=0)]
+
+
+class MultiModelServer:
+    """Many heterogeneous models behind ONE server.
+
+    Each model is compiled once and pinned under a name in a
+    :class:`repro.engine.PlanRegistry` (per-model backend override allowed).
+    Requests address models by name; pending same-model requests are
+    coalesced into bucket-aligned micro-batches (``bucket_chunks``: full
+    chunks are exact bucket sizes, the tail pads minimally) and the models
+    with pending work are scheduled fairly — one micro-batch per model per
+    round-robin turn — so a burst on one model cannot starve the others.
+
+    Two call styles:
+      * ``infer(name, *inputs)`` — immediate single-request dispatch.
+      * ``submit(name, *inputs)`` + ``drain()`` — enqueue across models,
+        then serve everything; ``drain`` returns ``{name: [out_per_request]}``
+        in per-model submit order. ``serve(requests)`` wraps submit+drain
+        for a mixed ``[(name, inputs), ...]`` list, preserving order.
+
+    All counters (``requests_served``/``batches_run``/``flows_served``) are
+    per model and committed only when a model's queue fully serves; a
+    failing model keeps its queue (retryable, never double-counted), its
+    exception lands in ``last_drain_errors``, and every other model drains
+    and returns normally. ``schedule_log`` records the model name of every
+    dispatched micro-batch — the fairness tests assert on it.
+    """
+
+    def __init__(self, models: dict | None = None, *, backend: str = "onehot",
+                 interpret: bool | None = None, max_batch: int | None = None,
+                 registry=None):
+        from repro.engine import DEFAULT_BUCKETS, PlanRegistry
+
+        self.registry = PlanRegistry() if registry is None else registry
+        self.backend = backend
+        self.interpret = interpret
+        self.max_batch = (max(DEFAULT_BUCKETS) if max_batch is None
+                          else max_batch)
+        self._queues: dict[str, deque] = {}
+        self._counters: dict[str, dict] = {}
+        # bounded: the log is a debugging/fairness-test surface, not an
+        # audit trail — a long-lived server must not grow it without limit
+        self.schedule_log: deque = deque(maxlen=4096)
+        self.batches_dispatched = 0
+        self.last_drain_errors: dict[str, Exception] = {}
+        for name in self.registry.names():   # adopt a pre-populated registry
+            self._track(name)
+        for name, model in dict(models or {}).items():
+            self.add_model(name, model)
+
+    def _track(self, name: str) -> None:
+        """Queue + counters for a registry name this server serves. Names
+        registered on a shared registry after construction are adopted
+        lazily on first submit/infer."""
+        self._queues.setdefault(name, deque())
+        self._counters.setdefault(name, {"requests_served": 0,
+                                         "batches_run": 0, "flows_served": 0})
+
+    def _tracked(self, name: str) -> None:
+        if name not in self._counters:
+            if name not in self.registry:
+                raise KeyError(
+                    f"unknown model {name!r}; registered: {self.models()}")
+            self._track(name)
+
+    # -- model management ---------------------------------------------------
+
+    def add_model(self, name: str, model, *, backend: str | None = None,
+                  **build_kw):
+        """Compile + register one model; returns its ExecutionPlan."""
+        plan = self.registry.register(
+            name, model, backend=backend or self.backend,
+            interpret=self.interpret, **build_kw)
+        self._track(name)
+        return plan
+
+    def remove_model(self, name: str) -> bool:
+        """Evict a model; its pending queue is dropped with it."""
+        self._queues.pop(name, None)
+        self._counters.pop(name, None)
+        return self.registry.evict(name)
+
+    def models(self) -> list[str]:
+        return self.registry.names()
+
+    # -- request paths ------------------------------------------------------
+
+    def infer(self, name: str, *inputs, backend: str | None = None):
+        """Immediate single-request dispatch through the named plan."""
+        self._tracked(name)
+        y = self.registry.get(name)(*inputs, backend=backend)
+        c = self._counters[name]
+        c["requests_served"] += 1        # success-only counting
+        c["batches_run"] += 1
+        c["flows_served"] += int(np.shape(inputs[0])[0])
+        return y
+
+    def submit(self, name: str, *inputs) -> int:
+        """Enqueue one request; returns its per-model position for this
+        drain round. Inputs must carry a leading batch dim."""
+        self._tracked(name)
+        q = self._queues[name]
+        q.append(tuple(x if isinstance(x, jax.Array) else jnp.asarray(x)
+                       for x in inputs))
+        return len(q) - 1
+
+    def pending(self) -> dict[str, int]:
+        return {n: len(q) for n, q in self._queues.items() if q}
+
+    def discard_pending(self, name: str) -> int:
+        """Drop a model's queued requests (returns how many). The escape
+        hatch for a poisoned queue: a permanently-bad request is coalesced
+        with every later submit to its model, so retries would fail
+        forever until the queue is cleared."""
+        q = self._queues.get(name)
+        n = len(q) if q else 0
+        if q:
+            q.clear()
+        return n
+
+    def drain(self, *, backend: str | None = None) -> dict:
+        """Serve every queued request: per model, coalesce the queue and cut
+        it into bucket-aligned micro-batches; dispatch round-robin (one
+        chunk per model with remaining work per turn). Returns
+        ``{name: [np.ndarray per request, in submit order]}``.
+
+        Failures are isolated per model: a model whose dispatch raises keeps
+        its queue (retryable) and ALL its counters untouched (they only
+        commit when the model's queue fully serves — a retry never
+        double-counts partially-run chunks), while every other model drains
+        normally and returns its results. The per-model exceptions land in
+        ``last_drain_errors``; drain raises only if NO model succeeded. A
+        request that is itself bad will fail every retry (it coalesces with
+        whatever else queues up) — clear it with ``discard_pending``."""
+        from repro.engine import bucket_chunks
+
+        work = []
+        self.last_drain_errors = {}
+        for name, q in self._queues.items():
+            if not q:
+                continue
+            try:
+                cat, sizes, total = _coalesce(list(q))
+                plan = self.registry.get(name)
+                chunks = bucket_chunks(total, plan.buckets, self.max_batch)
+            except Exception as e:
+                self.last_drain_errors[name] = e
+                continue
+            work.append({"name": name, "plan": plan, "cat": cat,
+                         "sizes": sizes, "total": total,
+                         "chunks": deque(chunks), "start": 0, "outs": [],
+                         "batches": 0})
+
+        results: dict = {}
+        while work:
+            next_round = []
+            for w in work:                       # fair: one chunk per model
+                size = w["chunks"].popleft()
+                if w["start"] == 0 and size == w["total"]:
+                    sl = w["cat"]                # whole queue in one chunk
+                else:
+                    sl = [c[w["start"] : w["start"] + size] for c in w["cat"]]
+                try:
+                    w["outs"].append(w["plan"](*sl, backend=backend))
+                except Exception as e:           # isolate: queue + stats kept
+                    self.last_drain_errors[w["name"]] = e
+                    continue
+                self.schedule_log.append(w["name"])
+                self.batches_dispatched += 1
+                w["start"] += size
+                w["batches"] += 1
+                if w["chunks"]:
+                    next_round.append(w)
+                else:                            # model fully served: commit
+                    out = (jnp.concatenate(w["outs"], axis=0)
+                           if len(w["outs"]) > 1 else w["outs"][0])
+                    results[w["name"]] = _split(out, w["sizes"])
+                    c = self._counters[w["name"]]
+                    c["requests_served"] += len(w["sizes"])
+                    c["batches_run"] += w["batches"]
+                    c["flows_served"] += w["total"]
+                    self._queues[w["name"]].clear()
+            work = next_round
+        if self.last_drain_errors and not results:
+            raise next(iter(self.last_drain_errors.values()))
+        return results
+
+    def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
+        """Mixed-model convenience: ``requests`` is ``[(name, inputs), ...]``
+        (inputs a single array or a tuple); returns outputs aligned to the
+        request order. If any requested model failed to drain, its actual
+        error is raised with the already-served models' outputs attached as
+        ``partial_results`` on the exception (their work is computed and
+        counted — only the failed models' requests need resubmitting)."""
+        order = []
+        for name, inputs in requests:
+            inputs = tuple(inputs) if isinstance(inputs, (tuple, list)) else (inputs,)
+            order.append((name, self.submit(name, *inputs)))
+        by_model = self.drain(backend=backend)
+        for name, _ in order:
+            if name not in by_model and name in self.last_drain_errors:
+                err = self.last_drain_errors[name]
+                err.partial_results = by_model
+                raise err
+        return [by_model[name][pos] for name, pos in order]
+
+    def stats(self) -> dict:
+        """Per-model serving counters merged with the registry's per-plan
+        compile-cache stats, plus the memo cache_info."""
+        reg = self.registry.stats()
+        zeros = {"requests_served": 0, "batches_run": 0, "flows_served": 0}
+        return {
+            "models": {
+                # zeroed defaults keep the schema uniform for names on a
+                # shared registry that this server hasn't served yet
+                name: {**zeros, **self._counters.get(name, {}),
+                       **reg.get(name, {})}
+                for name in self.models()
+            },
+            "cache": self.registry.cache_info(),
+            "batches_dispatched": self.batches_dispatched,
+        }
 
 
 def _pegasus_demo(args) -> None:

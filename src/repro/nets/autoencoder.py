@@ -1,10 +1,23 @@
 """AutoEncoder (paper §6.3, §7.4): unsupervised anomaly detection on the
-dataplane via MAE reconstruction error over (len, IPD) sequences.
+dataplane via reconstruction error over (len, IPD) sequence features.
 
-Dense teacher: Emb-style input projection → FC encoder → FC decoder,
-trained on BENIGN traffic only. Deployment form: every FC becomes a fused
-Pegasus bank (Advanced Fusion applies — the paper lists AutoEncoder among
-the models using it); the MAE and threshold compare are dataplane ALU ops.
+Dense teacher: engineered window features → standardize on benign traffic →
+FC encoder → FC decoder, trained on BENIGN flows only. Deployment form:
+every FC becomes a fused Pegasus bank (Advanced Fusion applies — the paper
+lists AutoEncoder among the models using it); the feature stats, the MAE and
+the threshold compare are dataplane ALU ops, and the benign standardization
+is folded into the first bank's weights so the switch sees raw 8-bit
+features.
+
+Why features + standardization (the seed's known-failing AUC): raw
+(len, IPD) windows have per-dimension scales differing by >10x, so the MAE
+score was dominated by high-variance packet-length dims and attacks that sit
+*inside* the raw range (C&C beaconing: in-range lengths, unusual regularity)
+scored at chance. :func:`anomaly_features` appends per-signal temporal stats
+(mean/std/lag-1/lag-2 deltas — the periodicity fingerprint), and the score
+is measured in benign z-space, where out-of-manifold inputs can't be
+reconstructed (the banks' calibration-range clamping enforces this
+structurally in the deployed form).
 """
 
 from __future__ import annotations
@@ -19,17 +32,55 @@ from repro.core.amm import PegasusLinear, init_pegasus_linear
 from repro.engine import plan_for
 from repro.train.optimizer import adamw_init, adamw_update, cosine_schedule
 
-__all__ = ["AutoEncoder", "train_autoencoder", "ae_apply", "reconstruction_error",
-           "pegasusify_ae", "pegasus_ae_error", "auc_score"]
+__all__ = ["AutoEncoder", "AEBanks", "anomaly_features", "train_autoencoder",
+           "ae_apply", "reconstruction_error", "pegasusify_ae",
+           "pegasus_ae_error", "auc_score"]
 
 LATENT = 3
 HIDDEN = 12
+Z_CLIP = 6.0       # input saturation in benign σ units; mimics the deployed
+# banks, whose trees clamp to the benign calibration range
 
 
 @dataclasses.dataclass
 class AutoEncoder:
     params: dict
-    in_dim: int
+    in_dim: int                 # anomaly_features output dim
+    feat_mu: np.ndarray         # benign feature mean, [0, 1] units
+    feat_sigma: np.ndarray      # benign feature std (floored), [0, 1] units
+
+
+class AEBanks(list):
+    """Pegasus deployment form: a plain bank list (the engine compiles it
+    like any MLP stack — ``build_plan``/``plan_for`` accept it unchanged)
+    carrying the benign standardization the anomaly score needs."""
+
+    def __init__(self, banks, feat_mu: np.ndarray, feat_sigma: np.ndarray):
+        super().__init__(banks)
+        self.feat_mu = np.asarray(feat_mu, np.float32)
+        self.feat_sigma = np.asarray(feat_sigma, np.float32)
+
+
+def anomaly_features(x: jax.Array) -> jax.Array:
+    """Flattened (len, IPD) window → window + temporal-stat features.
+
+    ``x``: ``[..., W*2]`` interleaved ``(len_t, ipd_t)`` 8-bit values. Appends,
+    per signal: mean, 2·std, mean |lag-1 Δ|, mean |lag-2 Δ| — all clipped to
+    the same 0..255 PHV range (each is a running-sum/abs-diff ALU op on the
+    switch). Lag-1 vs lag-2 separates periodic beaconing (large Δ1, tiny Δ2)
+    from bursty-but-aperiodic benign traffic.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    lens, ipds = x[..., 0::2], x[..., 1::2]
+    feats = [x]
+    for s in (lens, ipds):
+        feats += [
+            s.mean(-1, keepdims=True),
+            s.std(-1, keepdims=True) * 2.0,
+            jnp.abs(jnp.diff(s, axis=-1)).mean(-1, keepdims=True),
+            jnp.abs(s[..., 2:] - s[..., :-2]).mean(-1, keepdims=True),
+        ]
+    return jnp.clip(jnp.concatenate(feats, axis=-1), 0.0, 255.0)
 
 
 def init_ae(in_dim: int, seed: int = 0) -> dict:
@@ -46,31 +97,49 @@ def init_ae(in_dim: int, seed: int = 0) -> dict:
     }
 
 
-def ae_apply(p: dict, x: jax.Array) -> jax.Array:
-    xf = x.astype(jnp.float32) / 255.0
-    h = jax.nn.relu(xf @ p["w_e1"] + p["b_e1"])
-    z = jax.nn.relu(h @ p["w_e2"] + p["b_e2"])
-    h = jax.nn.relu(z @ p["w_d1"] + p["b_d1"])
-    return h @ p["w_d2"] + p["b_d2"]            # reconstruction in [0,1] units
+def _z_apply(p: dict, z: jax.Array) -> jax.Array:
+    """Encoder/decoder over standardized features; reconstruction in z units.
+    Inputs saturate at ±Z_CLIP but the score compares against the UNCLIPPED
+    z, so far-out-of-manifold inputs are unreconstructable by construction."""
+    zc = jnp.clip(z, -Z_CLIP, Z_CLIP)
+    h = jax.nn.relu(zc @ p["w_e1"] + p["b_e1"])
+    lat = jax.nn.relu(h @ p["w_e2"] + p["b_e2"])
+    h = jax.nn.relu(lat @ p["w_d1"] + p["b_d1"])
+    return h @ p["w_d2"] + p["b_d2"]
 
 
-def reconstruction_error(p: dict, x: jax.Array) -> jax.Array:
-    """MAE per flow (the paper's anomaly score)."""
-    recon = ae_apply(p, x)
-    return jnp.abs(recon - x.astype(jnp.float32) / 255.0).mean(axis=-1)
+def _standardize(ae_or_banks, x: jax.Array) -> jax.Array:
+    feats = anomaly_features(x)
+    mu = jnp.asarray(ae_or_banks.feat_mu)
+    sigma = jnp.asarray(ae_or_banks.feat_sigma)
+    return (feats / 255.0 - mu) / sigma
 
 
-def train_autoencoder(x_benign: np.ndarray, *, steps: int = 1200, seed: int = 0) -> AutoEncoder:
-    in_dim = x_benign.shape[1]
+def ae_apply(ae: AutoEncoder, x: jax.Array) -> jax.Array:
+    """Raw window → z-space reconstruction (dense teacher)."""
+    return _z_apply(ae.params, _standardize(ae, x))
+
+
+def reconstruction_error(ae: AutoEncoder, x: jax.Array) -> jax.Array:
+    """MAE per flow in benign z-space (the anomaly score)."""
+    z = _standardize(ae, x)
+    return jnp.abs(_z_apply(ae.params, z) - z).mean(axis=-1)
+
+
+def train_autoencoder(x_benign: np.ndarray, *, steps: int = 400, seed: int = 0) -> AutoEncoder:
+    feats = np.asarray(anomaly_features(x_benign))
+    feat_mu = feats.mean(0) / 255.0
+    feat_sigma = np.maximum(feats.std(0) / 255.0, 1e-3)
+    in_dim = feats.shape[1]
     params = init_ae(in_dim, seed)
-    x = jnp.asarray(x_benign)
+    z = jnp.asarray((feats / 255.0 - feat_mu) / feat_sigma)
     sched = cosine_schedule(3e-3, warmup_steps=30, total_steps=steps)
     state = adamw_init(params)
 
     @jax.jit
-    def step_fn(params, state, xb):
+    def step_fn(params, state, zb):
         def loss(p):
-            return jnp.abs(ae_apply(p, xb) - xb.astype(jnp.float32) / 255.0).mean()
+            return jnp.abs(_z_apply(p, zb) - zb).mean()
 
         l, g = jax.value_and_grad(loss)(params)
         params, state, _ = adamw_update(params, g, state, lr=sched(state.step), weight_decay=1e-4)
@@ -79,9 +148,10 @@ def train_autoencoder(x_benign: np.ndarray, *, steps: int = 1200, seed: int = 0)
     key = jax.random.PRNGKey(seed)
     for _ in range(steps):
         key, sub = jax.random.split(key)
-        ix = jax.random.randint(sub, (256,), 0, x.shape[0])
-        params, state, _ = step_fn(params, state, x[ix])
-    return AutoEncoder(params=params, in_dim=in_dim)
+        ix = jax.random.randint(sub, (256,), 0, z.shape[0])
+        params, state, _ = step_fn(params, state, z[ix])
+    return AutoEncoder(params=params, in_dim=in_dim,
+                       feat_mu=feat_mu, feat_sigma=feat_sigma)
 
 
 # ---------------------------------------------------------------------------
@@ -89,21 +159,27 @@ def train_autoencoder(x_benign: np.ndarray, *, steps: int = 1200, seed: int = 0)
 # ---------------------------------------------------------------------------
 
 
-def pegasusify_ae(ae: AutoEncoder, x_calib: np.ndarray, *, depth: int = 8) -> list[PegasusLinear]:
-    """Four fused banks (1-D groups: per-unit 2^8-entry tables, ReLU folded)."""
+def pegasusify_ae(ae: AutoEncoder, x_calib: np.ndarray, *, depth: int = 8) -> AEBanks:
+    """Four fused banks (1-D groups: per-unit 2^depth-entry tables, ReLU
+    folded). The first bank consumes RAW 0..255 features — the /255,
+    mean-shift and 1/σ of the benign standardization are folded into its
+    weights — so the switch pipeline never materializes floats."""
     p = ae.params
-    xf = x_calib.astype(np.float32)
-    acts = [xf]
-    h = jnp.asarray(xf) / 255.0
+    mu, sigma = ae.feat_mu, ae.feat_sigma
+    feats = np.asarray(anomaly_features(x_calib), np.float32)
+    # pre-activations along the z path, for per-bank calibration
+    acts = [feats]
+    h = jnp.asarray((feats / 255.0 - mu) / sigma)
     for w, b in [("w_e1", "b_e1"), ("w_e2", "b_e2"), ("w_d1", "b_d1")]:
         h = h @ p[w] + p[b]
         acts.append(np.asarray(h))
         h = jax.nn.relu(h)
+    w_e1 = np.asarray(p["w_e1"], np.float32)
+    w1 = w_e1 / (255.0 * sigma[:, None])
+    b1 = np.asarray(p["b_e1"], np.float32) - (mu / sigma) @ w_e1
     banks = [
-        init_pegasus_linear(
-            np.asarray(p["w_e1"], np.float32) / 255.0, np.asarray(p["b_e1"], np.float32),
-            acts[0], group_size=1, depth=depth, lut_bits=None,
-        )
+        init_pegasus_linear(w1, b1, acts[0], group_size=1, depth=depth,
+                            lut_bits=None)
     ]
     for i, (w, b) in enumerate([("w_e2", "b_e2"), ("w_d1", "b_d1"), ("w_d2", "b_d2")]):
         banks.append(
@@ -113,18 +189,20 @@ def pegasusify_ae(ae: AutoEncoder, x_calib: np.ndarray, *, depth: int = 8) -> li
                 act_fn=lambda c: jnp.maximum(c, 0.0),
             )
         )
-    return banks
+    return AEBanks(banks, mu, sigma)
 
 
 def pegasus_ae_error(
-    banks: list[PegasusLinear], x: jax.Array, *, backend: str = "gather",
+    banks: AEBanks, x: jax.Array, *, backend: str = "gather",
     jit: bool = False
 ) -> jax.Array:
-    """Reconstruction MAE through the engine's bank-stack plan. Eager by
-    default — one-shot evaluation entry point; serving call sites get the
-    jitted path."""
-    h = plan_for(banks)(x, backend=backend, jit=jit)
-    return jnp.abs(h - x.astype(jnp.float32) / 255.0).mean(axis=-1)
+    """Reconstruction MAE through the engine's bank-stack plan, in benign
+    z-space. Eager by default — one-shot evaluation entry point; serving
+    call sites get the jitted path (``build_plan``/``MultiModelServer``)."""
+    feats = anomaly_features(x)
+    zhat = plan_for(banks)(feats, backend=backend, jit=jit)
+    z = (feats / 255.0 - jnp.asarray(banks.feat_mu)) / jnp.asarray(banks.feat_sigma)
+    return jnp.abs(zhat - z).mean(axis=-1)
 
 
 def auc_score(scores: np.ndarray, labels: np.ndarray) -> float:

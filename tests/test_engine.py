@@ -67,13 +67,14 @@ def _cnn_l(ds):
 
 
 def _ae(ds):
-    from repro.nets.autoencoder import pegasusify_ae, train_autoencoder
+    from repro.nets.autoencoder import anomaly_features, pegasusify_ae, train_autoencoder
 
     x = ds.train["seq"].reshape(len(ds.train["label"]), -1)
     m = train_autoencoder(x, steps=STEPS)
     banks = pegasusify_ae(m, x.astype(np.float32), depth=4)
     xt = ds.test["seq"][:BATCH].reshape(BATCH, -1)
-    return banks, (jnp.asarray(xt, jnp.float32),)
+    # the AE bank stack consumes the engineered feature view
+    return banks, (anomaly_features(jnp.asarray(xt, jnp.float32)),)
 
 
 FAMILIES = {"mlp": _mlp, "rnn": _rnn, "cnn": _cnn, "cnn_l": _cnn_l, "ae": _ae}
@@ -320,7 +321,7 @@ def test_pegasus_server_batches(ds):
     ref = np.asarray(plan(x, backend="onehot"))
     np.testing.assert_allclose(np.concatenate(outs), ref, rtol=1e-5, atol=1e-5)
     assert server.requests_served == 4
-    assert server.batches_run == 2                 # 16 flows / max_batch=8
+    assert server.batches_run == 2                 # 16 flows → buckets [8, 8]
     # second round reuses the SAME plan: no new layout/quant work
     before = STATS.layout_builds
     server.serve(reqs)
@@ -331,6 +332,44 @@ def test_pegasus_server_batches(ds):
     assert st["traces"] == 1
     assert st["bucket_hits"] == 3
     assert st["buckets"] == [("onehot", 8)]
+
+
+def test_pegasus_server_counts_on_success_only(ds):
+    """Satellite: a raising request must not corrupt the serving stats."""
+    from repro.launch.serve import PegasusServer
+
+    banks, _, (x,) = _family(ds, "mlp")
+    server = PegasusServer(banks, backend="onehot", max_batch=8)
+    server.serve([np.asarray(x[:4])])
+    assert (server.requests_served, server.batches_run) == (1, 1)
+    with pytest.raises(ValueError, match="unknown backend"):
+        server.infer(x[:4], backend="dense")
+    with pytest.raises(ValueError, match="unknown backend"):
+        server.serve([np.asarray(x[:4])], backend="dense")
+    assert (server.requests_served, server.batches_run) == (1, 1)
+    # and the server still serves fine afterwards
+    server.infer(x[:4])
+    assert (server.requests_served, server.batches_run) == (2, 2)
+
+
+def test_bucket_chunks_policy():
+    from repro.engine import DEFAULT_BUCKETS, bucket_chunks
+
+    assert bucket_chunks(16, max_batch=8) == [8, 8]
+    assert bucket_chunks(256) == [256]              # exact bucket: one chunk
+    assert bucket_chunks(300) == [256, 44]          # exact + minimal pad tail
+    assert bucket_chunks(904) == [904]              # split wouldn't cut padding
+    top = DEFAULT_BUCKETS[-1]
+    assert bucket_chunks(top + 904) == [top, 904]
+    assert bucket_chunks(2048, max_batch=4096) == [2048]  # the old fixed-1024
+    # chunking split this despite its exact bucket
+    assert bucket_chunks(3) == [3]
+    assert sum(bucket_chunks(12345)) == 12345
+    # a cap below the smallest bucket can't bound anything (dispatches pad
+    # up to the smallest bucket regardless) — it must not multiply work
+    assert bucket_chunks(8, max_batch=4) == [8]
+    with pytest.raises(ValueError):
+        bucket_chunks(0)
 
 
 # ---------------------------------------------------------------------------
@@ -408,3 +447,231 @@ def test_bucket_batch_policy():
     assert bucket_batch(2 * top) == 2 * top       # multiples of the largest
     with pytest.raises(ValueError):
         bucket_batch(0)
+
+
+# ---------------------------------------------------------------------------
+# PlanRegistry + multi-model serving (ISSUE 3 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def _fresh_banks(seed: int, n_out: int = 5) -> list:
+    from repro.core.amm import init_pegasus_linear
+
+    rng = np.random.default_rng(seed)
+    return [init_pegasus_linear(
+        rng.normal(size=(8, n_out)).astype(np.float32), None,
+        rng.normal(size=(64, 8)).astype(np.float32), group_size=2, depth=3,
+        lut_bits=None)]
+
+
+def test_plan_registry_evicts_dropped_models():
+    """Satellite regression: dropping a model must evict its memoized plan
+    (the old memo's strong refs pinned models forever — and a recycled id()
+    could then alias a stale plan)."""
+    import gc
+
+    from repro.engine import PlanRegistry
+
+    reg = PlanRegistry()
+    banks = _fresh_banks(11)
+    plan = reg.plan_for(banks)
+    assert reg.plan_for(banks) is plan
+    assert len(reg) == 1
+    del banks
+    gc.collect()
+    assert len(reg) == 0                          # dropped model → evicted
+    # a plan the caller still holds keeps working after eviction
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)), jnp.float32)
+    assert np.isfinite(np.asarray(plan(x, backend="gather"))).all()
+
+
+def test_plan_is_refcount_reclaimable():
+    """An evicted plan must free on refcount drop, not wait for a gen-2 GC
+    pass: the jitted forward's closure may not reference the plan object
+    (the plan ↔ closure cycle this guards against once existed)."""
+    import weakref
+
+    from repro.engine import build_plan
+
+    plan = build_plan(_fresh_banks(31))
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)), jnp.float32)
+    plan(x, backend="gather")                     # populate the jit cache
+    ref = weakref.ref(plan)
+    del plan
+    assert ref() is None                          # no cycle: died on refcount
+
+
+def test_plan_registry_bounded_and_explicit_eviction():
+    from repro.engine import PlanRegistry
+
+    reg = PlanRegistry(max_plans=2)
+    keep = [_fresh_banks(s) for s in range(3)]
+    plans = [reg.plan_for(m) for m in keep]
+    assert len(reg) == 2                          # LRU-bounded
+    assert reg.plan_for(keep[0]) is not plans[0]  # oldest was evicted → rebuilt
+    assert reg.discard(keep[0]) == 1              # explicit eviction
+    assert len(reg) == 1
+
+
+def test_plan_registry_named_entries():
+    from repro.engine import PlanRegistry
+
+    reg = PlanRegistry()
+    banks = _fresh_banks(21)
+    plan = reg.register("mlp-a", banks, backend="gather")
+    assert "mlp-a" in reg and reg.names() == ["mlp-a"]
+    assert reg.get("mlp-a") is plan
+    assert reg.model("mlp-a") is banks
+    st = reg.stats()["mlp-a"]
+    assert st["backend"] == "gather" and st["num_banks"] == 1
+    assert reg.evict("mlp-a") and "mlp-a" not in reg
+    assert not reg.evict("mlp-a")                 # double-evict is a no-op
+    with pytest.raises(KeyError):
+        reg.get("mlp-a")
+
+
+def _multi_server(ds):
+    """One server holding 3 mixed-family plans (mlp, ae fast; rnn cached)."""
+    from repro.launch.serve import MultiModelServer
+
+    server = MultiModelServer(backend="onehot")
+    names = ("mlp", "ae", "rnn")
+    for fam in names:
+        model, _, _ = _family(ds, fam)
+        server.add_model(fam, model)
+    return server, names
+
+
+@pytest.mark.slow
+def test_multi_model_outputs_match_standalone_plans(ds):
+    """N≥3 mixed-family models behind one server produce outputs identical
+    to their standalone plans."""
+    server, names = _multi_server(ds)
+    reqs = []
+    for fam in names:
+        _, _, inputs = _family(ds, fam)
+        reqs += [(fam, tuple(x[:8] for x in inputs)),
+                 (fam, tuple(x[8:16] for x in inputs))]
+    outs = server.serve(reqs)
+    assert len(outs) == len(reqs)
+    for (fam, inputs), out in zip(reqs, outs):
+        _, plan, _ = _family(ds, fam)
+        ref = np.asarray(plan(*inputs, backend="onehot"))
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"served {fam} != standalone plan")
+
+
+@pytest.mark.slow
+def test_multi_model_compile_caches_isolated(ds):
+    """Serving model B must never retrace model A's plan: each plan compiles
+    once per (backend, bucket) it actually serves, nothing more."""
+    server, names = _multi_server(ds)
+    for fam in names:
+        _, _, inputs = _family(ds, fam)
+        server.submit(fam, *(x[:8] for x in inputs))
+    server.drain()
+    per_plan = {f: server.registry.get(f).compile_stats()["traces"] for f in names}
+    before = STATS.jit_traces
+    for _ in range(2):                            # repeat rounds: all warm
+        for fam in names:
+            _, _, inputs = _family(ds, fam)
+            server.submit(fam, *(x[:8] for x in inputs))
+        server.drain()
+    assert STATS.jit_traces == before             # zero cross-model retraces
+    for fam in names:
+        assert server.registry.get(fam).compile_stats()["traces"] == per_plan[fam]
+
+
+@pytest.mark.slow
+def test_multi_model_fair_scheduling_drains_all_queues(ds):
+    """Round-robin: one micro-batch per pending model per turn — a burst on
+    one model cannot monopolize the dispatch order — and every queue ends
+    empty."""
+    server, names = _multi_server(ds)
+    server.max_batch = 8                          # force 2 chunks per model
+    for fam in names:
+        _, _, inputs = _family(ds, fam)
+        for lo in (0, 8):
+            server.submit(fam, *(x[lo : lo + 8] for x in inputs))
+    assert server.pending() == {f: 2 for f in names}
+    log_start = len(server.schedule_log)
+    results = server.drain()
+    assert server.pending() == {}                 # every queue drained
+    assert sorted(results) == sorted(names)
+    assert all(len(results[f]) == 2 for f in names)
+    log = list(server.schedule_log)[log_start:]
+    # 2 chunks per model, interleaved one-per-model per round
+    assert log == list(names) + list(names)
+    st = server.stats()["models"]
+    for fam in names:
+        assert st[fam]["requests_served"] == 2
+        assert st[fam]["batches_run"] == 2
+        assert st[fam]["flows_served"] == 16
+
+
+def test_multi_model_adopts_shared_registry(ds):
+    """A server built on a pre-populated registry must serve its names
+    (queues/counters adopted at construction, and lazily for names
+    registered afterwards)."""
+    from repro.engine import PlanRegistry
+    from repro.launch.serve import MultiModelServer
+
+    banks, _, (x,) = _family(ds, "mlp")
+    reg = PlanRegistry()
+    reg.register("pre", banks, backend="onehot")
+    server = MultiModelServer(registry=reg, backend="onehot")
+    assert server.models() == ["pre"]
+    y = server.infer("pre", x[:4])
+    assert np.asarray(y).shape[0] == 4
+    reg.register("post", banks, backend="onehot")  # registered after init
+    server.submit("post", x[:4])
+    assert server.drain()["post"][0].shape[0] == 4
+    st = server.stats()["models"]
+    assert st["pre"]["requests_served"] == 1
+    assert st["post"]["requests_served"] == 1
+
+
+def test_multi_model_unknown_name_and_success_only_stats(ds):
+    from repro.launch.serve import MultiModelServer
+
+    banks, _, (x,) = _family(ds, "mlp")
+    server = MultiModelServer({"mlp": banks}, backend="onehot")
+    with pytest.raises(KeyError, match="unknown model"):
+        server.submit("nope", x[:4])
+    server.submit("mlp", x[:4])
+    with pytest.raises(ValueError, match="unknown backend"):
+        server.drain(backend="dense")             # every model failed → raise
+    st = server.stats()["models"]["mlp"]
+    assert (st["requests_served"], st["batches_run"]) == (0, 0)
+    assert server.pending() == {"mlp": 1}         # failed drain is retryable
+    out = server.drain()
+    assert out["mlp"][0].shape[0] == 4
+    st = server.stats()["models"]["mlp"]
+    assert (st["requests_served"], st["batches_run"]) == (1, 1)
+
+
+def test_multi_model_drain_isolates_failing_model(ds):
+    """A model whose dispatch raises must not lose the other models'
+    results, corrupt any counters, or drop its own (retryable) queue."""
+    from repro.launch.serve import MultiModelServer
+
+    banks, _, (x,) = _family(ds, "mlp")
+    server = MultiModelServer({"good": banks, "bad": banks}, backend="onehot")
+    server.submit("good", x[:4])
+    server.submit("bad", x[:4, : x.shape[1] // 2])   # wrong feature width
+    results = server.drain()                      # good drains, bad isolated
+    assert list(results) == ["good"]
+    assert results["good"][0].shape[0] == 4
+    assert "bad" in server.last_drain_errors
+    st = server.stats()["models"]
+    assert (st["good"]["requests_served"], st["good"]["batches_run"]) == (1, 1)
+    assert (st["bad"]["requests_served"], st["bad"]["batches_run"]) == (0, 0)
+    assert server.pending() == {"bad": 1}         # bad queue kept for retry
+    # a permanently-bad request poisons its queue — discard_pending clears it
+    assert server.discard_pending("bad") == 1
+    assert server.pending() == {}
+    # serve(): the failed model's error carries the served partial results
+    with pytest.raises(Exception) as ei:
+        server.serve([("good", x[:4]), ("bad", x[:4, : x.shape[1] // 2])])
+    assert ei.value.partial_results["good"][0].shape[0] == 4
+    server.discard_pending("bad")

@@ -79,13 +79,10 @@ def test_cnn_l_scale_beats_cnn_b(ds):
     assert f1_l > f1_b, (f1_l, f1_b)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="fails at the seed commit (malware AUC ~0.54 with 250-step "
-    "training); tracked in ROADMAP Open items — keeps the full CI lane "
-    "green until the AE teacher is fixed",
-)
 def test_autoencoder_auc_above_chance(ds):
+    """Was the last known-failing-at-seed test: raw-space MAE scored in-range
+    attacks at chance (malware AUC ~0.54). Fixed by the z-space AE teacher
+    (anomaly_features + benign standardization) in repro.nets.autoencoder."""
     from repro.nets.autoencoder import (
         auc_score, pegasus_ae_error, pegasusify_ae, train_autoencoder,
     )

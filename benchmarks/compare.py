@@ -55,6 +55,12 @@ import time
 REPO = pathlib.Path(__file__).resolve().parent.parent
 GATED_SECTION = ("engine", "backends")
 HISTORY_KEEP = 30
+# A backend ≥1.3x FASTER than baseline is a deliberate perf win, not noise
+# (min-of-N is stable within ~10% on one host): its line is marked RATCHET
+# and the report tells the author to commit the fresh JSON, so the gate's
+# baseline tightens to the new numbers on merge instead of silently leaving
+# 30% of regression headroom above them.
+RATCHET_FACTOR = 1.3
 
 
 def _load(path: pathlib.Path) -> dict:
@@ -93,6 +99,7 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], l
             f"{b_ref:.2f} ms → {f_ref:.2f} ms ({f_ref / b_ref:.2f}x) — if the "
             "gate fails and this shifted comparably, suspect the runner, not "
             "the PR")
+    ratchets = []
     for be in sorted(set(base_be) & set(fresh_be)):
         b = base_be[be]["per_call_ms"]
         f = fresh_be[be]["per_call_ms"]
@@ -102,7 +109,18 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], l
             verdict = "REGRESSION"
             regressions.append(
                 f"{be}: {b:.2f} ms → {f:.2f} ms ({ratio:.2f}x > {1 + threshold:.2f}x)")
+        elif ratio <= 1 / RATCHET_FACTOR:
+            verdict = "RATCHET"
+            ratchets.append(f"{be}: {b:.2f} ms → {f:.2f} ms ({b / f:.2f}x faster)")
         lines.append(f"  {be:9s} {b:9.2f} ms → {f:9.2f} ms  ({ratio:5.2f}x)  {verdict}")
+    if ratchets:
+        lines.append(
+            f"ratchet: {len(ratchets)} backend(s) ≥{RATCHET_FACTOR:.1f}x faster "
+            "than the committed baseline — commit the fresh "
+            "BENCH_throughput.json with this PR so the gate tightens to the "
+            "new numbers on merge:")
+        for r in ratchets:
+            lines.append("  [ratchet] " + r)
     # keys in only one file are INFO, never regressions: failing on the
     # symmetric difference broke every PR that added (or retired) a backend
     for be in sorted(set(base_be) - set(fresh_be)):

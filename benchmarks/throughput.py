@@ -10,7 +10,11 @@ Engine sections (the perf-trajectory JSON future PRs gate against,
 see benchmarks/compare.py):
   * ``engine``       — MLP plan at batch 1024 (the acceptance anchor):
                        jit-warm vs eager per-bank dispatch vs plan-rebuild
-                       cold, per backend, plus whole-plan compile counts.
+                       cold, per backend, plus whole-plan compile counts
+                       (now incl. per-bucket pad_waste + fusion coverage)
+                       and a ``fusion`` A/B subsection: the same banks with
+                       the cross-bank fusion pass disabled, interleaved-pair
+                       timed (CI uploads it as the fusion-delta artifact).
   * ``families``     — RNN / CNN / AE plans, jit-warm per backend.
   * ``batch_ladder`` — one MLP plan called across a ladder of odd batch
                        sizes: the bucket set stays smaller than the batch
@@ -185,6 +189,36 @@ def engine_backend_bench(quick: bool = False) -> dict:
               f"cold {cold_ms:8.2f} ms  ({eager_ms / warm_ms:4.1f}x jit, "
               f"{cold_ms / eager_ms:4.1f}x vs rebuild)  "
               f"{batch / (warm_ms / 1e3):12.0f} flows/s")
+
+    # Cross-bank fusion A/B: the SAME banks compiled without the fusion pass
+    # (build_plan(fuse=False)), timed in interleaved pairs so each (fused,
+    # unfused) sample shares one host-load instant — the pairwise-median
+    # speedup stays meaningful through throttle bursts that shift both mins.
+    # CI's bench-quick job uploads this subsection as the fusion-delta
+    # artifact.
+    plan_unfused = build_plan(banks, fuse=False)
+    fusion = {"fused_groups": plan.fused_groups,
+              "fused_banks": plan.fused_banks, "backends": {}}
+    ab_iters = 10 if quick else 20
+    for be in ("kernel", "kernel_q8"):
+        plan_unfused(x, backend=be).block_until_ready()     # trace + compile
+        fs, us = [], []
+        for _ in range(ab_iters):
+            t0 = time.perf_counter()
+            plan(x, backend=be).block_until_ready()
+            fs.append((time.perf_counter() - t0) * 1e3)
+            t0 = time.perf_counter()
+            plan_unfused(x, backend=be).block_until_ready()
+            us.append((time.perf_counter() - t0) * 1e3)
+        fusion["backends"][be] = {
+            "fused_ms": float(np.min(fs)),
+            "unfused_ms": float(np.min(us)),
+            "speedup": float(np.median([u / f for u, f in zip(us, fs)])),
+        }
+        print(f"fusion[{be:9s}] fused {np.min(fs):7.2f} ms  unfused "
+              f"{np.min(us):7.2f} ms  "
+              f"({fusion['backends'][be]['speedup']:4.2f}x pairwise median)")
+    result["fusion"] = fusion
     result["compile"] = plan.compile_stats()
     return result
 

@@ -9,7 +9,14 @@ XLA computation per ``(backend, batch-bucket)`` — request batches are padded
 up to a bounded bucket ladder (:data:`DEFAULT_BUCKETS`) so varying sizes hit
 a warm compile cache. Backends: ``{"gather", "onehot", "kernel",
 "kernel_q8"}``; compile-cache behavior is observable via :data:`STATS`
-(``jit_traces`` / ``jit_calls``) and ``plan.compile_stats()``.
+(``jit_traces`` / ``jit_calls``) and ``plan.compile_stats()`` (which also
+reports per-bucket ``pad_waste`` and the fusion coverage counters).
+
+Cross-bank Primitive Fusion (:func:`fuse_banks` / :class:`FusedBankStack`,
+on by default — ``build_plan(..., fuse=False)`` opts out): compatible
+consecutive banks execute as ONE stacked Pallas kernel invocation on the
+``kernel``/``kernel_q8`` backends, activations re-partitioned bank-to-bank
+inside VMEM instead of round-tripping between L separate ``pallas_call``s.
 
 Plan lifetime is owned by :class:`PlanRegistry` (``registry.py``): a
 weakref-watched, LRU-bounded memo behind :func:`plan_for` (dropped models
@@ -25,9 +32,11 @@ from .plan import (
     CompiledBank,
     EngineStats,
     ExecutionPlan,
+    FusedBankStack,
     bucket_batch,
     bucket_chunks,
     build_plan,
+    fuse_banks,
 )
 from .registry import (
     PlanRegistry,
@@ -43,11 +52,13 @@ __all__ = [
     "CompiledBank",
     "EngineStats",
     "ExecutionPlan",
+    "FusedBankStack",
     "PlanRegistry",
     "bucket_batch",
     "bucket_chunks",
     "build_plan",
     "default_registry",
+    "fuse_banks",
     "plan_for",
     "reset_plan_cache",
 ]

@@ -11,6 +11,17 @@ module does the same for the TPU realization:
     thresholds, block-padded LUT, int8 LUT + per-group scales). Registered as
     a jax pytree so a whole plan's banks flow through ``jax.jit`` as traced
     state rather than baked-in constants.
+  * :class:`FusedBankStack` / :func:`fuse_banks` — Cross-bank Primitive
+    Fusion: a maximal run of shape-compatible consecutive banks (same group
+    width and centroid count, each bank's output feeding the next's input)
+    compiles into ONE stacked Pallas kernel invocation
+    (``fuzzy_lut_stack_pallas`` / ``..._q8``) — operands stacked to
+    ``[L, Kmax, C, Nmax]`` at plan build, the inter-bank re-partition +
+    bias (+ q8 dequant) folded into the kernel loop so activations never
+    leave VMEM between banks. Incompatible runs, the ``gather``/``onehot``
+    backends, and the RNN/CNN structural steps fall back to the per-bank
+    path; ``fuse=False`` on :func:`build_plan` disables grouping entirely
+    (the fusion config participates in plan_for's memo key).
   * :class:`ExecutionPlan` — the whole model: compiled banks + a structural
     forward (sequential stack, windowed CNN, unrolled RNN, two-level NAM)
     that is a *pure function* of ``(state, inputs)`` closed over static
@@ -38,6 +49,7 @@ Backends are semantics-identical up to quantization:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
@@ -47,12 +59,17 @@ import numpy as np
 from repro.core.amm import PegasusLinear, apply_gather, apply_onehot
 from repro.core.fuzzy_tree import hard_index
 from repro.kernels.fuzzy_lut.kernel import (
+    STACK_BLOCK_T,
     default_interpret,
     fuzzy_lut_pallas,
+    fuzzy_lut_stack_pallas,
     resolve_strategy,
 )
 from repro.kernels.fuzzy_lut.ops import prepare_feat_onehot, quantized_lut_cached
-from repro.kernels.fuzzy_lut.quantized import fuzzy_lut_q8_pallas
+from repro.kernels.fuzzy_lut.quantized import (
+    fuzzy_lut_q8_pallas,
+    fuzzy_lut_stack_q8_pallas,
+)
 
 __all__ = [
     "BACKENDS",
@@ -61,12 +78,21 @@ __all__ = [
     "CompiledBank",
     "EngineStats",
     "ExecutionPlan",
+    "FusedBankStack",
     "bucket_batch",
     "bucket_chunks",
     "build_plan",
+    "fuse_banks",
 ]
 
 BACKENDS = ("gather", "onehot", "kernel", "kernel_q8")
+
+# The jitted forwards donate their (plan-owned) input buffers so XLA may
+# recycle the storage. When a model's output is smaller than its input —
+# most classifiers — no alias exists and jax warns per executable; that is
+# the expected shape here, not an error worth one warning per compile.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 # Bounded bucket set: odd batch sizes round UP to the nearest bucket (zero
 # rows are sliced off after the call), so the jit cache holds at most
@@ -294,6 +320,168 @@ class CompiledBank:
 
 
 # ---------------------------------------------------------------------------
+# Cross-bank Primitive Fusion: compatible consecutive banks → one kernel
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class FusedBankStack:
+    """A run of L shape-compatible banks compiled into ONE stacked kernel.
+
+    Operand stacks are built once here (plan build): each bank's true-size
+    tensors are padded to the group's ``(Kmax, Nmax)`` — +inf thresholds and
+    zero LUT rows on padded groups descend to leaf 0 and contribute nothing —
+    then stacked along a leading L axis. On the ``kernel``/``kernel_q8``
+    backends ``apply`` dispatches ``fuzzy_lut_stack_pallas`` /
+    ``..._q8`` (re-partition, bias, and dequant all inside the kernel loop);
+    ``gather``/``onehot`` and any stack the kernel rejects (``ValueError``
+    on a mis-padded operand) fall back to the per-bank chain, which is
+    semantics-identical.
+
+    The member banks stay whole inside the stack (pytree children), so the
+    fallback chain, ``plan.bank_inputs`` and the per-bank parity tests keep
+    working on fused plans.
+    """
+
+    def __init__(self, banks: Sequence["CompiledBank"]):
+        if len(banks) < 2:
+            raise ValueError("a fused stack needs at least 2 banks")
+        for a, b in zip(banks, banks[1:]):
+            if not _fusable(a, b):
+                raise ValueError("banks are not shape-compatible for fusion")
+        self.banks = list(banks)
+        layers = [b.layer for b in banks]
+        self.v = layers[0].group_size
+        self.depth = banks[0].depth
+        self.ks = tuple(l.num_groups for l in layers)
+        self.n_out = layers[-1].out_features
+        self.block_t = STACK_BLOCK_T
+        self.interpret = banks[0].interpret
+        self.strategy = banks[0].strategy
+
+        kmax = max(self.ks)
+        nmax = max(l.out_features for l in layers)
+        c = layers[0].num_centroids
+        i = c - 1
+        feat_oh = jnp.zeros((len(layers), kmax, i, self.v), jnp.float32)
+        thr = jnp.full((len(layers), kmax, i), jnp.inf, jnp.float32)
+        lut = jnp.zeros((len(layers), kmax, c, nmax), jnp.float32)
+        lut_q8 = jnp.zeros((len(layers), kmax, c, nmax), jnp.int8)
+        scales = jnp.zeros((len(layers), kmax), jnp.float32)
+        bias = jnp.zeros((len(layers), nmax), jnp.float32)
+        for l, bank in enumerate(banks):
+            k, n = bank.layer.num_groups, bank.layer.out_features
+            # slice the bank's block-padded operands back to true size, then
+            # re-pad to the GROUP geometry — no new quantization, no new
+            # one-hots: strictly a restack of what CompiledBank already built
+            feat_oh = feat_oh.at[l, :k].set(bank.feat_oh[:k])
+            thr = thr.at[l, :k].set(bank.thr[:k])
+            lut = lut.at[l, :k, :, :n].set(bank.lut_p[:k, :, :n])
+            lut_q8 = lut_q8.at[l, :k, :, :n].set(bank.lut_q8_p[:k, :, :n])
+            scales = scales.at[l, :k].set(bank.scales[:k])
+            if bank.layer.bias is not None:
+                bias = bias.at[l, :n].set(bank.layer.bias)
+        self.feat_oh, self.thr = feat_oh, thr
+        self.lut, self.lut_q8 = lut, lut_q8
+        self.scales, self.bias = scales, bias
+        STATS.layout_builds += 1
+
+    # -- pytree protocol ----------------------------------------------------
+
+    def tree_flatten(self):
+        children = (tuple(self.banks), self.feat_oh, self.thr, self.lut,
+                    self.lut_q8, self.scales, self.bias)
+        aux = (self.ks, self.v, self.depth, self.n_out, self.block_t,
+               self.interpret, self.strategy)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        obj = object.__new__(cls)
+        (banks, obj.feat_oh, obj.thr, obj.lut,
+         obj.lut_q8, obj.scales, obj.bias) = children
+        obj.banks = list(banks)
+        (obj.ks, obj.v, obj.depth, obj.n_out, obj.block_t,
+         obj.interpret, obj.strategy) = aux
+        return obj
+
+    # -- dispatch -----------------------------------------------------------
+
+    def _per_bank(self, x: jax.Array, backend: str) -> jax.Array:
+        h = x
+        for bank in self.banks:
+            h = bank.apply(h, backend)
+        return h
+
+    def apply(self, x: jax.Array, backend: str) -> jax.Array:
+        if backend not in ("kernel", "kernel_q8"):
+            return self._per_bank(x, backend)
+        lead = x.shape[:-1]
+        xg = x.reshape(-1, self.ks[0], self.v).astype(jnp.float32)
+        t = xg.shape[0]
+        bt = min(self.block_t, t)
+        xg = _pad_to(xg, 0, bt)
+        try:
+            if backend == "kernel":
+                y = fuzzy_lut_stack_pallas(
+                    xg, self.feat_oh, self.thr, self.lut, self.bias,
+                    depth=self.depth, ks=self.ks, n_out=self.n_out,
+                    block_t=bt, interpret=self.interpret,
+                    strategy=self.strategy)
+            else:
+                y = fuzzy_lut_stack_q8_pallas(
+                    xg, self.feat_oh, self.thr, self.lut_q8, self.scales,
+                    self.bias, depth=self.depth, ks=self.ks,
+                    n_out=self.n_out, block_t=bt, interpret=self.interpret,
+                    strategy=self.strategy)
+        except ValueError:
+            # mis-padded operand stack (e.g. hand-built): the kernel refuses
+            # loudly and the per-bank chain serves the call (and does its own
+            # bank_calls accounting)
+            return self._per_bank(x, backend)
+        STATS.bank_calls += len(self.banks)   # fused path only: no double count
+        return y[:t].reshape(*lead, self.n_out)
+
+
+def _fusable(a: CompiledBank, b: CompiledBank) -> bool:
+    """Can bank ``b`` consume bank ``a``'s output inside one stacked kernel?
+    Same partition width and centroid count (stacked operands must share
+    (v, C)), exact output→input chaining, and identical static kernel
+    config."""
+    return (a.layer.group_size == b.layer.group_size
+            and a.layer.num_centroids == b.layer.num_centroids
+            and a.layer.out_features == b.layer.in_features
+            and a.interpret == b.interpret
+            and a.strategy == b.strategy)
+
+
+def fuse_banks(banks: Sequence[CompiledBank]) -> list:
+    """Plan-build fusion pass: group maximal runs of compatible consecutive
+    banks into :class:`FusedBankStack` steps; lone banks pass through.
+
+    Purely structural — the returned step list is what the sequential
+    forward iterates, and each step exposes the same
+    ``apply(x, backend)`` contract, so fusing never changes trace counts
+    (the whole forward is still one jitted computation per bucket)."""
+    steps: list = []
+    run: list[CompiledBank] = []
+
+    def flush():
+        if len(run) >= 2:
+            steps.append(FusedBankStack(run))
+        else:
+            steps.extend(run)
+        run.clear()
+
+    for bank in banks:
+        if run and not _fusable(run[-1], bank):
+            flush()
+        run.append(bank)
+    flush()
+    return steps
+
+
+# ---------------------------------------------------------------------------
 # ExecutionPlan + per-family structural forwards
 # ---------------------------------------------------------------------------
 
@@ -302,11 +490,16 @@ class _PlanCounters:
     """Per-plan trace instrumentation, held OUTSIDE the plan so the jitted
     forward's closure never references the plan itself (see ExecutionPlan)."""
 
-    __slots__ = ("traces", "buckets")
+    __slots__ = ("traces", "buckets", "rows")
 
     def __init__(self):
         self.traces = 0
         self.buckets: set[tuple[str, int]] = set()
+        # (backend, bucket) → [requested rows, dispatched (padded) rows]:
+        # the pad_waste surface — what fraction of every bucket's compute
+        # went to filler rows (ladder efficiency, reported by the bench and
+        # MultiModelServer.stats()).
+        self.rows: dict[tuple[str, int], list] = {}
 
 
 class ExecutionPlan:
@@ -347,8 +540,12 @@ class ExecutionPlan:
         # pass instead of freeing on the registry's refcount drop.
         self._ctr = ctr = _PlanCounters()
         self.jit_calls = 0
+        # set by the family builders after construction (sequential/CNN runs
+        # may compile FusedBankStack steps; other families stay per-bank)
+        self.fused_groups = 0
+        self.fused_banks = 0
 
-        def _pure(state, *inputs, backend):
+        def _pure(state, inputs, backend):
             # body runs at TRACE time only — this is the retrace counter the
             # bucketing tests assert on
             STATS.jit_traces += 1
@@ -356,7 +553,13 @@ class ExecutionPlan:
             ctr.buckets.add((backend, int(inputs[0].shape[0])))
             return forward(lambda bank, x: bank.apply(x, backend), state, *inputs)
 
-        self._jit = jax.jit(_pure, static_argnames=("backend",))
+        # inputs (arg 1) are DONATED: the bucket ladder hands the jitted
+        # forward a padded buffer the plan itself owns, so XLA may reuse its
+        # storage for intermediates/outputs instead of the old pad-then-copy
+        # pair. __call__ guarantees every donated leaf is plan-owned
+        # (_owned_padded) — a caller's array is never invalidated.
+        self._jit = jax.jit(_pure, static_argnames=("backend",),
+                            donate_argnums=(1,))
         STATS.plan_builds += 1
 
     @property
@@ -378,21 +581,36 @@ class ExecutionPlan:
                 lambda bank, x: bank.apply(x, be), self._state, *inputs)
         b = int(np.shape(inputs[0])[0])
         bucket = bucket_batch(b, self.buckets)
-        padded = tuple(self._pad_batch(x, bucket) for x in inputs)
+        padded = tuple(self._owned_padded(x, bucket) for x in inputs)
         STATS.jit_calls += 1
         self.jit_calls += 1
-        y = self._jit(self._state, *padded, backend=be)
+        rows = self._ctr.rows.setdefault((be, bucket), [0, 0])
+        rows[0] += b
+        rows[1] += bucket
+        y = self._jit(self._state, padded, backend=be)
         return y if bucket == b else y[:b]
 
     @staticmethod
-    def _pad_batch(x: jax.Array, bucket: int) -> jax.Array:
-        if not isinstance(x, jax.Array):   # jnp.asarray on a device array
-            x = jnp.asarray(x)             # still costs ~0.1 ms in dtype checks
+    def _owned_padded(x: jax.Array, bucket: int) -> jax.Array:
+        """A plan-OWNED buffer at the bucket size — safe to donate.
+
+        Padding (and host→device transfer of non-jax inputs) always yields a
+        fresh buffer; the one case where the caller's array would otherwise
+        flow straight through — a jax array already at its bucket size — is
+        defensively copied, because a donated buffer is deleted after the
+        call. The copy is one batch-sized memcpy, orders of magnitude below
+        the per-call budget it buys donation for.
+        """
+        if not isinstance(x, jax.Array):
+            x = jnp.asarray(x)             # fresh device buffer: plan-owned
+            owned = True
+        else:
+            owned = False
         b = x.shape[0]
-        if b == bucket:
-            return x
-        pad = [(0, bucket - b)] + [(0, 0)] * (x.ndim - 1)
-        return jnp.pad(x, pad)
+        if b != bucket:
+            pad = [(0, bucket - b)] + [(0, 0)] * (x.ndim - 1)
+            return jnp.pad(x, pad)
+        return x if owned else x.copy()
 
     def compile_stats(self) -> dict:
         """Per-plan jit-cache counters (the serving stats surface)."""
@@ -401,6 +619,14 @@ class ExecutionPlan:
             "jit_calls": self.jit_calls,
             "bucket_hits": self.jit_calls - self.trace_count,
             "buckets": sorted(self.compiled_buckets),
+            # ladder efficiency: filler fraction of every dispatched bucket
+            "pad_waste": {
+                f"{be}@{bucket}": round(1.0 - req / disp, 4) if disp else 0.0
+                for (be, bucket), (req, disp) in sorted(self._ctr.rows.items())
+            },
+            # fusion coverage: how much of the plan runs as stacked kernels
+            "fused_groups": self.fused_groups,
+            "fused_banks": self.fused_banks,
         }
 
     @property
@@ -409,10 +635,17 @@ class ExecutionPlan:
 
     def bank_inputs(self, *inputs: jax.Array, backend: str = "gather") -> list:
         """Forward once (eagerly), recording the first activation each bank
-        receives — a debugging/parity-test aid (None for unreached banks)."""
+        receives — a debugging/parity-test aid (None for unreached banks).
+        Fused steps are walked per-bank so the recording stays per-bank."""
         rec: dict[int, jax.Array] = {}
 
-        def apply(bank: CompiledBank, x: jax.Array) -> jax.Array:
+        def apply(bank, x: jax.Array) -> jax.Array:
+            if isinstance(bank, FusedBankStack):
+                h = x
+                for member in bank.banks:
+                    rec.setdefault(id(member), h)
+                    h = member.apply(h, backend)
+                return h
             rec.setdefault(id(bank), x)
             return bank.apply(x, backend)
 
@@ -432,17 +665,27 @@ def _compile_banks(layers: Sequence[PegasusLinear], **kw) -> list[CompiledBank]:
     return [CompiledBank(l, **kw) for l in layers]
 
 
-def _sequential_plan(layers, backend, kw, buckets) -> ExecutionPlan:
+def _note_fusion(plan: ExecutionPlan, steps: Sequence) -> None:
+    for s in steps:
+        if isinstance(s, FusedBankStack):
+            plan.fused_groups += 1
+            plan.fused_banks += len(s.banks)
+
+
+def _sequential_plan(layers, backend, kw, buckets, fuse) -> ExecutionPlan:
     banks = _compile_banks(layers, **kw)
+    steps = fuse_banks(banks) if fuse else list(banks)
 
     def forward(apply, state, x):
         h = x.astype(jnp.float32)
-        for bank in state["banks"]:
-            h = apply(bank, h)
+        for step in state["steps"]:
+            h = apply(step, h)
         return h
 
-    return ExecutionPlan(banks, forward, {"banks": banks}, backend=backend,
+    plan = ExecutionPlan(banks, forward, {"steps": steps}, backend=backend,
                          family="sequential", bucket_sizes=buckets)
+    _note_fusion(plan, steps)
+    return plan
 
 
 def _rnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
@@ -465,15 +708,18 @@ def _rnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
                          backend=backend, family="rnn", bucket_sizes=buckets)
 
 
-def _cnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
+def _cnn_plan(model, backend, kw, buckets, fuse) -> ExecutionPlan:
     from repro.nets.cnn import _windows  # structural helper, no cycle at call time
 
     window_bank = CompiledBank(model.window_bank, **kw)
     head_banks = _compile_banks(model.head_banks, **kw)
+    # the head chain after the window pool is an ordinary sequential run —
+    # fusable; the windowed step itself stays structural (per-window batch)
+    head_steps = fuse_banks(head_banks) if fuse else list(head_banks)
     nam = bool(model.nam)        # static branch selector
     state = {
         "window": window_bank,
-        "heads": head_banks,
+        "heads": head_steps,
         "out_bias": None if model.out_bias is None else jnp.asarray(model.out_bias),
     }
 
@@ -488,8 +734,10 @@ def _cnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
             h = apply(bank, h)
         return h
 
-    return ExecutionPlan([window_bank] + head_banks, forward, state,
+    plan = ExecutionPlan([window_bank] + head_banks, forward, state,
                          backend=backend, family="cnn", bucket_sizes=buckets)
+    _note_fusion(plan, head_steps)
+    return plan
 
 
 def _cnn_l_plan(model, backend, kw, buckets) -> ExecutionPlan:
@@ -529,6 +777,7 @@ def build_plan(
     interpret: bool | None = None,
     strategy: str = "auto",
     bucket_sizes: Sequence[int] | None = None,
+    fuse: bool = True,
 ) -> ExecutionPlan:
     """Compile any pegasusified model into an ExecutionPlan.
 
@@ -540,7 +789,11 @@ def build_plan(
 
     ``interpret=None`` resolves via :func:`default_interpret` (Pallas
     interpret mode everywhere except a real TPU backend); ``bucket_sizes``
-    overrides the batch-bucket ladder (default :data:`DEFAULT_BUCKETS`).
+    overrides the batch-bucket ladder (default :data:`DEFAULT_BUCKETS`);
+    ``fuse=False`` disables the cross-bank fusion pass (``fuse_banks``) —
+    useful for A/B benchmarks and as the escape hatch for a shape the
+    stacked kernel mishandles. The flag participates in ``plan_for``'s memo
+    key, so fused and unfused plans of one model coexist.
 
     The plan freezes ALL model state at build time — banks and non-bank
     attributes alike (RNN window, CNN nam/out_bias, CNN-L
@@ -552,17 +805,17 @@ def build_plan(
               interpret=default_interpret() if interpret is None else interpret,
               strategy=strategy)
     if isinstance(model, PegasusLinear):
-        plan = _sequential_plan([model], backend, kw, bucket_sizes)
+        plan = _sequential_plan([model], backend, kw, bucket_sizes, fuse)
     elif isinstance(model, (list, tuple)):
         if not all(isinstance(l, PegasusLinear) for l in model):
             raise TypeError("bank list must contain only PegasusLinear")
-        plan = _sequential_plan(model, backend, kw, bucket_sizes)
+        plan = _sequential_plan(model, backend, kw, bucket_sizes, fuse)
     elif hasattr(model, "x_banks") and hasattr(model, "h_banks"):
         plan = _rnn_plan(model, backend, kw, bucket_sizes)
     elif hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
         plan = _cnn_l_plan(model, backend, kw, bucket_sizes)
     elif hasattr(model, "window_bank"):
-        plan = _cnn_plan(model, backend, kw, bucket_sizes)
+        plan = _cnn_plan(model, backend, kw, bucket_sizes, fuse)
     else:
         raise TypeError(f"don't know how to compile {type(model).__name__} into a plan")
     # the non-bank state the plan froze at build — plan_for compares this

@@ -91,11 +91,16 @@ class PlanRegistry:
     def plan_for(self, model: Any, *, interpret: bool | None = None,
                  **kw) -> ExecutionPlan:
         """Memoized :func:`build_plan`. Build options participate in the
-        key, so the same model may hold e.g. interpret and non-interpret
-        plans side by side."""
+        key — including the fusion config (``fuse``/``strategy``/block
+        geometry) — so the same model may hold e.g. interpret and
+        non-interpret, or fused and unfused, plans side by side."""
         interpret = default_interpret() if interpret is None else interpret
         if kw.get("bucket_sizes") is not None:
             kw["bucket_sizes"] = tuple(kw["bucket_sizes"])
+        # normalize into the key: an absent fuse kwarg IS fuse=True (the
+        # build_plan default) — without this, plan_for(m) and
+        # plan_for(m, fuse=True) would build and cache the same plan twice
+        kw["fuse"] = bool(kw.get("fuse", True))
         key = _model_key(model, interpret, kw)
         entry = self._memo.get(key)
         if entry is not None:

@@ -11,7 +11,7 @@ TPU-native realization of the paper's table lookup (DESIGN.md §2):
     primitive-fusion insight as the paper's, re-expressed for a systolic
     array instead of a MAT stage.
 
-Tiling (BlockSpec, all VMEM):
+Single-bank tiling (BlockSpec, all VMEM):
   grid = (T/Tt, N/Nt, K/Kt);   K innermost → output block accumulates.
     x        [T, K, v]   → block (Tt, Kt, v)      index (i, k, 0)
     feat_oh  [K, I, v]   → block (Kt, I, v)       index (k, 0, 0)   I = 2^d - 1
@@ -22,6 +22,34 @@ Tiling (BlockSpec, all VMEM):
 VMEM working set ≈ Tt·Kt·v + Kt·I·v + Kt·C·Nt + Tt·Nt floats.
 Defaults (Tt=256, Kt=128, Nt=256, C=16, v=8): ≈ 2.6 MB ≪ 128 MB VMEM, and
 the MXU contraction dims (Kt·C = 2048, Nt = 256) are 128-aligned.
+
+Stacked-layer variant (:func:`fuzzy_lut_stack_pallas` — Cross-bank Primitive
+Fusion): a compatible run of L banks executes as ONE kernel invocation. The
+grid tiles ONLY the batch; every per-layer operand rides whole (stacked along
+a leading L axis) so the inter-bank activation never leaves VMEM — the
+re-partition (``[Tt, N] → [Tt, K, v]``), bias add, and (q8 path) in-register
+dequantization all happen inside the per-layer loop:
+
+  grid = (T/Tt,)
+    x        [T, K₀, v]        → block (Tt, K₀, v)       index (i, 0, 0)
+    feat_oh  [L, Kmax, I, v]   → whole                    index 0
+    thr      [L, Kmax, I]      → whole                    index 0
+    lut      [L, Kmax, C, Nmax]→ whole                    index 0
+    bias     [L, Nmax]         → whole                    index 0
+    out      [T, n_out]        → block (Tt, n_out)        index (i, 0)
+
+Banks are padded to the group's (Kmax, Nmax) at PLAN BUILD (zero LUT rows
+and +inf thresholds: padded groups descend to leaf 0 and contribute 0), so
+warm calls pad nothing but the batch. VMEM working set ≈
+Tt·Kmax·v·2 (x + repartitioned h) + L·Kmax·I·(v+1) + L·Kmax·C·Nmax (LUT)
++ L·Nmax + Tt·Nmax floats. The MLP-B shape (L=4, Kmax=16, I=63, C=64,
+Nmax=32, v=2, Tt=1024) is ≈ 1.0 MB — the LUT stack and the Tt·Nmax tiles
+dominate, so cap L (or shrink Tt via ``block_t``) when their sum approaches
+the VMEM budget.
+
+Both entry points raise ``ValueError`` (never ``assert``, which dies
+silently under ``python -O``) when a dimension is not block-divisible, so
+the engine can catch mis-padded operands and fall back to the per-bank path.
 """
 
 from __future__ import annotations
@@ -34,7 +62,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["default_interpret", "fuzzy_lut_kernel", "fuzzy_lut_pallas",
-           "resolve_strategy"]
+           "fuzzy_lut_stack_pallas", "resolve_strategy"]
+
+# Batch tile of the stacked-layer kernel. Larger than the single-bank default
+# (256): the stack's grid has no N/K axes, so the only per-tile overhead is
+# the interpreter's operand slicing — fewer, fatter tiles win on CPU (A/B
+# swept 256/512/1024 at batch 1024), and the VMEM working set stays ≈1 MB
+# for every shipped bank geometry (see module docstring).
+STACK_BLOCK_T = 1024
 
 
 def default_interpret() -> bool:
@@ -61,15 +96,35 @@ def _tree_leaf(x, feat_oh, thr, *, depth: int, strategy: str):
     """Shared descent: [Tt, Kt, v] activations → [Tt, Kt] leaf indices.
 
     Both strategies compute the SAME bits (identical fp compare); they differ
-    only in how the per-level bit is *selected*:
-      ``mxu``    — one-hot reduction over nodes (branchless, gather-free;
-                   what the systolic/VPU path wants)
-      ``lookup`` — take_along_axis on the bit tensor (O(T·K) per level; what
-                   the interpreter/CPU wants — the one-hot form does C× the
-                   work a scalar core has to execute serially)
+    in how much of the tree they touch:
+      ``mxu``    — score EVERY internal node up front (one-hot einsum for the
+                   feature select, one-hot reduction per level): branchless
+                   and gather-free — what the systolic/VPU path wants.
+      ``lookup`` — walk only the ``depth`` visited nodes, one flat-index
+                   gather per level (features recovered from the one-hot via
+                   argmax, [Kt, I] — tiny): no [Tt, Kt, I] intermediates at
+                   all, which is what the interpreter/CPU wants (the dense
+                   form materializes I/d ≈ 10× more values than the walk
+                   reads).
     """
-    # feature values at every internal node: vals[t,k,n] = x[t,k,feat[k,n]]
-    # — expressed as an einsum against the precomputed one-hot, not a gather.
+    tt, kt = x.shape[0], x.shape[1]
+    n_internal = thr.shape[-1]
+    node = jnp.zeros((tt, kt), dtype=jnp.int32)
+    if strategy == "lookup":
+        # sparse walk: gather (feature, threshold) of the CURRENT node only
+        feat_flat = jnp.argmax(feat_oh, axis=-1).astype(jnp.int32).reshape(-1)
+        thr_flat = thr.reshape(-1)
+        base = (jnp.arange(kt, dtype=jnp.int32) * n_internal)[None]  # [1, Kt]
+        for _ in range(depth):
+            idx = node + base                                 # [Tt, Kt]
+            f_sel = jnp.take(feat_flat, idx)
+            t_sel = jnp.take(thr_flat, idx)
+            val = jnp.take_along_axis(x, f_sel[:, :, None], axis=2)[..., 0]
+            node = 2 * node + 1 + (val > t_sel).astype(jnp.int32)
+        return node - n_internal                  # [Tt, Kt] in [0, C)
+
+    # dense scoring: vals[t,k,n] = x[t,k,feat[k,n]] as an einsum against the
+    # precomputed one-hot (gather-free), then one-hot-select per level.
     vals = jax.lax.dot_general(
         x,
         feat_oh,
@@ -79,21 +134,11 @@ def _tree_leaf(x, feat_oh, thr, *, depth: int, strategy: str):
     )                                             # [Kt, Tt, I]
     vals = vals.transpose(1, 0, 2)                # [Tt, Kt, I]
     bits = (vals > thr[None]).astype(jnp.int32)   # decision at every node
-
-    tt, kt = x.shape[0], x.shape[1]
-    n_internal = thr.shape[-1]
-    node = jnp.zeros((tt, kt), dtype=jnp.int32)
-    if strategy == "lookup":
-        for _ in range(depth):
-            bit = jnp.take_along_axis(bits, node[:, :, None], axis=-1)[..., 0]
-            node = 2 * node + 1 + bit
-    else:
-        # branchless: select this level's bit with a one-hot over nodes
-        iota_nodes = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, n_internal), 2)
-        for _ in range(depth):
-            node_oh = (iota_nodes == node[:, :, None]).astype(jnp.int32)
-            bit = jnp.sum(bits * node_oh, axis=-1)  # [Tt, Kt]
-            node = 2 * node + 1 + bit
+    iota_nodes = jax.lax.broadcasted_iota(jnp.int32, (tt, kt, n_internal), 2)
+    for _ in range(depth):
+        node_oh = (iota_nodes == node[:, :, None]).astype(jnp.int32)
+        bit = jnp.sum(bits * node_oh, axis=-1)    # [Tt, Kt]
+        node = 2 * node + 1 + bit
     return node - n_internal                      # [Tt, Kt] in [0, C)
 
 
@@ -105,15 +150,16 @@ def _lut_contrib(leaf, lut, *, strategy: str, scale=None):
 
       ``mxu``    — onehot(leaf) [Tt, Kt·C] @ lut [Kt·C, Nt]: one systolic
                    matmul, gather-free.
-      ``lookup`` — take_along_axis gather-sum: O(T·K·N) instead of the
-                   matmul's O(T·K·C·N); the interpreter/CPU-fast form.
+      ``lookup`` — flat-index gather-sum (rows picked from the [Kt·C, Nt]
+                   table view): O(T·K·N) instead of the matmul's O(T·K·C·N);
+                   the interpreter/CPU-fast form.
     """
     tt, kt = leaf.shape
     c = lut.shape[1]
     if strategy == "lookup":
-        rows = jnp.take_along_axis(
-            lut[None], leaf[:, :, None, None], axis=2
-        )[:, :, 0, :]                             # [Tt, Kt, Nt]
+        base = (jnp.arange(kt, dtype=jnp.int32) * c)[None]    # [1, Kt]
+        rows = jnp.take(lut.reshape(kt * c, -1), leaf + base,
+                        axis=0)                   # [Tt, Kt, Nt]
         if scale is not None:
             rows = rows * scale[None, :, None]
         return rows.sum(axis=1)                   # [Tt, Nt]
@@ -149,6 +195,21 @@ def fuzzy_lut_kernel(
     @pl.when(pl.program_id(2) != 0)
     def _accum():
         out_ref[...] += contrib
+
+
+def _check_divisible(where: str, **dims: tuple[int, int]) -> None:
+    """Raise ``ValueError`` naming every dim not divisible by its block.
+
+    A raised error (not ``assert``) so (a) ``python -O`` can't silently skip
+    the check and (b) the engine's fused-path fallback can catch a mis-padded
+    operand stack and dispatch per-bank instead of dying.
+    """
+    bad = [f"{name}={size} % block {blk} != 0"
+           for name, (size, blk) in dims.items() if size % blk != 0]
+    if bad:
+        raise ValueError(
+            f"{where}: {'; '.join(bad)} — operands must be pre-padded to "
+            "block multiples (CompiledBank / ops.py layout prep does this)")
 
 
 def resolve_strategy(strategy: str, interpret: bool) -> str:
@@ -194,10 +255,7 @@ def fuzzy_lut_pallas(
     t, k, v = x.shape
     _, c, n = lut.shape
     bt, bn, bk = min(block_t, t), min(block_n, n), min(block_k, k)
-    assert t % bt == 0 and n % bn == 0 and k % bk == 0, (
-        f"shape ({t},{k},{n}) not divisible by blocks ({bt},{bk},{bn}); "
-        "pad in ops.py"
-    )
+    _check_divisible("fuzzy_lut_pallas", T=(t, bt), N=(n, bn), K=(k, bk))
     n_internal = c - 1
 
     grid = (t // bt, n // bn, k // bk)
@@ -215,3 +273,113 @@ def fuzzy_lut_pallas(
         compiler_params=_tpu_compiler_params(("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, feat_oh, thresholds, lut)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer variant: L compatible banks in ONE kernel invocation
+# ---------------------------------------------------------------------------
+
+
+def _stack_layers(h, feat_oh, thr, lut, bias, scales, *, depth: int,
+                  ks: tuple[int, ...], v: int, strategy: str):
+    """Run the whole bank stack over one batch tile, all in registers/VMEM.
+
+    ``h``: [Tt, K₀, v] activations; stacked operands carry a leading L axis
+    (see module docstring). Between layers the activation is re-partitioned
+    ``[Tt, N] → [Tt, ks[l+1], v]`` and zero-padded back to Kmax — padded
+    groups hold +inf thresholds and zero LUT rows, so they descend to leaf 0
+    and contribute nothing. ``scales`` (q8 path) dequantizes each layer's
+    int8 LUT in-VMEM via the per-group factors; ``None`` on the fp path.
+    """
+    nlayers, kmax = lut.shape[0], lut.shape[1]
+    tt = h.shape[0]
+    if h.shape[1] < kmax:
+        h = jnp.pad(h, ((0, 0), (0, kmax - h.shape[1]), (0, 0)))
+    y = None
+    for l in range(nlayers):
+        leaf = _tree_leaf(h, feat_oh[l].astype(jnp.float32),
+                          thr[l].astype(jnp.float32),
+                          depth=depth, strategy=strategy)
+        tab = lut[l].astype(jnp.float32)
+        if scales is not None:
+            # q8 dequant in-VMEM, scales folded into the TABLE (exact: the
+            # factor is constant per group) — K·C·N multiplies once per tile
+            # instead of T·K·N on every gathered row
+            tab = tab * scales[l].astype(jnp.float32)[:, None, None]
+        y = _lut_contrib(leaf, tab, strategy=strategy)
+        y = y + bias[l].astype(jnp.float32)
+        if l + 1 < nlayers:
+            nk = ks[l + 1]
+            h = y[:, : nk * v].reshape(tt, nk, v)
+            if nk < kmax:
+                h = jnp.pad(h, ((0, 0), (0, kmax - nk), (0, 0)))
+    return y
+
+
+def fuzzy_lut_stack_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, bias_ref,
+                           out_ref, *, depth: int, ks: tuple[int, ...],
+                           v: int, n_out: int, strategy: str):
+    """One batch tile through ALL L fused banks (fp32 LUT stack)."""
+    y = _stack_layers(
+        x_ref[...].astype(jnp.float32), feat_oh_ref, thr_ref, lut_ref,
+        bias_ref, None, depth=depth, ks=ks, v=v, strategy=strategy)
+    out_ref[...] = y[:, :n_out]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("depth", "ks", "n_out", "block_t", "interpret",
+                     "strategy"),
+)
+def fuzzy_lut_stack_pallas(
+    x: jax.Array,          # [T, K₀, v]
+    feat_oh: jax.Array,    # [L, Kmax, I, v]
+    thr: jax.Array,        # [L, Kmax, I]
+    lut: jax.Array,        # [L, Kmax, C, Nmax] f32
+    bias: jax.Array,       # [L, Nmax] (zeros where a bank has no bias)
+    *,
+    depth: int,
+    ks: tuple[int, ...],   # true group count per layer (≤ Kmax)
+    n_out: int,            # true out_features of the LAST layer (≤ Nmax)
+    block_t: int = STACK_BLOCK_T,
+    interpret: bool | None = None,
+    strategy: str = "auto",
+) -> jax.Array:
+    """Cross-bank Primitive Fusion: L banks, ONE ``pallas_call``.
+
+    Returns ``[T, n_out]`` f32 — bias already applied (it must be: every
+    non-final layer's bias feeds the next layer's tree descent in-VMEM).
+    Operand stacks must be pre-padded to (Kmax, Nmax) at plan build; only
+    the batch axis is tiled, so T is the only dim with a divisibility
+    constraint (``ValueError`` otherwise — catchable, see module docstring).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    strategy = resolve_strategy(strategy, interpret)
+    t, k0, v = x.shape
+    nlayers, kmax, c, nmax = lut.shape
+    n_internal = thr.shape[2]
+    if len(ks) != nlayers:
+        raise ValueError(f"ks has {len(ks)} entries for {nlayers} stacked layers")
+    if k0 != ks[0]:
+        raise ValueError(f"x carries K={k0} groups; ks[0]={ks[0]}")
+    bt = min(block_t, t)
+    _check_divisible("fuzzy_lut_stack_pallas", T=(t, bt))
+
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(fuzzy_lut_stack_kernel, depth=depth, ks=ks, v=v,
+                          n_out=n_out, strategy=strategy),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, k0, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((nlayers, kmax, n_internal, v), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((nlayers, kmax, n_internal), lambda i: (0, 0, 0)),
+            pl.BlockSpec((nlayers, kmax, c, nmax), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((nlayers, nmax), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n_out), jnp.float32),
+        compiler_params=_tpu_compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(x, feat_oh, thr, lut, bias)

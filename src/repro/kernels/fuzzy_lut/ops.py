@@ -16,8 +16,9 @@ import numpy as np
 from .kernel import fuzzy_lut_pallas
 
 __all__ = [
-    "fuzzy_lut_matmul", "fuzzy_lut_matmul_q8", "prepare_feat_onehot",
-    "quantized_lut_cached", "QUANT_STATS",
+    "fuzzy_lut_matmul", "fuzzy_lut_matmul_q8", "padded_layout",
+    "prepare_feat_onehot", "quantized_lut_cached", "LAYOUT_STATS",
+    "QUANT_STATS",
 ]
 
 # int8-LUT memo: production deployments quantize offline exactly once; the
@@ -26,6 +27,16 @@ __all__ = [
 # the layer dies so ids can be reused safely.
 QUANT_STATS = {"quantize_calls": 0, "cache_hits": 0}
 _Q8_MEMO: dict[int, tuple] = {}
+
+# Static-operand layout memo: the one-hot feature tensor and the
+# block-divisibility padding of (lut, thresholds, feat_oh) depend only on the
+# layer and block geometry, yet the wrappers below used to rebuild them on
+# EVERY call — a pad/copy of the whole table bank per invocation when shapes
+# weren't block-divisible. One entry per (layer id, block_k, block_n, q8?),
+# weakref-evicted with the layer like the q8 memo. At call time the cached
+# layout is shape-CHECKED, never re-padded: only the batch may pad per call.
+LAYOUT_STATS = {"layout_builds": 0, "cache_hits": 0}
+_LAYOUT_MEMO: dict[tuple, tuple] = {}
 
 
 def quantized_lut_cached(layer) -> tuple[jax.Array, jax.Array]:
@@ -59,6 +70,48 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, pad)
 
 
+def padded_layout(layer, *, block_k: int, block_n: int, quant: bool):
+    """Block-padded static operands for one PegasusLinear, memoized.
+
+    Returns ``(feat_oh, thr, lut, scales, kp)`` — every tensor padded so the
+    kernel's divisibility contract holds (K → ``kp`` with +inf thresholds and
+    zero LUT rows, N → a ``block_n`` multiple with zero columns). ``scales``
+    is None unless ``quant``. Built exactly once per (layer, geometry); the
+    call-path wrappers ASSERT the cached shapes instead of re-padding.
+    """
+    k, v, n = layer.num_groups, layer.group_size, layer.out_features
+    bk, bn = min(block_k, k), min(block_n, n)
+    key = (id(layer), bk, bn, quant)
+    entry = _LAYOUT_MEMO.get(key)
+    if entry is not None and entry[0]() is layer:
+        LAYOUT_STATS["cache_hits"] += 1
+        if quant:
+            # the cached layout embeds the cached quantization — keep the
+            # q8 memo's observable hit contract for callers that count it
+            QUANT_STATS["cache_hits"] += 1
+        return entry[1]
+    feat_oh = prepare_feat_onehot(layer.trees.features, v)
+    thr = layer.trees.thresholds
+    scales = None
+    if quant:
+        lut, scales = quantized_lut_cached(layer)
+    else:
+        lut = layer.lut
+    kp = k + (-k) % bk
+    if kp != k:
+        feat_oh = _pad_to(feat_oh, 0, bk)
+        thr = jnp.pad(thr, ((0, kp - k), (0, 0)), constant_values=jnp.inf)
+        lut = _pad_to(lut, 0, bk)
+        if scales is not None:
+            scales = jnp.pad(scales, (0, kp - k))
+    lut = _pad_to(lut, 2, bn)
+    layout = (feat_oh, thr, lut, scales, kp)
+    LAYOUT_STATS["layout_builds"] += 1
+    ref = weakref.ref(layer, lambda _ref, key=key: _LAYOUT_MEMO.pop(key, None))
+    _LAYOUT_MEMO[key] = (ref, layout)
+    return layout
+
+
 def fuzzy_lut_matmul(
     layer,  # PegasusLinear (kept duck-typed to avoid import cycle)
     x: jax.Array,
@@ -75,22 +128,16 @@ def fuzzy_lut_matmul(
     xg = x.reshape(-1, k, v).astype(jnp.float32)
     t = xg.shape[0]
 
-    feat_oh = prepare_feat_onehot(layer.trees.features, v)
-    thr = layer.trees.thresholds
-    # +inf thresholds (degenerate nodes) force all-left in fp compare: keep.
+    # static operands come block-padded from the one-time layout memo
+    # (+inf thresholds on padded/degenerate nodes force all-left: keep);
+    # the only per-call padding left is the batch itself.
+    feat_oh, thr, lut, _, kp = padded_layout(
+        layer, block_k=block_k, block_n=block_n, quant=False)
+    assert lut.shape[0] == kp and thr.shape[0] == kp, (
+        "cached layout shape drifted — rebuild the layout memo")
 
     bt = min(block_t, max(8, t))
-    # pad T and K to block multiples; padded K groups have zero LUT → no-op
-    xg_p = _pad_to(xg, 0, bt)
-    xg_p = _pad_to(xg_p, 1, min(block_k, k))
-    kp = xg_p.shape[1]
-    if kp != k:
-        feat_oh = _pad_to(feat_oh, 0, min(block_k, k))
-        thr = jnp.pad(thr, ((0, kp - k), (0, 0)), constant_values=jnp.inf)
-        lut = _pad_to(layer.lut, 0, min(block_k, k))
-    else:
-        lut = layer.lut
-    lut = _pad_to(lut, 2, min(block_n, n))
+    xg_p = _pad_to(_pad_to(xg, 0, bt), 1, min(block_k, k))
 
     y = fuzzy_lut_pallas(
         xg_p,
@@ -128,20 +175,13 @@ def fuzzy_lut_matmul_q8(
     xg = x.reshape(-1, k, v).astype(jnp.float32)
     t = xg.shape[0]
 
-    feat_oh = prepare_feat_onehot(layer.trees.features, v)
-    thr = layer.trees.thresholds
-    lut_q8, scales = quantized_lut_cached(layer)
+    feat_oh, thr, lut_q8, scales, kp = padded_layout(
+        layer, block_k=block_k, block_n=block_n, quant=True)
+    assert lut_q8.shape[0] == kp and scales.shape[0] == kp, (
+        "cached layout shape drifted — rebuild the layout memo")
 
     bt = min(block_t, max(8, t))
-    xg_p = _pad_to(xg, 0, bt)
-    xg_p = _pad_to(xg_p, 1, min(block_k, k))
-    kp = xg_p.shape[1]
-    if kp != k:
-        feat_oh = _pad_to(feat_oh, 0, min(block_k, k))
-        thr = jnp.pad(thr, ((0, kp - k), (0, 0)), constant_values=jnp.inf)
-        lut_q8 = _pad_to(lut_q8, 0, min(block_k, k))
-        scales = jnp.pad(scales, (0, kp - k))
-    lut_q8 = _pad_to(lut_q8, 2, min(block_n, n))
+    xg_p = _pad_to(_pad_to(xg, 0, bt), 1, min(block_k, k))
 
     y = fuzzy_lut_q8_pallas(
         xg_p, feat_oh, thr, lut_q8, scales,

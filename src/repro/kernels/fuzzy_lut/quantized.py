@@ -21,14 +21,18 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from .kernel import (
+    STACK_BLOCK_T,
+    _check_divisible,
     _lut_contrib,
+    _stack_layers,
     _tpu_compiler_params,
     _tree_leaf,
     default_interpret,
     resolve_strategy,
 )
 
-__all__ = ["quantize_lut_int8", "fuzzy_lut_q8_pallas", "fuzzy_lut_q8_ref"]
+__all__ = ["quantize_lut_int8", "fuzzy_lut_q8_pallas", "fuzzy_lut_q8_ref",
+           "fuzzy_lut_stack_q8_pallas"]
 
 
 def quantize_lut_int8(lut: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -85,7 +89,7 @@ def fuzzy_lut_q8_pallas(
     t, k, v = x.shape
     _, c, n = lut_q8.shape
     bt, bn, bk = min(block_t, t), min(block_n, n), min(block_k, k)
-    assert t % bt == 0 and n % bn == 0 and k % bk == 0
+    _check_divisible("fuzzy_lut_q8_pallas", T=(t, bt), N=(n, bn), K=(k, bk))
     n_internal = c - 1
     grid = (t // bt, n // bn, k // bk)
     return pl.pallas_call(
@@ -103,3 +107,67 @@ def fuzzy_lut_q8_pallas(
         compiler_params=_tpu_compiler_params(("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, feat_oh, thresholds, lut_q8, scales)
+
+
+def _stack_q8_kernel(x_ref, feat_oh_ref, thr_ref, lut_ref, scale_ref,
+                     bias_ref, out_ref, *, depth, ks, v, n_out, strategy):
+    """One batch tile through ALL L fused banks; int8 LUT stack dequantized
+    in-VMEM via the per-(layer, group) scale factors."""
+    y = _stack_layers(
+        x_ref[...].astype(jnp.float32), feat_oh_ref, thr_ref, lut_ref,
+        bias_ref, scale_ref, depth=depth, ks=ks, v=v, strategy=strategy)
+    out_ref[...] = y[:, :n_out]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("depth", "ks", "n_out", "block_t", "interpret",
+                              "strategy"))
+def fuzzy_lut_stack_q8_pallas(
+    x,            # [T, K₀, v]
+    feat_oh,      # [L, Kmax, I, v]
+    thr,          # [L, Kmax, I]
+    lut_q8,       # [L, Kmax, C, Nmax] int8
+    scales,       # [L, Kmax] f32 per-(layer, group) dequant factors
+    bias,         # [L, Nmax]
+    *,
+    depth: int,
+    ks: tuple[int, ...],
+    n_out: int,
+    block_t: int = STACK_BLOCK_T,
+    interpret: bool | None = None,
+    strategy: str = "auto",
+):
+    """int8 stacked-layer kernel: the fused counterpart of
+    :func:`fuzzy_lut_q8_pallas` — LUT bytes stay halved in HBM AND the
+    dequantized rows never leave VMEM between banks. Contract mirrors
+    :func:`repro.kernels.fuzzy_lut.kernel.fuzzy_lut_stack_pallas`."""
+    if interpret is None:
+        interpret = default_interpret()
+    strategy = resolve_strategy(strategy, interpret)
+    t, k0, v = x.shape
+    nlayers, kmax, c, nmax = lut_q8.shape
+    n_internal = thr.shape[2]
+    if len(ks) != nlayers:
+        raise ValueError(f"ks has {len(ks)} entries for {nlayers} stacked layers")
+    if k0 != ks[0]:
+        raise ValueError(f"x carries K={k0} groups; ks[0]={ks[0]}")
+    bt = min(block_t, t)
+    _check_divisible("fuzzy_lut_stack_q8_pallas", T=(t, bt))
+
+    return pl.pallas_call(
+        functools.partial(_stack_q8_kernel, depth=depth, ks=ks, v=v,
+                          n_out=n_out, strategy=strategy),
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, k0, v), lambda i: (i, 0, 0)),
+            pl.BlockSpec((nlayers, kmax, n_internal, v), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((nlayers, kmax, n_internal), lambda i: (0, 0, 0)),
+            pl.BlockSpec((nlayers, kmax, c, nmax), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((nlayers, kmax), lambda i: (0, 0)),
+            pl.BlockSpec((nlayers, nmax), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n_out), jnp.float32),
+        compiler_params=_tpu_compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(x, feat_oh, thr, lut_q8, scales, bias)

@@ -111,11 +111,13 @@ class PegasusServer:
     """
 
     def __init__(self, model, *, backend: str = "onehot",
-                 interpret: bool | None = None, max_batch: int | None = None):
+                 interpret: bool | None = None, max_batch: int | None = None,
+                 fuse: bool = True):
         from repro.engine import build_plan
 
         t0 = time.perf_counter()
-        self.plan = build_plan(model, backend=backend, interpret=interpret)
+        self.plan = build_plan(model, backend=backend, interpret=interpret,
+                               fuse=fuse)
         self.plan_build_ms = (time.perf_counter() - t0) * 1e3
         self.backend = backend
         # default cap = the top of the plan's bucket ladder (4096), so a
@@ -214,12 +216,13 @@ class MultiModelServer:
 
     def __init__(self, models: dict | None = None, *, backend: str = "onehot",
                  interpret: bool | None = None, max_batch: int | None = None,
-                 registry=None):
+                 registry=None, fuse: bool = True):
         from repro.engine import DEFAULT_BUCKETS, PlanRegistry
 
         self.registry = PlanRegistry() if registry is None else registry
         self.backend = backend
         self.interpret = interpret
+        self.fuse = fuse    # cross-bank fusion default for add_model plans
         self.max_batch = (max(DEFAULT_BUCKETS) if max_batch is None
                           else max_batch)
         self._queues: dict[str, deque] = {}
@@ -254,6 +257,7 @@ class MultiModelServer:
     def add_model(self, name: str, model, *, backend: str | None = None,
                   **build_kw):
         """Compile + register one model; returns its ExecutionPlan."""
+        build_kw.setdefault("fuse", self.fuse)
         plan = self.registry.register(
             name, model, backend=backend or self.backend,
             interpret=self.interpret, **build_kw)
@@ -417,9 +421,11 @@ def _pegasus_demo(args) -> None:
     ds = make_dataset("peerrush", flows_per_class=120)
     mlp = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes, steps=120)
     banks = pegasusify_mlp(mlp, ds.train["stats"].astype(np.float32), refine_steps=0)
-    server = PegasusServer(banks, backend=args.backend)
+    server = PegasusServer(banks, backend=args.backend, fuse=not args.no_fuse)
+    st0 = server.plan.compile_stats()
     print(f"plan compiled in {server.plan_build_ms:.1f} ms "
-          f"({server.plan.num_banks} banks, backend={args.backend})")
+          f"({server.plan.num_banks} banks, {st0['fused_groups']} fused "
+          f"groups covering {st0['fused_banks']} banks, backend={args.backend})")
     x = ds.test["stats"].astype(np.float32)
     requests = [x[i : i + args.batch] for i in range(0, min(len(x), 8 * args.batch), args.batch)]
     server.serve(requests)  # warmup/compile
@@ -445,6 +451,9 @@ def main():
     ap.add_argument("--backend", default="onehot",
                     choices=["gather", "onehot", "kernel", "kernel_q8"],
                     help="engine backend bound to the serving plan")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable cross-bank primitive fusion (A/B escape "
+                         "hatch; fusion is the default)")
     args = ap.parse_args()
     if args.pegasus:
         _pegasus_demo(args)

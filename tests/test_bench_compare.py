@@ -75,7 +75,25 @@ def test_improvements_are_not_regressions():
     fresh = _doc({be: ms / 3 for be, ms in BASE.items()})
     lines, regressions = compare(_doc(BASE), fresh, 0.25)
     assert regressions == []
-    assert any("OK" in l for l in lines)
+    assert all("REGRESSION" not in l for l in lines)
+
+
+def test_large_improvements_marked_ratchet():
+    """Satellite: a ≥1.3x win is flagged so the fresh JSON becomes the gated
+    baseline on merge; sub-ratchet drift stays a plain OK."""
+    fresh = _doc({**BASE, "kernel": 40.0 / 1.5, "kernel_q8": 40.0 / 1.4})
+    lines, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert regressions == []
+    ratchet_lines = [l for l in lines if "[ratchet]" in l]
+    assert len(ratchet_lines) == 2
+    assert any("kernel:" in l and "1.50x faster" in l for l in ratchet_lines)
+    assert any("commit the fresh" in l for l in lines)
+    # gather/onehot unchanged → OK, not ratchet
+    assert any(l.strip().startswith("gather") and "OK" in l for l in lines)
+    # 1.2x faster is below the ratchet bar: no flag
+    mild = _doc({**BASE, "kernel": 40.0 / 1.2})
+    lines, _ = compare(_doc(BASE), mild, 0.25)
+    assert not any("[ratchet]" in l for l in lines)
 
 
 def test_host_speed_reference_reported_not_gated():

@@ -10,11 +10,15 @@ so elementwise net-level bounds would be vacuous).
 """
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.data.synthetic_traffic import make_dataset
-from repro.engine import BACKENDS, STATS, CompiledBank, build_plan, plan_for
+from repro.engine import (
+    BACKENDS, STATS, CompiledBank, FusedBankStack, build_plan, fuse_banks,
+    plan_for,
+)
 from repro.kernels.fuzzy_lut import ops
 
 pytestmark = pytest.mark.kernel   # every case exercises the Pallas backends
@@ -648,6 +652,178 @@ def test_multi_model_unknown_name_and_success_only_stats(ds):
     assert out["mlp"][0].shape[0] == 4
     st = server.stats()["models"]["mlp"]
     assert (st["requests_served"], st["batches_run"]) == (1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Cross-bank Primitive Fusion (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def _chain_banks(seed: int, dims=(8, 8, 8, 5), group_size: int = 2,
+                 depth: int = 3) -> list:
+    """A sequential stack whose consecutive banks chain exactly (out == in):
+    maximal fusion material."""
+    from repro.core.amm import init_pegasus_linear
+
+    rng = np.random.default_rng(seed)
+    banks = []
+    for d_in, d_out in zip(dims, dims[1:]):
+        banks.append(init_pegasus_linear(
+            rng.normal(size=(d_in, d_out)).astype(np.float32),
+            rng.normal(size=d_out).astype(np.float32) * 0.1,
+            rng.normal(size=(128, d_in)).astype(np.float32),
+            group_size=group_size, depth=depth, lut_bits=None))
+    return banks
+
+
+def test_fuse_banks_groups_compatible_runs():
+    """The planning pass groups maximal compatible runs and leaves anything
+    incompatible (here: a different partition width v) as per-bank steps."""
+    banks = [CompiledBank(l) for l in _chain_banks(40, dims=(8, 8, 8, 4))]
+    steps = fuse_banks(banks)
+    assert len(steps) == 1 and isinstance(steps[0], FusedBankStack)
+    assert steps[0].banks == banks
+    assert steps[0].ks == (4, 4, 4) and steps[0].n_out == 4
+
+    # a bank with group_size=4 cannot join a v=2 run
+    odd = CompiledBank(_chain_banks(41, dims=(4, 6), group_size=4)[0])
+    mixed = fuse_banks([banks[0], banks[1], odd])
+    assert len(mixed) == 2
+    assert isinstance(mixed[0], FusedBankStack) and mixed[1] is odd
+
+    # a lone bank (or a broken chain) stays per-bank
+    assert fuse_banks([banks[0]]) == [banks[0]]
+
+
+def test_fused_plan_parity_all_backends_and_strategies(ds):
+    """Acceptance: the fused-stack output ≡ the per-bank output on every
+    backend and both kernel strategies."""
+    banks, _, (x,) = _family(ds, "mlp")
+    for strategy in ("mxu", "lookup"):
+        fused = build_plan(banks, strategy=strategy)
+        unfused = build_plan(banks, strategy=strategy, fuse=False)
+        assert fused.fused_groups >= 1 and unfused.fused_groups == 0
+        for be in BACKENDS:
+            np.testing.assert_allclose(
+                np.asarray(fused(x, backend=be)),
+                np.asarray(unfused(x, backend=be)),
+                rtol=1e-4, atol=1e-4,
+                err_msg=f"fused != per-bank for {be}/{strategy}")
+
+
+def test_fused_synthetic_chain_parity():
+    """K and N padding inside the stack (first bank wider, last bank
+    narrower) must not leak into the output."""
+    layers = _chain_banks(42, dims=(12, 8, 8, 3))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(16, 12)), jnp.float32)
+    fused = build_plan(layers)
+    unfused = build_plan(layers, fuse=False)
+    assert fused.fused_banks == 3
+    for be in BACKENDS:
+        np.testing.assert_allclose(
+            np.asarray(fused(x, backend=be)),
+            np.asarray(unfused(x, backend=be)), rtol=1e-4, atol=1e-4,
+            err_msg=f"padded stack parity broke on {be}")
+
+
+def test_fusion_does_not_add_traces(ds):
+    """Acceptance: fusing never changes the compile count — one trace per
+    (backend, bucket) on the fused plan, exactly like the per-bank plan."""
+    banks, _, (x,) = _family(ds, "mlp")
+    fused = build_plan(banks)
+    unfused = build_plan(banks, fuse=False)
+    for plan in (fused, unfused):
+        for be in BACKENDS:
+            plan(x, backend=be)
+            plan(x, backend=be)            # warm: must not retrace
+            plan(x[:9], backend=be)        # rounds into the same bucket
+    assert fused.compile_stats()["traces"] == unfused.compile_stats()["traces"]
+    assert fused.compiled_buckets == unfused.compiled_buckets
+    for plan in (fused, unfused):
+        assert plan.compile_stats()["traces"] == len(plan.compiled_buckets)
+
+
+def test_fused_stack_falls_back_on_bad_operands(ds):
+    """A stack the kernel refuses (ValueError, e.g. a mis-sized ks tuple)
+    must fall back to the per-bank chain instead of raising."""
+    banks, _, (x,) = _family(ds, "mlp")
+    stack = fuse_banks([CompiledBank(l) for l in banks])[0]
+    ref = np.asarray(stack.apply(x, "kernel"))
+    stack.ks = stack.ks + (stack.ks[-1],)      # now inconsistent with L
+    out = np.asarray(stack.apply(x, "kernel"))  # ValueError → per-bank path
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_compile_stats_reports_pad_waste_and_fusion(ds):
+    banks, _, (x,) = _family(ds, "mlp")
+    plan = build_plan(banks)
+    plan(x[:11], backend="gather")             # 11 → bucket 16: 5 filler rows
+    plan(x, backend="gather")                  # exact bucket: zero filler
+    st = plan.compile_stats()
+    assert st["fused_groups"] == 1 and st["fused_banks"] == len(banks)
+    # cumulative per bucket: 11 + 16 requested over 2×16 dispatched
+    assert abs(st["pad_waste"]["gather@16"] - (1 - 27 / 32)) < 1e-3
+    # MultiModelServer surfaces the same counters per model
+    from repro.launch.serve import MultiModelServer
+
+    server = MultiModelServer({"mlp": banks}, backend="gather")
+    server.infer("mlp", x[:11])
+    mst = server.stats()["models"]["mlp"]
+    assert mst["fused_groups"] == 1
+    assert mst["pad_waste"]["gather@16"] == round(5 / 16, 4)
+
+
+def test_fuse_flag_participates_in_plan_key(ds):
+    banks, _, (x,) = _family(ds, "mlp")
+    p_fused = plan_for(banks)
+    p_unfused = plan_for(banks, fuse=False)
+    assert p_fused is not p_unfused
+    assert plan_for(banks) is p_fused           # both memoized independently
+    assert plan_for(banks, fuse=False) is p_unfused
+    assert p_unfused.fused_groups == 0
+
+
+def test_donated_inputs_never_invalidate_caller_arrays(ds):
+    """__call__ donates its padded buffers to the jitted forward; a caller's
+    array must survive both the exact-bucket and the padded path."""
+    banks, plan, (x,) = _family(ds, "mlp")
+    x16 = jnp.asarray(x[:16])                  # exact bucket size
+    y1 = np.asarray(plan(x16, backend="gather"))
+    y2 = np.asarray(plan(x16, backend="gather"))
+    np.testing.assert_allclose(y1, y2)
+    assert not x16.is_deleted()
+    _ = np.asarray(x16 + 1.0)                  # still usable
+    x11 = jnp.asarray(x[:11])                  # padded up to bucket 16
+    plan(x11, backend="gather")
+    plan(x11, backend="gather")
+    assert not x11.is_deleted()
+
+
+def test_ops_layout_memo_pads_static_operands_once():
+    """Satellite: the ops.py wrappers must not re-pad lut/thr/feat_oh per
+    call — one layout build per (layer, geometry), cache hits after."""
+    from repro.core.amm import init_pegasus_linear
+    from repro.kernels.fuzzy_lut.ops import (
+        LAYOUT_STATS, fuzzy_lut_matmul, fuzzy_lut_matmul_q8)
+
+    rng = np.random.default_rng(5)
+    layer = init_pegasus_linear(
+        rng.normal(size=(24, 10)).astype(np.float32), None,
+        rng.normal(size=(256, 24)).astype(np.float32), group_size=4, depth=3,
+        lut_bits=None)                          # K=6, N=10: NOT block-divisible
+    x = jnp.asarray(rng.normal(size=(5, 24)).astype(np.float32))
+    fuzzy_lut_matmul(layer, x, block_t=8, block_n=8, block_k=4)
+    builds = LAYOUT_STATS["layout_builds"]
+    hits = LAYOUT_STATS["cache_hits"]
+    fuzzy_lut_matmul(layer, x, block_t=8, block_n=8, block_k=4)
+    fuzzy_lut_matmul(layer, x[:3], block_t=8, block_n=8, block_k=4)
+    assert LAYOUT_STATS["layout_builds"] == builds       # no re-pad per call
+    assert LAYOUT_STATS["cache_hits"] >= hits + 2
+    # the q8 wrapper keeps its own (quantized) layout entry
+    fuzzy_lut_matmul_q8(layer, x, block_t=8, block_n=8, block_k=4)
+    builds_q8 = LAYOUT_STATS["layout_builds"]
+    fuzzy_lut_matmul_q8(layer, x, block_t=8, block_n=8, block_k=4)
+    assert LAYOUT_STATS["layout_builds"] == builds_q8
 
 
 def test_multi_model_drain_isolates_failing_model(ds):

@@ -111,6 +111,97 @@ def test_ops_wrapper_batch_dims():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
 
 
+def _stacked_problem(rng, l, t, kmax, v, depth, nmax, ks, n_out):
+    """Random stacked operands: padded groups carry +inf thr / zero LUT."""
+    c = 2 ** depth
+    i = c - 1
+    feat_oh = np.zeros((l, kmax, i, v), np.float32)
+    thr = np.full((l, kmax, i), np.inf, np.float32)
+    lut = np.zeros((l, kmax, c, nmax), np.float32)
+    bias = np.zeros((l, nmax), np.float32)
+    for layer in range(l):
+        k = ks[layer]
+        feats = rng.integers(0, v, size=(k, i))
+        feat_oh[layer, :k] = np.eye(v, dtype=np.float32)[feats]
+        thr[layer, :k] = rng.normal(size=(k, i)).astype(np.float32)
+        n = n_out if layer == l - 1 else ks[layer + 1] * v
+        lut[layer, :k, :, :n] = rng.normal(size=(k, c, n)).astype(np.float32) * 0.3
+        bias[layer, :n] = rng.normal(size=n).astype(np.float32) * 0.1
+    x = rng.normal(size=(t, ks[0], v)).astype(np.float32)
+    return map(jnp.asarray, (x, feat_oh, thr, lut, bias))
+
+
+@pytest.mark.parametrize("strategy", ["lookup", "mxu"])
+def test_stack_kernel_matches_chained_single_bank(strategy):
+    """The stacked-layer kernel ≡ chaining the single-bank kernel per layer
+    (re-partition + bias applied between layers), on both strategies."""
+    from repro.kernels.fuzzy_lut.kernel import fuzzy_lut_stack_pallas
+
+    rng = np.random.default_rng(7)
+    ks, v, depth, n_out, t = (6, 4, 4, 4), 2, 3, 3, 16
+    x, feat_oh, thr, lut, bias = _stacked_problem(
+        rng, len(ks), t, max(ks), v, depth, 8, ks, n_out)
+    got = fuzzy_lut_stack_pallas(
+        x, feat_oh, thr, lut, bias, depth=depth, ks=ks, n_out=n_out,
+        strategy=strategy)
+
+    h = x
+    for layer, k in enumerate(ks):
+        n = n_out if layer == len(ks) - 1 else ks[layer + 1] * v
+        y = fuzzy_lut_pallas(
+            h[:, :k], feat_oh[layer, :k], thr[layer, :k],
+            lut[layer, :k, :, :n], depth=depth, block_t=t, block_n=n,
+            block_k=k, strategy=strategy)
+        y = y + bias[layer, :n]
+        if layer + 1 < len(ks):
+            h = y.reshape(t, ks[layer + 1], v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_stack_kernel_tiles_batch():
+    """T larger than block_t: grid-tiled result equals the one-tile result."""
+    from repro.kernels.fuzzy_lut.kernel import fuzzy_lut_stack_pallas
+
+    rng = np.random.default_rng(9)
+    ks, v, depth, n_out = (4, 4), 2, 3, 8
+    x, feat_oh, thr, lut, bias = _stacked_problem(
+        rng, len(ks), 64, max(ks), v, depth, 8, ks, n_out)
+    one = fuzzy_lut_stack_pallas(x, feat_oh, thr, lut, bias, depth=depth,
+                                 ks=ks, n_out=n_out, block_t=64)
+    many = fuzzy_lut_stack_pallas(x, feat_oh, thr, lut, bias, depth=depth,
+                                  ks=ks, n_out=n_out, block_t=16)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(many),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_block_divisibility_raises_value_error():
+    """Satellite bugfix: mis-padded operands raise ValueError naming the
+    offending dims (an assert would vanish under ``python -O`` and the
+    engine fallback could never catch it)."""
+    from repro.kernels.fuzzy_lut.kernel import fuzzy_lut_stack_pallas
+
+    rng = np.random.default_rng(21)
+    x, trees, lut = _random_problem(rng, 12, 4, 4, 2, 8)   # T=12 vs block 8
+    feat_oh = prepare_feat_onehot(trees.features, 4)
+    with pytest.raises(ValueError, match=r"T=12 % block 8"):
+        fuzzy_lut_pallas(x, feat_oh, trees.thresholds, lut, depth=2,
+                         block_t=8, block_n=8, block_k=4)
+    with pytest.raises(ValueError, match=r"N=8 % block 3"):
+        fuzzy_lut_pallas(x, feat_oh, trees.thresholds, lut, depth=2,
+                         block_t=12, block_n=3, block_k=4)
+
+    ks, v, depth, n_out = (4, 4), 4, 2, 8
+    sx, sf, st_, sl, sb = _stacked_problem(
+        rng, 2, 12, 4, v, depth, 16, ks, n_out)
+    with pytest.raises(ValueError, match=r"T=12 % block 8"):
+        fuzzy_lut_stack_pallas(sx, sf, st_, sl, sb, depth=depth, ks=ks,
+                               n_out=n_out, block_t=8)
+    with pytest.raises(ValueError, match="ks has 3 entries"):
+        fuzzy_lut_stack_pallas(sx, sf, st_, sl, sb, depth=depth,
+                               ks=(4, 4, 4), n_out=n_out, block_t=12)
+
+
 if HAVE_HYPOTHESIS:
 
     @settings(max_examples=20, deadline=None)

@@ -48,6 +48,52 @@ def test_q8_kernel_matches_ref(t, k, v, depth, n, blocks):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("strategy", ["lookup", "mxu"])
+def test_q8_stack_kernel_matches_chained_q8(strategy):
+    """Stacked q8 kernel (dequant folded into the in-VMEM table) ≡ chaining
+    the single-bank q8 kernel with the same int8 tables and scales."""
+    from repro.kernels.fuzzy_lut.quantized import fuzzy_lut_stack_q8_pallas
+
+    rng = np.random.default_rng(11)
+    ks, v, depth, n_out, t = (4, 4, 4), 2, 3, 4, 16
+    c = 2 ** depth
+    i = c - 1
+    l, kmax, nmax = len(ks), max(ks), 8
+    feat_oh = np.zeros((l, kmax, i, v), np.float32)
+    thr = np.full((l, kmax, i), np.inf, np.float32)
+    lut_q8 = np.zeros((l, kmax, c, nmax), np.int8)
+    scales = np.zeros((l, kmax), np.float32)
+    bias = np.zeros((l, nmax), np.float32)
+    for layer in range(l):
+        k = ks[layer]
+        feats = rng.integers(0, v, size=(k, i))
+        feat_oh[layer, :k] = np.eye(v, dtype=np.float32)[feats]
+        thr[layer, :k] = rng.normal(size=(k, i)).astype(np.float32)
+        n = n_out if layer == l - 1 else ks[layer + 1] * v
+        fp = rng.normal(size=(k, c, n)).astype(np.float32) * 0.3
+        q, s = quantize_lut_int8(jnp.asarray(fp))
+        lut_q8[layer, :k, :, :n] = np.asarray(q)
+        scales[layer, :k] = np.asarray(s)
+        bias[layer, :n] = rng.normal(size=n).astype(np.float32) * 0.1
+    x = jnp.asarray(rng.normal(size=(t, ks[0], v)).astype(np.float32))
+    args = tuple(map(jnp.asarray, (feat_oh, thr, lut_q8, scales, bias)))
+
+    got = fuzzy_lut_stack_q8_pallas(x, *args, depth=depth, ks=ks,
+                                    n_out=n_out, strategy=strategy)
+    h = x
+    for layer, k in enumerate(ks):
+        n = n_out if layer == l - 1 else ks[layer + 1] * v
+        y = fuzzy_lut_q8_pallas(
+            h[:, :k], args[0][layer, :k], args[1][layer, :k],
+            args[2][layer, :k, :, :n], args[3][layer, :k],
+            depth=depth, block_t=t, block_n=n, block_k=k, strategy=strategy)
+        y = y + args[4][layer, :n]
+        if layer + 1 < l:
+            h = y.reshape(t, ks[layer + 1], v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(y),
+                               rtol=1e-4, atol=1e-5)
+
+
 def test_q8_close_to_fp32_path():
     """End-to-end: int8 LUT result within quantization error of fp32 LUT."""
     rng = np.random.default_rng(5)

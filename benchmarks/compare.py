@@ -20,7 +20,12 @@ multi-model ``flows_s`` carries a COLLAPSE gate: fail only on a
 between runs on shared runners, so a threshold-level gate on absolute
 flows/s would flake; the bugs this line guards (retrace-per-request,
 scheduling livelock, accidental serialization) cost 5-10x. Per-model
-``served_ms`` is info only. Keys present in only ONE of {baseline, fresh} — a PR adding or
+``served_ms`` is info only. The ``async_serve`` sweep carries two
+HOST-INDEPENDENT gates on the fresh run itself — the async/sync paired
+throughput ratio must stay ≥ ``ASYNC_RATIO_FLOOR`` and the WFQ
+high-priority p50 queue-wait must sit below the low-priority one's —
+plus a 2x cross-run collapse gate on absolute async flows/s. Keys
+present in only ONE of {baseline, fresh} — a PR adding or
 retiring a backend, family, or served model — are reported as info, never
 failed: gating the symmetric difference would break every PR that grows the
 bench surface. The engine bench always runs at the same batch
@@ -139,7 +144,101 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], l
 
     lines, regressions = _compare_multi_plan(baseline, fresh, threshold,
                                              lines, regressions)
+    lines, regressions = _compare_async_serve(baseline, fresh, threshold,
+                                              lines, regressions)
     return lines, regressions
+
+
+# async/sync paired throughput ratio: acceptance is ≥ 0.9, but the paired
+# measure still moves ~10-15% under runner throttling — gate at 0.75 so the
+# line catches a real async-path tax (serialization, per-request overhead
+# blowup) without flaking on shared hosts.
+ASYNC_RATIO_FLOOR = 0.75
+
+
+def _compare_async_serve(baseline: dict, fresh: dict, threshold: float,
+                         lines: list[str], regressions: list[str]):
+    """Gate the async serving sweep on the FRESH run's own invariants —
+    vs_sync ratio floor and the WFQ wait ordering (both host-speed
+    independent, so they hold across runner classes) — plus a cross-run
+    collapse gate on absolute async flows/s like multi_plan's."""
+    basy, fasy = baseline.get("async_serve"), fresh.get("async_serve")
+    if not fasy:
+        if basy:
+            lines.append("  [info] async_serve section missing from fresh "
+                         "run — async gates NOT applied (did the sweep get "
+                         "dropped?)")
+        return lines, regressions
+    if not basy:
+        lines.append("  [info] async_serve added since baseline "
+                     "(cross-run collapse gate skipped; invariants gated)")
+    lines.append(f"gate: async_serve — vs_sync ≥ {ASYNC_RATIO_FLOOR:.2f} "
+                 "(paired ratio), WFQ high-priority p50 wait < low")
+
+    ratio = fasy.get("vs_sync")
+    if ratio is None:
+        lines.append("  [info] async_serve.vs_sync missing — ratio gate "
+                     "NOT applied")
+    elif ratio < ASYNC_RATIO_FLOOR:
+        regressions.append(
+            f"async_serve: async/sync throughput ratio {ratio:.2f} < "
+            f"{ASYNC_RATIO_FLOOR:.2f} floor (acceptance is ≥ 0.9)")
+        lines.append(f"  vs_sync {ratio:9.2f}x  REGRESSION")
+    else:
+        lines.append(f"  vs_sync {ratio:9.2f}x  "
+                     f"(floor {ASYNC_RATIO_FLOOR:.2f})  OK")
+
+    wfq = fasy.get("wfq", {})
+    hi, lo = wfq.get("high_p50_wait_ms"), wfq.get("low_p50_wait_ms")
+    if hi is None or lo is None:
+        lines.append("  [info] async_serve.wfq p50 waits missing — WFQ gate "
+                     "NOT applied")
+    elif hi >= lo:
+        regressions.append(
+            f"async_serve/wfq: high-priority p50 queue-wait {hi:.2f} ms ≥ "
+            f"low-priority {lo:.2f} ms under a "
+            f"{wfq.get('skew', '?')}:1 weight skew — WFQ ordering broken")
+        lines.append(f"  wfq p50 wait high {hi:9.2f} ms vs low {lo:9.2f} ms  "
+                     "REGRESSION")
+    else:
+        lines.append(f"  wfq p50 wait high {hi:9.2f} ms < low {lo:9.2f} ms  "
+                     f"({wfq.get('skew', '?')}:1 skew)  OK")
+
+    b_agg = (basy or {}).get("async_flows_s")
+    f_agg = fasy.get("async_flows_s")
+    if b_agg and f_agg is not None:
+        _collapse_gate("async_serve", "async aggregate", b_agg, f_agg,
+                       threshold, lines, regressions)
+    elif basy:
+        # never skip silently (same rule as multi_plan): a schema drift
+        # that drops the key must be visible in the report
+        lines.append("  [info] async_serve flows_s missing from "
+                     f"{'baseline' if not b_agg else 'fresh'} run — "
+                     "collapse gate NOT applied")
+    return lines, regressions
+
+
+def _collapse_gate(tag: str, row: str, b_agg, f_agg, threshold: float,
+                   lines: list[str], regressions: list[str]) -> None:
+    """Shared cross-run collapse gate on an aggregate flows/s pair: a
+    measured zero is a regression, a collapse past ``max(2x, 1+threshold)``
+    is a regression, anything else is an OK line. Callers handle the
+    missing-key cases (their gating conditions differ)."""
+    if b_agg and f_agg == 0.0:                  # measured, literally zero
+        regressions.append(f"{tag}: flows/s collapsed to 0 "
+                           f"(baseline {b_agg:.0f})")
+        lines.append(f"  {row} {b_agg:9.0f} → 0 flows/s  REGRESSION")
+        return
+    limit = max(2.0, 1 + threshold)
+    ratio = b_agg / f_agg
+    verdict = "OK"
+    if ratio > limit:
+        verdict = "REGRESSION"
+        regressions.append(
+            f"{tag}: {b_agg:.0f} → {f_agg:.0f} flows/s "
+            f"({ratio:.2f}x slowdown > {limit:.2f}x collapse limit)")
+    lines.append(f"  {row} {b_agg:9.0f} → {f_agg:9.0f} flows/s "
+                 f"({ratio:5.2f}x, collapse limit {limit:.1f}x)  {verdict}")
 
 
 def _compare_multi_plan(baseline: dict, fresh: dict, threshold: float,
@@ -175,31 +274,21 @@ def _compare_multi_plan(baseline: dict, fresh: dict, threshold: float,
         lines.append(f"  [info] served model added since baseline: {name}")
     b_agg = bmp.get("aggregate", {}).get("flows_s")
     f_agg = fmp.get("aggregate", {}).get("flows_s")
-    if b_agg and f_agg == 0.0:                    # measured, literally zero
-        regressions.append("multi_plan/aggregate: flows/s collapsed to 0 "
-                           f"(baseline {b_agg:.0f})")
-        lines.append(f"  aggregate {b_agg:9.0f} → 0 flows/s  REGRESSION")
-    elif not (b_agg and f_agg):
+    if b_agg and f_agg is not None:
+        # collapse detector, not a fine regression meter: sustained host
+        # throughput on shared runners swings ~2x between runs, so a
+        # threshold-level gate on absolute flows/s flakes; the failure
+        # modes this guards (retrace-per-request, scheduling livelock,
+        # accidental serialization) cost 5-10x. A measured 0 is a
+        # regression in its own right (handled inside the gate).
+        _collapse_gate("multi_plan/aggregate", "aggregate", b_agg, f_agg,
+                       threshold, lines, regressions)
+    else:
         # never skip silently: this is the only multi-model gate, and a
         # schema drift that drops flows_s must be visible in the report
         lines.append("  [info] aggregate flows_s missing from "
                      f"{'baseline' if not b_agg else 'fresh'} run — "
                      "collapse gate NOT applied")
-    else:
-        # collapse detector, not a fine regression meter: sustained host
-        # throughput on shared runners swings ~2x between runs, so a
-        # threshold-level gate on absolute flows/s flakes; the failure
-        # modes this guards (retrace-per-request, scheduling livelock,
-        # accidental serialization) cost 5-10x.
-        ratio = b_agg / f_agg
-        verdict = "OK"
-        if ratio > limit:
-            verdict = "REGRESSION"
-            regressions.append(
-                f"multi_plan/aggregate: {b_agg:.0f} → {f_agg:.0f} flows/s "
-                f"({ratio:.2f}x slowdown > {limit:.2f}x collapse limit)")
-        lines.append(f"  aggregate {b_agg:9.0f} → {f_agg:9.0f} flows/s "
-                     f"({ratio:5.2f}x, collapse limit {limit:.1f}x)  {verdict}")
     return lines, regressions
 
 

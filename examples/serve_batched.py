@@ -1,16 +1,20 @@
-"""Multi-model serving demo: many Pegasus models behind ONE server.
+"""Multi-model ASYNC serving demo: many Pegasus models behind ONE server.
 
 The paper's pitch is a *shared* dataplane — one switch serving many traffic
 classes and models at once (Quark runs whole CNNs on one data plane; FENIX
 multiplexes DNN workloads through one pipeline). This demo is the host-side
-analog: an MLP classifier, an RNN classifier and an AutoEncoder anomaly
-scorer are trained on synthetic traffic, compiled into ExecutionPlans, and
-registered under names in one ``MultiModelServer``. A mixed burst of
-``(model_name, inputs)`` requests of assorted sizes is then coalesced into
-bucket-aligned micro-batches, scheduled round-robin across the models, and
-drained — followed by the per-model serving/compile-cache stats.
+analog: an MLP classifier (high priority), an RNN classifier and an
+AutoEncoder anomaly scorer (low priority) are trained on synthetic
+traffic, compiled into ExecutionPlans, and registered under names in one
+``AsyncMultiModelServer``. A mixed burst of requests is submitted from the
+caller's thread as futures; the background drain loop coalesces same-model
+requests into bucket-aligned micro-batches and schedules the models by
+weighted fair queueing (deficit round-robin — the 4x-weighted MLP gets 4x
+the flow share and dispatches first each round). The wrap-up prints the
+per-model serving / compile-cache / queue-wait-percentile stats.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py [--backend kernel]
+      add --sync for the synchronous submit+drain flavor
 """
 
 import argparse
@@ -20,7 +24,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.data.synthetic_traffic import make_dataset
-from repro.launch.serve import MultiModelServer
+from repro.launch.serve import AsyncMultiModelServer, MultiModelServer
 from repro.nets.autoencoder import anomaly_features, pegasusify_ae, train_autoencoder
 from repro.nets.mlp import pegasusify_mlp, train_mlp
 from repro.nets.rnn import pegasusify_rnn, train_rnn
@@ -32,6 +36,9 @@ def main():
                     choices=["gather", "onehot", "kernel", "kernel_q8"])
     ap.add_argument("--steps", type=int, default=120, help="teacher train steps")
     ap.add_argument("--rounds", type=int, default=3, help="timed burst rounds")
+    ap.add_argument("--sync", action="store_true",
+                    help="use the synchronous submit+drain path instead of "
+                         "the async background loop")
     args = ap.parse_args()
 
     ds = make_dataset("peerrush", flows_per_class=200)   # test split: 90 flows
@@ -45,14 +52,18 @@ def main():
     ae = train_autoencoder(flat, steps=args.steps)
 
     print(f"== compiling + registering (backend={args.backend}) ==")
-    server = MultiModelServer(backend=args.backend)
+    cls = MultiModelServer if args.sync else AsyncMultiModelServer
+    server = cls(backend=args.backend)
     t0 = time.perf_counter()
     server.add_model("mlp-stats", pegasusify_mlp(
-        mlp, ds.train["stats"].astype(np.float32), refine_steps=0))
+        mlp, ds.train["stats"].astype(np.float32), refine_steps=0),
+        priority="high")             # inline classifier: 4x WFQ weight
     server.add_model("rnn-seq", pegasusify_rnn(rnn, ds.train["seq"], depth=4))
-    server.add_model("ae-anomaly", pegasusify_ae(ae, flat.astype(np.float32)))
+    server.add_model("ae-anomaly", pegasusify_ae(ae, flat.astype(np.float32)),
+                     priority="low")  # background anomaly sweep: 0.25x
     print(f"3 plans compiled in {(time.perf_counter() - t0) * 1e3:.0f} ms: "
-          f"{server.models()}")
+          f"{server.models()} (weights "
+          f"{ {n: c['weight'] for n, c in server.stats()['scheduler'].items()} })")
 
     # a mixed burst: three models × assorted request sizes
     x_stats = jnp.asarray(ds.test["stats"], jnp.float32)
@@ -60,39 +71,64 @@ def main():
     x_feat = jnp.asarray(anomaly_features(
         ds.test["seq"].reshape(len(ds.test["label"]), -1)))
     sizes = (48, 17, 80)
+    flows = sum(sizes) * 3
 
-    def burst():
+    def submit_burst():
+        futs = []
         for s in sizes:
-            server.submit("mlp-stats", x_stats[:s])
-            server.submit("rnn-seq", x_seq[:s])
-            server.submit("ae-anomaly", x_feat[:s])
-        return server.drain()
+            futs.append(server.submit("mlp-stats", x_stats[:s]))
+            futs.append(server.submit("rnn-seq", x_seq[:s]))
+            futs.append(server.submit("ae-anomaly", x_feat[:s]))
+        return futs
+
+    if args.sync:
+        def burst():
+            submit_burst()
+            return server.drain()
+    else:
+        server.start()            # background drain loop: always-on serving
+
+        def burst():
+            futs = submit_burst()           # thread-safe, returns futures
+            outs = [f.result(timeout=600) for f in futs]
+            names = ["mlp-stats", "rnn-seq", "ae-anomaly"] * len(sizes)
+            by_model: dict = {}
+            for n, o in zip(names, outs):
+                by_model.setdefault(n, []).append(o)
+            return by_model
 
     burst()  # warmup: traces one XLA computation per (model, bucket)
+    server.reset_latency_stats()
     t0 = time.perf_counter()
     log_before = server.batches_dispatched
     for _ in range(args.rounds):
         out = burst()
     dt = (time.perf_counter() - t0) / args.rounds
-    flows = sum(sizes) * 3
     per_burst = (server.batches_dispatched - log_before) // args.rounds
+    mode = "sync drain" if args.sync else "async loop"
     print(f"\nserved {len(sizes) * 3} requests ({flows} flows) per burst in "
-          f"{dt * 1e3:.1f} ms → {flows / dt:.0f} flows/s aggregate")
-    print(f"schedule (fair round-robin, {per_burst} micro-batches/burst): "
-          f"{list(server.schedule_log)[-per_burst:]}")
+          f"{dt * 1e3:.1f} ms via {mode} → {flows / dt:.0f} flows/s aggregate")
+    print(f"schedule (WFQ deficit round-robin, {per_burst} micro-batches/"
+          f"burst): {list(server.schedule_log)[-per_burst:]}")
     for name, outs in out.items():
         print(f"  {name:11s} → {len(outs)} outputs, shapes "
               f"{[tuple(o.shape) for o in outs]}")
+    if not args.sync:
+        server.stop()
 
     print("\nper-model serving stats:")
     st = server.stats()
     for name, s in st["models"].items():
+        lat = s.get("latency", {}).get("queue_wait_ms", {})
+        wait = (f"p50_wait={lat['p50']:.2f} ms p99={lat['p99']:.2f} ms"
+                if lat else "")
         print(f"  {name:11s} requests={s['requests_served']:3d} "
               f"batches={s['batches_run']:3d} flows={s['flows_served']:5d} "
               f"traces={s['traces']} bucket_hits={s['bucket_hits']} "
               f"build={s['plan_build_ms']:.0f} ms "
-              f"tables={s['table_bytes'] / 1024:.0f} KiB")
+              f"tables={s['table_bytes'] / 1024:.0f} KiB {wait}")
     print(f"registry: {st['cache']}")
+    print(f"scheduler: {st['scheduler']}")
 
 
 if __name__ == "__main__":

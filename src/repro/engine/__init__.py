@@ -28,6 +28,7 @@ evict their plans) plus named, strongly-pinned entries behind
 from .plan import (
     BACKENDS,
     DEFAULT_BUCKETS,
+    DEFAULT_FUSE_NMAX_CAP,
     STATS,
     CompiledBank,
     EngineStats,
@@ -48,6 +49,7 @@ from .registry import (
 __all__ = [
     "BACKENDS",
     "DEFAULT_BUCKETS",
+    "DEFAULT_FUSE_NMAX_CAP",
     "STATS",
     "CompiledBank",
     "EngineStats",

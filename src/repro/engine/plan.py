@@ -49,6 +49,7 @@ Backends are semantics-identical up to quantization:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
 from typing import Any, Callable, Sequence
 
@@ -74,6 +75,7 @@ from repro.kernels.fuzzy_lut.quantized import (
 __all__ = [
     "BACKENDS",
     "DEFAULT_BUCKETS",
+    "DEFAULT_FUSE_NMAX_CAP",
     "STATS",
     "CompiledBank",
     "EngineStats",
@@ -84,6 +86,15 @@ __all__ = [
     "build_plan",
     "fuse_banks",
 ]
+
+# Per-group cap on a fused stack's padded output width: the stacked operands
+# are [L, Kmax, C, Nmax], so one wide bank joining a narrow run multiplies
+# EVERY member's LUT rows (and the kernel's VMEM working set) by Nmax/N.
+# Groups split rather than pad past this; equal-width wide banks may still
+# fuse above it because they add no padding (see fuse_banks). 2048 clears
+# every paper-scale head (N ≤ a few hundred) while bounding worst-case
+# stack VMEM to a few MiB at C=32.
+DEFAULT_FUSE_NMAX_CAP = 2048
 
 BACKENDS = ("gather", "onehot", "kernel", "kernel_q8")
 
@@ -455,9 +466,30 @@ def _fusable(a: CompiledBank, b: CompiledBank) -> bool:
             and a.strategy == b.strategy)
 
 
-def fuse_banks(banks: Sequence[CompiledBank]) -> list:
+def _balloons(run: Sequence[CompiledBank], bank: CompiledBank,
+              nmax_cap: int | None) -> bool:
+    """Would adding ``bank`` to ``run`` pad some member's output rows past
+    ``nmax_cap``? The stacked operands share one Nmax = max(out_features),
+    so a single wide bank balloons every narrow member's padded [C, Nmax]
+    LUT slab. Equal-width banks above the cap are NOT a balloon (no padding
+    is added), so uniformly-wide runs still fuse."""
+    if nmax_cap is None:
+        return False
+    ns = [b.layer.out_features for b in run] + [bank.layer.out_features]
+    nmax = max(ns)
+    return nmax > nmax_cap and min(ns) < nmax
+
+
+def fuse_banks(banks: Sequence[CompiledBank], *,
+               nmax_cap: int | None = DEFAULT_FUSE_NMAX_CAP) -> list:
     """Plan-build fusion pass: group maximal runs of compatible consecutive
     banks into :class:`FusedBankStack` steps; lone banks pass through.
+
+    ``nmax_cap`` bounds each group's padded output width (``None`` = no
+    cap): a run splits rather than letting one wide bank balloon a narrow
+    stack's ``[L, Kmax, C, Nmax]`` VMEM footprint — the wide bank starts
+    its own run (and may still fuse with equally-wide neighbors, which add
+    no padding).
 
     Purely structural — the returned step list is what the sequential
     forward iterates, and each step exposes the same
@@ -474,7 +506,8 @@ def fuse_banks(banks: Sequence[CompiledBank]) -> list:
         run.clear()
 
     for bank in banks:
-        if run and not _fusable(run[-1], bank):
+        if run and (not _fusable(run[-1], bank)
+                    or _balloons(run, bank, nmax_cap)):
             flush()
         run.append(bank)
     flush()
@@ -488,9 +521,13 @@ def fuse_banks(banks: Sequence[CompiledBank]) -> list:
 
 class _PlanCounters:
     """Per-plan trace instrumentation, held OUTSIDE the plan so the jitted
-    forward's closure never references the plan itself (see ExecutionPlan)."""
+    forward's closure never references the plan itself (see ExecutionPlan).
 
-    __slots__ = ("traces", "buckets", "rows")
+    Guarded by a small lock: the async serving runtime may call one plan
+    from the drain thread while ``infer()`` runs on another — the counter
+    read-modify-writes must not lose updates."""
+
+    __slots__ = ("traces", "buckets", "rows", "lock")
 
     def __init__(self):
         self.traces = 0
@@ -500,6 +537,7 @@ class _PlanCounters:
         # went to filler rows (ladder efficiency, reported by the bench and
         # MultiModelServer.stats()).
         self.rows: dict[tuple[str, int], list] = {}
+        self.lock = threading.Lock()
 
 
 class ExecutionPlan:
@@ -549,8 +587,9 @@ class ExecutionPlan:
             # body runs at TRACE time only — this is the retrace counter the
             # bucketing tests assert on
             STATS.jit_traces += 1
-            ctr.traces += 1
-            ctr.buckets.add((backend, int(inputs[0].shape[0])))
+            with ctr.lock:
+                ctr.traces += 1
+                ctr.buckets.add((backend, int(inputs[0].shape[0])))
             return forward(lambda bank, x: bank.apply(x, backend), state, *inputs)
 
         # inputs (arg 1) are DONATED: the bucket ladder hands the jitted
@@ -583,10 +622,11 @@ class ExecutionPlan:
         bucket = bucket_batch(b, self.buckets)
         padded = tuple(self._owned_padded(x, bucket) for x in inputs)
         STATS.jit_calls += 1
-        self.jit_calls += 1
-        rows = self._ctr.rows.setdefault((be, bucket), [0, 0])
-        rows[0] += b
-        rows[1] += bucket
+        with self._ctr.lock:
+            self.jit_calls += 1
+            rows = self._ctr.rows.setdefault((be, bucket), [0, 0])
+            rows[0] += b
+            rows[1] += bucket
         y = self._jit(self._state, padded, backend=be)
         return y if bucket == b else y[:b]
 
@@ -614,15 +654,20 @@ class ExecutionPlan:
 
     def compile_stats(self) -> dict:
         """Per-plan jit-cache counters (the serving stats surface)."""
+        with self._ctr.lock:                     # consistent snapshot
+            traces = self._ctr.traces
+            jit_calls = self.jit_calls
+            buckets = sorted(self._ctr.buckets)
+            rows = {k: list(v) for k, v in self._ctr.rows.items()}
         return {
-            "traces": self.trace_count,
-            "jit_calls": self.jit_calls,
-            "bucket_hits": self.jit_calls - self.trace_count,
-            "buckets": sorted(self.compiled_buckets),
+            "traces": traces,
+            "jit_calls": jit_calls,
+            "bucket_hits": jit_calls - traces,
+            "buckets": buckets,
             # ladder efficiency: filler fraction of every dispatched bucket
             "pad_waste": {
                 f"{be}@{bucket}": round(1.0 - req / disp, 4) if disp else 0.0
-                for (be, bucket), (req, disp) in sorted(self._ctr.rows.items())
+                for (be, bucket), (req, disp) in sorted(rows.items())
             },
             # fusion coverage: how much of the plan runs as stacked kernels
             "fused_groups": self.fused_groups,
@@ -672,9 +717,9 @@ def _note_fusion(plan: ExecutionPlan, steps: Sequence) -> None:
             plan.fused_banks += len(s.banks)
 
 
-def _sequential_plan(layers, backend, kw, buckets, fuse) -> ExecutionPlan:
+def _sequential_plan(layers, backend, kw, buckets, fuse, nmax_cap) -> ExecutionPlan:
     banks = _compile_banks(layers, **kw)
-    steps = fuse_banks(banks) if fuse else list(banks)
+    steps = fuse_banks(banks, nmax_cap=nmax_cap) if fuse else list(banks)
 
     def forward(apply, state, x):
         h = x.astype(jnp.float32)
@@ -708,14 +753,15 @@ def _rnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
                          backend=backend, family="rnn", bucket_sizes=buckets)
 
 
-def _cnn_plan(model, backend, kw, buckets, fuse) -> ExecutionPlan:
+def _cnn_plan(model, backend, kw, buckets, fuse, nmax_cap) -> ExecutionPlan:
     from repro.nets.cnn import _windows  # structural helper, no cycle at call time
 
     window_bank = CompiledBank(model.window_bank, **kw)
     head_banks = _compile_banks(model.head_banks, **kw)
     # the head chain after the window pool is an ordinary sequential run —
     # fusable; the windowed step itself stays structural (per-window batch)
-    head_steps = fuse_banks(head_banks) if fuse else list(head_banks)
+    head_steps = (fuse_banks(head_banks, nmax_cap=nmax_cap) if fuse
+                  else list(head_banks))
     nam = bool(model.nam)        # static branch selector
     state = {
         "window": window_bank,
@@ -778,6 +824,7 @@ def build_plan(
     strategy: str = "auto",
     bucket_sizes: Sequence[int] | None = None,
     fuse: bool = True,
+    fuse_nmax_cap: int | None = DEFAULT_FUSE_NMAX_CAP,
 ) -> ExecutionPlan:
     """Compile any pegasusified model into an ExecutionPlan.
 
@@ -792,8 +839,11 @@ def build_plan(
     overrides the batch-bucket ladder (default :data:`DEFAULT_BUCKETS`);
     ``fuse=False`` disables the cross-bank fusion pass (``fuse_banks``) —
     useful for A/B benchmarks and as the escape hatch for a shape the
-    stacked kernel mishandles. The flag participates in ``plan_for``'s memo
-    key, so fused and unfused plans of one model coexist.
+    stacked kernel mishandles — and ``fuse_nmax_cap`` bounds each fused
+    group's padded output width (:data:`DEFAULT_FUSE_NMAX_CAP`; ``None``
+    disables the cap) so one wide bank cannot balloon a narrow stack's
+    VMEM footprint. Both participate in ``plan_for``'s memo key, so fused
+    and unfused plans of one model coexist.
 
     The plan freezes ALL model state at build time — banks and non-bank
     attributes alike (RNN window, CNN nam/out_bias, CNN-L
@@ -805,17 +855,20 @@ def build_plan(
               interpret=default_interpret() if interpret is None else interpret,
               strategy=strategy)
     if isinstance(model, PegasusLinear):
-        plan = _sequential_plan([model], backend, kw, bucket_sizes, fuse)
+        plan = _sequential_plan([model], backend, kw, bucket_sizes, fuse,
+                                fuse_nmax_cap)
     elif isinstance(model, (list, tuple)):
         if not all(isinstance(l, PegasusLinear) for l in model):
             raise TypeError("bank list must contain only PegasusLinear")
-        plan = _sequential_plan(model, backend, kw, bucket_sizes, fuse)
+        plan = _sequential_plan(model, backend, kw, bucket_sizes, fuse,
+                                fuse_nmax_cap)
     elif hasattr(model, "x_banks") and hasattr(model, "h_banks"):
         plan = _rnn_plan(model, backend, kw, bucket_sizes)
     elif hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
         plan = _cnn_l_plan(model, backend, kw, bucket_sizes)
     elif hasattr(model, "window_bank"):
-        plan = _cnn_plan(model, backend, kw, bucket_sizes, fuse)
+        plan = _cnn_plan(model, backend, kw, bucket_sizes, fuse,
+                         fuse_nmax_cap)
     else:
         raise TypeError(f"don't know how to compile {type(model).__name__} into a plan")
     # the non-bank state the plan froze at build — plan_for compares this

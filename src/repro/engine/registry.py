@@ -23,16 +23,27 @@ deterministically. This module owns ALL plan caching:
 Staleness semantics are unchanged from the old strong-ref memo: a hit
 requires the same model identity, the same bank layers in plan order, and
 an unchanged non-bank aux token (window/NAM/bias/LUT — see ``_model_aux``).
+
+**Thread safety:** registry state lives behind one RLock, but plan BUILDS
+run outside it — a multi-second XLA compile for a newly added model must
+not stall every in-flight ``get()`` on an always-on server. Racing
+first-calls for one key are deduplicated by a per-key in-flight event:
+the first caller builds, later callers wait and take the memo hit, so
+concurrent first-calls still compile exactly once (the async serving
+runtime submits from arbitrary threads while the drain thread revalidates
+named entries).
 """
 
 from __future__ import annotations
 
+import threading
 import time
 import weakref
 from collections import OrderedDict
 from typing import Any
 
 from .plan import (
+    DEFAULT_FUSE_NMAX_CAP,
     ExecutionPlan,
     STATS,
     _aux_matches,
@@ -83,8 +94,14 @@ class PlanRegistry:
 
     def __init__(self, max_plans: int = 64):
         self.max_plans = max_plans
+        # reentrant: discard nests under register/evict, and a GC pass while
+        # the lock is held may fire on_death callbacks on the same thread
+        self._lock = threading.RLock()
         self._memo: OrderedDict[tuple, _Entry] = OrderedDict()
         self._named: dict[str, dict] = {}
+        # key → Event: a build in progress; later same-key callers wait for
+        # it instead of compiling a duplicate (builds run OUTSIDE _lock)
+        self._building: dict[tuple, threading.Event] = {}
 
     # -- anonymous memo (the plan_for surface) ------------------------------
 
@@ -101,116 +118,178 @@ class PlanRegistry:
         # build_plan default) — without this, plan_for(m) and
         # plan_for(m, fuse=True) would build and cache the same plan twice
         kw["fuse"] = bool(kw.get("fuse", True))
+        cap = kw.get("fuse_nmax_cap", DEFAULT_FUSE_NMAX_CAP)
+        kw["fuse_nmax_cap"] = None if cap is None else int(cap)
         key = _model_key(model, interpret, kw)
-        entry = self._memo.get(key)
-        if entry is not None:
-            if entry.is_fresh(model):
-                STATS.plan_cache_hits += 1
-                self._memo.move_to_end(key)
-                return entry.plan
-            self._memo.pop(key, None)  # stale: bank/aux reassignment
-        plan = build_plan(model, interpret=interpret, **kw)
+        while True:
+            with self._lock:
+                entry = self._memo.get(key)
+                if entry is not None:
+                    if entry.is_fresh(model):
+                        STATS.plan_cache_hits += 1
+                        self._memo.move_to_end(key)
+                        return entry.plan
+                    self._memo.pop(key, None)  # stale: bank/aux reassignment
+                inflight = self._building.get(key)
+                if inflight is None:
+                    done = self._building[key] = threading.Event()
+                    break                      # this thread builds
+            # same-key build in progress elsewhere: wait, then re-check the
+            # memo (hit on success; on builder failure, become the builder)
+            inflight.wait()
+        try:
+            # the build runs WITHOUT the registry lock: other models keep
+            # serving while this one's XLA trace/compile grinds
+            plan = build_plan(model, interpret=interpret, **kw)
+        except BaseException:
+            with self._lock:
+                self._building.pop(key, None)
+            done.set()
+            raise
         holder: list = []
 
         def on_death(_ref, registry=weakref.ref(self)):
             reg = registry()
-            if reg is not None and holder and reg._memo.get(key) is holder[0]:
-                del reg._memo[key]
+            if reg is None:
+                return
+            with reg._lock:
+                if holder and reg._memo.get(key) is holder[0]:
+                    del reg._memo[key]
 
         entry = _Entry(key, model, plan, on_death)
         holder.append(entry)
-        while len(self._memo) >= self.max_plans:
-            self._memo.popitem(last=False)
-        self._memo[key] = entry
+        with self._lock:
+            self._building.pop(key, None)
+            while len(self._memo) >= self.max_plans:
+                self._memo.popitem(last=False)
+            self._memo[key] = entry
+        done.set()
         return plan
 
     def discard(self, model: Any) -> int:
         """Explicitly evict every memo entry built for ``model`` (any build
         options). Returns the number of entries dropped."""
         banks = _model_banks(model)
-        # snapshot: a cyclic-GC pass during iteration may fire on_death
-        # callbacks that delete entries from the live dict
-        doomed = [k for k, e in list(self._memo.items())
-                  if (e.wrapper_ref is not None and e.wrapper_ref() is model)
-                  or (banks and len(banks) == len(e.bank_refs)
-                      and all(r() is b for r, b in zip(e.bank_refs, banks)))]
-        for k in doomed:
-            del self._memo[k]
-        return len(doomed)
+        with self._lock:
+            # snapshot: a cyclic-GC pass during iteration may fire on_death
+            # callbacks that delete entries from the live dict
+            doomed = [k for k, e in list(self._memo.items())
+                      if (e.wrapper_ref is not None and e.wrapper_ref() is model)
+                      or (banks and len(banks) == len(e.bank_refs)
+                          and all(r() is b for r, b in zip(e.bank_refs, banks)))]
+            for k in doomed:
+                del self._memo[k]
+            return len(doomed)
 
     def clear(self) -> None:
-        self._memo.clear()
-        self._named.clear()
+        with self._lock:
+            self._memo.clear()
+            self._named.clear()
 
     def __len__(self) -> int:
-        return len(self._memo)
+        with self._lock:
+            return len(self._memo)
 
     def cache_info(self) -> dict:
-        return {"entries": len(self._memo), "capacity": self.max_plans,
-                "named": sorted(self._named)}
+        with self._lock:
+            return {"entries": len(self._memo), "capacity": self.max_plans,
+                    "named": sorted(self._named)}
 
     # -- named serving entries ----------------------------------------------
 
     def register(self, name: str, model: Any, *, backend: str = "onehot",
                  **build_kw) -> ExecutionPlan:
         """Compile (or reuse) a plan for ``model`` and pin it under ``name``.
-        Re-registering a name replaces its entry."""
+        Re-registering a name replaces its entry AND discards the replaced
+        model's memo entries (matching :meth:`evict` — without this, the
+        superseded model's plan lingered in the memo until LRU churn or GC
+        even though nothing served it). The discard is skipped when old and
+        new wrap the SAME bank objects: memo entries match by bank
+        identity, so discarding would evict the new model's entry too."""
         t0 = time.perf_counter()
         plan = self.plan_for(model, backend=backend, **build_kw)
-        self._named[name] = {
-            "model": model,
-            # the named store carries its own freshness watcher: named plans
-            # must survive memo LRU churn without recompiling (the memo is
-            # bounded; the pin is not)
-            "entry": _Entry(None, model, plan, lambda _ref: None),
-            "backend": backend,
-            "build_kw": dict(build_kw),
-            "plan_build_ms": (time.perf_counter() - t0) * 1e3,
-        }
-        return plan
+        build_ms = (time.perf_counter() - t0) * 1e3
+        with self._lock:
+            old = self._named.get(name)
+            self._named[name] = {
+                "model": model,
+                # the named store carries its own freshness watcher: named
+                # plans must survive memo LRU churn without recompiling (the
+                # memo is bounded; the pin is not)
+                "entry": _Entry(None, model, plan, lambda _ref: None),
+                "backend": backend,
+                "build_kw": dict(build_kw),
+                "plan_build_ms": build_ms,
+                "recompiles": 0,
+            }
+            if (old is not None and old["model"] is not model
+                    and tuple(map(id, _model_banks(old["model"])))
+                    != tuple(map(id, _model_banks(model)))):
+                self.discard(old["model"])
+            return plan
 
     def get(self, name: str) -> ExecutionPlan:
         """The plan serving ``name`` — revalidated against the live model,
         recompiling on bank/aux reassignment so a name never serves stale
-        tables."""
-        ent = self._named[name]
-        if ent["entry"].is_fresh(ent["model"]):
-            return ent["entry"].plan
-        plan = self.plan_for(ent["model"], backend=ent["backend"],
-                             **ent["build_kw"])
-        ent["entry"] = _Entry(None, ent["model"], plan, lambda _ref: None)
-        return plan
+        tables. A recompile refreshes the entry's build stats
+        (``plan_build_ms`` re-times the rebuild, ``recompiles`` counts
+        them) — the stale-stats bug left the original register() timing on
+        an entry whose plan had long been replaced. The rebuild itself runs
+        without the registry lock (see the module docstring)."""
+        with self._lock:
+            ent = self._named[name]
+            if ent["entry"].is_fresh(ent["model"]):
+                return ent["entry"].plan
+            model = ent["model"]
+            backend, build_kw = ent["backend"], dict(ent["build_kw"])
+        t0 = time.perf_counter()
+        plan = self.plan_for(model, backend=backend, **build_kw)
+        with self._lock:
+            ent = self._named.get(name)
+            if ent is None or ent["model"] is not model:
+                return plan              # evicted/re-registered meanwhile
+            ent["entry"] = _Entry(None, model, plan, lambda _ref: None)
+            ent["plan_build_ms"] = (time.perf_counter() - t0) * 1e3
+            ent["recompiles"] += 1
+            return plan
 
     def model(self, name: str) -> Any:
-        return self._named[name]["model"]
+        with self._lock:
+            return self._named[name]["model"]
 
     def names(self) -> list[str]:
-        return sorted(self._named)
+        with self._lock:
+            return sorted(self._named)
 
     def __contains__(self, name: str) -> bool:
-        return name in self._named
+        with self._lock:
+            return name in self._named
 
     def evict(self, name: str) -> bool:
         """Drop a named entry (and its memo entry). The plan dies with the
         registry's pins unless the caller holds it elsewhere."""
-        ent = self._named.pop(name, None)
-        if ent is None:
-            return False
-        self.discard(ent["model"])
-        return True
+        with self._lock:
+            ent = self._named.pop(name, None)
+            if ent is None:
+                return False
+            self.discard(ent["model"])
+            return True
 
     def stats(self) -> dict:
         """Per-name compile-cache + build stats (the serving ops surface)."""
-        return {
-            name: {
-                "backend": ent["backend"],
-                "plan_build_ms": ent["plan_build_ms"],
-                "num_banks": ent["entry"].plan.num_banks,
-                "table_bytes": ent["entry"].plan.table_bytes(),
-                **ent["entry"].plan.compile_stats(),
+        with self._lock:
+            entries = sorted(self._named.items())
+            return {
+                name: {
+                    "backend": ent["backend"],
+                    "plan_build_ms": ent["plan_build_ms"],
+                    "recompiles": ent.get("recompiles", 0),
+                    "num_banks": ent["entry"].plan.num_banks,
+                    "table_bytes": ent["entry"].plan.table_bytes(),
+                    **ent["entry"].plan.compile_stats(),
+                }
+                for name, ent in entries
             }
-            for name, ent in sorted(self._named.items())
-        }
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,414 @@
+"""Serving scheduler: thread-safe bounded queues + weighted fair queueing.
+
+The dataplane premise is continuous line-rate traffic — requests arrive
+whenever they arrive, not when the host happens to call ``drain()``. This
+module is the contention-management core the serving layer
+(:mod:`repro.launch.serve`) builds on:
+
+  * :class:`WFQScheduler` — owns every per-model request queue behind ONE
+    lock. ``submit`` is safe from any thread; ``pull_round`` hands the
+    dispatcher (the sync ``drain()`` loop or the async background thread)
+    the next slice of work according to **deficit round-robin** (DRR), the
+    classic O(1) weighted-fair-queueing realization: per round, each
+    backlogged model's deficit counter grows by ``quantum x weight`` and the
+    model releases queued requests until the counter is spent. Under
+    saturation every model's served flows/s converge to its weight share —
+    a 4:1 weight skew is a 4:1 flow share — while an idle model's credit
+    resets (no banking unused bandwidth). Requests are the atomic pull
+    unit; the dispatcher cuts each pulled slice into bucket-aligned
+    micro-batches (``repro.engine.bucket_chunks``), so deficit accounting
+    in flows is exactly accounting in micro-batch work.
+  * **Priority classes** — named weights (:data:`PRIORITY_WEIGHTS`:
+    ``high=4, normal=1, low=0.25``). Within a DRR round, backlogged models
+    are visited in descending-weight order (stable on ties), so a
+    high-priority model's requests both dispatch earlier in every round and
+    get a larger flow share across rounds: its queue-wait percentiles sit
+    strictly below a low-priority model's under saturation.
+  * **Backpressure** — queues are optionally bounded (``depth``). Policy
+    ``"reject"`` fails an over-limit ``submit`` immediately with
+    :class:`QueueFullError`; ``"block"`` parks the submitting thread until
+    the dispatcher frees space (or ``timeout`` elapses, then
+    ``QueueFullError``). Unbounded (``depth=None``) keeps the PR-3
+    submit-never-fails behavior for the synchronous server.
+  * **Latency instrumentation** — every request is stamped at submit;
+    ``pull_round`` stamps a PROVISIONAL dispatch time, and the dispatcher
+    may re-stamp ``t_dispatch`` when the slice actually starts dispatching
+    (``MultiModelServer._begin_group`` does — a round's groups run
+    sequentially, so later groups keep waiting past their pull) before
+    reporting the slice's service wall time via :meth:`record_service`.
+    Per-model bounded reservoirs yield queue-wait / service-time
+    percentiles (:meth:`latency_stats`) — the observable the WFQ tests and
+    the ``async_serve`` bench gate assert on.
+
+The scheduler never touches a plan: dispatching (every compiled-plan call)
+stays in the server, so the async runtime funnels plan execution through
+one thread while ingestion fans across many (producers pay only the queue
+lock and their own inputs' host→device staging).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+__all__ = [
+    "LATENCY_WINDOW",
+    "PRIORITY_WEIGHTS",
+    "ModelQueue",
+    "QueueFullError",
+    "WFQScheduler",
+]
+
+# priority class → WFQ weight; an explicit float weight overrides the class
+PRIORITY_WEIGHTS = {"high": 4.0, "normal": 1.0, "low": 0.25}
+
+# per-model reservoir size for queue-wait / service-time samples: percentiles
+# over the last ~2k requests, bounded so a long-lived server never grows it
+LATENCY_WINDOW = 2048
+
+# weights are clamped ≥ this: a zero weight would never accumulate deficit
+# and its backlogged queue could never release an oversize request
+_MIN_WEIGHT = 1e-3
+
+# distinguishes "depth not passed" from the legitimate depth=None (unbounded)
+_UNSET = object()
+
+
+def _resolve_weight(weight: float | None, priority: str | None) -> float:
+    """weight/priority → clamped WFQ weight; explicit weight wins."""
+    if weight is None:
+        if priority is not None and priority not in PRIORITY_WEIGHTS:
+            raise ValueError(
+                f"unknown priority {priority!r}; expected one of "
+                f"{sorted(PRIORITY_WEIGHTS)} (or pass weight=)")
+        weight = PRIORITY_WEIGHTS[priority or "normal"]
+    return max(float(weight), _MIN_WEIGHT)
+
+
+class QueueFullError(RuntimeError):
+    """A bounded model queue rejected (or timed out blocking on) a submit."""
+
+
+class _Request:
+    """One queued request: the input tuple plus its lifecycle stamps."""
+
+    __slots__ = ("inputs", "size", "future", "t_submit", "t_dispatch")
+
+    def __init__(self, inputs: tuple, size: int, future: Future | None):
+        self.inputs = inputs
+        self.size = size
+        self.future = future
+        self.t_submit = time.perf_counter()
+        self.t_dispatch = 0.0
+
+
+class ModelQueue:
+    """One model's FIFO + its scheduling config. All access goes through the
+    owning :class:`WFQScheduler`'s lock — this class adds no locking."""
+
+    __slots__ = ("name", "weight", "depth", "policy", "reqs")
+
+    def __init__(self, name: str, *, weight: float = 1.0,
+                 depth: int | None = None, policy: str = "block"):
+        if policy not in ("block", "reject"):
+            raise ValueError(f"unknown backpressure policy {policy!r}; "
+                             "expected 'block' or 'reject'")
+        if depth is not None and depth < 1:
+            raise ValueError(f"queue depth must be ≥ 1 or None, got {depth}")
+        self.name = name
+        self.weight = max(float(weight), _MIN_WEIGHT)
+        self.depth = depth
+        self.policy = policy
+        self.reqs: deque[_Request] = deque()
+
+
+class WFQScheduler:
+    """Thread-safe request queues scheduled by deficit round-robin.
+
+    One lock guards the queue map, every queue's deque, the deficit
+    counters, and the latency reservoirs; the two conditions share it
+    (``_space``: submitters blocked on a full queue; ``_work``: a dispatcher
+    waiting for anything to do). Plan dispatch happens OUTSIDE the lock —
+    ``pull_round`` pops requests and returns, so a multi-millisecond XLA
+    call never blocks ingestion.
+    """
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._space = threading.Condition(self._lock)
+        self._work = threading.Condition(self._lock)
+        self._queues: dict[str, ModelQueue] = {}
+        self._deficit: dict[str, float] = {}
+        self._latency: dict[str, dict] = {}
+
+    # -- queue management ---------------------------------------------------
+
+    def add_queue(self, name: str, *, weight: float | None = None,
+                  priority: str | None = None, depth=_UNSET,
+                  policy: str | None = None) -> ModelQueue:
+        """Create the queue for ``name`` (``priority`` names a class in
+        :data:`PRIORITY_WEIGHTS`; an explicit ``weight`` wins). If the
+        queue already exists, any EXPLICITLY-passed field is applied to it
+        via :meth:`configure` (so re-registering a model with a new
+        priority, bound, or policy is honored)."""
+        w = _resolve_weight(weight, priority)
+        with self._lock:
+            q = self._queues.get(name)
+            if q is None:
+                q = ModelQueue(name, weight=w,
+                               depth=None if depth is _UNSET else depth,
+                               policy=policy or "block")
+                self._queues[name] = q
+                self._deficit[name] = 0.0
+            else:
+                if weight is not None or priority is not None:
+                    q.weight = w
+                if depth is not _UNSET or policy is not None:
+                    self.configure(name, depth=depth, policy=policy)
+            return q
+
+    def configure(self, name: str, *, weight: float | None = None,
+                  priority: str | None = None, depth=_UNSET,
+                  policy: str | None = None) -> None:
+        """Re-configure a live queue; only explicitly-passed fields change
+        (``depth=None`` means unbounded, so absence is a sentinel)."""
+        with self._lock:
+            q = self._queues[name]
+            if weight is not None or priority is not None:
+                q.weight = _resolve_weight(weight, priority)
+            if depth is not _UNSET:
+                if depth is not None and depth < 1:
+                    raise ValueError(
+                        f"queue depth must be ≥ 1 or None, got {depth}")
+                q.depth = depth
+                self._space.notify_all()     # a raised bound frees submitters
+            if policy is not None:
+                if policy not in ("block", "reject"):
+                    raise ValueError(
+                        f"unknown backpressure policy {policy!r}; expected "
+                        "'block' or 'reject'")
+                q.policy = policy
+
+    def remove_queue(self, name: str) -> list[_Request]:
+        """Drop a queue; returns its still-pending requests so the caller can
+        fail their futures."""
+        with self._lock:
+            q = self._queues.pop(name, None)
+            self._deficit.pop(name, None)
+            self._latency.pop(name, None)
+            if q is None:
+                return []
+            reqs = list(q.reqs)
+            q.reqs.clear()
+            # anyone blocked submitting to this queue must wake and notice
+            self._space.notify_all()
+            return reqs
+
+    def set_weight(self, name: str, *, weight: float | None = None,
+                   priority: str | None = None) -> float:
+        """Re-class a live queue (takes effect next DRR round). One of
+        ``weight``/``priority`` is required — a bare call must not silently
+        demote the queue to the normal class."""
+        if weight is None and priority is None:
+            raise ValueError("pass weight= or priority= (a bare set_weight "
+                             "would silently reset to the normal class)")
+        with self._lock:
+            q = self._queues[name]
+            q.weight = _resolve_weight(weight, priority)
+            return q.weight
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._queues
+
+    def pending(self) -> dict[str, int]:
+        with self._lock:
+            return {n: len(q.reqs) for n, q in self._queues.items() if q.reqs}
+
+    def describe(self) -> dict:
+        """Static scheduling config + live backlog (the stats surface)."""
+        with self._lock:
+            return {
+                name: {"weight": q.weight, "depth": q.depth,
+                       "policy": q.policy, "pending": len(q.reqs)}
+                for name, q in sorted(self._queues.items())
+            }
+
+    # -- ingestion ----------------------------------------------------------
+
+    def submit(self, name: str, inputs: tuple, size: int, *,
+               future: Future | None = None,
+               timeout: float | None = None) -> int:
+        """Enqueue one request; returns its queue position at append time.
+        Backpressure per the queue's policy: ``reject`` raises
+        :class:`QueueFullError` when full; ``block`` waits for space up to
+        ``timeout`` seconds (``None`` = forever), then raises."""
+        with self._lock:
+            q = self._queues[name]
+            if q.depth is not None and len(q.reqs) >= q.depth:
+                if q.policy == "reject":
+                    raise QueueFullError(
+                        f"queue for {name!r} full ({q.depth} pending, "
+                        "policy=reject)")
+                deadline = (None if timeout is None
+                            else time.monotonic() + timeout)
+                # re-check depth each wake: configure() may have lifted the
+                # bound to None (unbounded) while this submitter slept
+                while q.depth is not None and len(q.reqs) >= q.depth:
+                    remaining = (None if deadline is None
+                                 else deadline - time.monotonic())
+                    if remaining is not None and remaining <= 0:
+                        raise QueueFullError(
+                            f"queue for {name!r} still full ({q.depth} "
+                            f"pending) after blocking {timeout}s")
+                    self._space.wait(remaining)
+                    if name not in self._queues:   # removed while we slept
+                        raise KeyError(
+                            f"model {name!r} was removed while its queue "
+                            "was full")
+                    q = self._queues[name]
+            req = _Request(inputs, int(size), future)
+            q.reqs.append(req)
+            self._work.notify_all()
+            return len(q.reqs) - 1
+
+    def requeue_front(self, name: str, reqs: list[_Request]) -> None:
+        """Put a failed slice back at the FRONT of its queue, in order —
+        the sync drain's retry semantics (counters untouched, FIFO kept)."""
+        if not reqs:
+            return
+        with self._lock:
+            q = self._queues.get(name)
+            if q is None:
+                return
+            q.reqs.extendleft(reversed(reqs))
+            self._work.notify_all()
+
+    def discard(self, name: str) -> list[_Request]:
+        """Clear a queue (poisoned-request escape hatch); returns the dropped
+        requests so the caller can fail their futures. The queue's deficit
+        resets with it — an emptied queue must not bank credit (an oversize
+        head may have inflated it via the catch-up jump)."""
+        with self._lock:
+            q = self._queues.get(name)
+            if q is None:
+                return []
+            reqs = list(q.reqs)
+            q.reqs.clear()
+            self._deficit[name] = 0.0
+            self._space.notify_all()
+            return reqs
+
+    # -- scheduling ---------------------------------------------------------
+
+    def pull_round(self, quantum: float,
+                   exclude: frozenset | set = frozenset()
+                   ) -> list[tuple[str, list[_Request]]]:
+        """One deficit-round-robin round: every backlogged model (minus
+        ``exclude``), in descending-weight order, earns ``quantum x weight``
+        credit and releases FIFO requests while the next one fits.
+
+        Guarantees progress: if no backlogged head fits its credit this
+        round (a request larger than one quantum), every backlogged queue
+        is advanced the minimal whole number of rounds that lets SOME head
+        fit — one O(1) jump instead of busy-looping round by round under
+        the lock, with the same weight-proportional credit each queue would
+        have earned. A model whose queue empties forfeits leftover credit
+        (classic DRR: idle models don't bank bandwidth). Returns
+        ``[(name, [requests]), ...]`` in dispatch order; empty means
+        nothing eligible is pending.
+        """
+        with self._lock:
+            out: list[tuple[str, list[_Request]]] = []
+            while not out:
+                backlogged = [q for q in self._queues.values()
+                              if q.reqs and q.name not in exclude]
+                if not backlogged:
+                    break
+                # descending weight, stable on ties (dict = insertion order)
+                backlogged.sort(key=lambda q: -q.weight)
+                now = time.perf_counter()
+                for q in backlogged:
+                    credit = self._deficit[q.name] + quantum * q.weight
+                    pulled: list[_Request] = []
+                    while q.reqs and q.reqs[0].size <= credit:
+                        r = q.reqs.popleft()
+                        credit -= r.size
+                        r.t_dispatch = now
+                        pulled.append(r)
+                    # empty queue forfeits credit; a backlogged one keeps it
+                    self._deficit[q.name] = credit if q.reqs else 0.0
+                    if pulled:
+                        out.append((q.name, pulled))
+                if not out:
+                    # every head is oversize: jump the minimal number of
+                    # extra rounds (per-queue credit stays ∝ weight)
+                    k = max(1, min(
+                        -(-(q.reqs[0].size - self._deficit[q.name])
+                          // (quantum * q.weight))
+                        for q in backlogged))
+                    for q in backlogged:
+                        self._deficit[q.name] += k * quantum * q.weight
+            if out:
+                self._space.notify_all()
+            return out
+
+    def wait_for_work(self, timeout: float | None) -> bool:
+        """Park until any queue is non-empty (or timeout); returns whether
+        work is pending. The async drain loop's idle wait."""
+        with self._lock:
+            if any(q.reqs for q in self._queues.values()):
+                return True
+            self._work.wait(timeout)
+            return any(q.reqs for q in self._queues.values())
+
+    def kick(self) -> None:
+        """Wake a parked dispatcher (used by stop())."""
+        with self._lock:
+            self._work.notify_all()
+
+    # -- latency instrumentation --------------------------------------------
+
+    def record_service(self, name: str, reqs: list[_Request],
+                       service_ms: float) -> None:
+        """Fold one served slice into the reservoirs: each request's
+        queue-wait (submit → pull) and the slice's service wall time."""
+        with self._lock:
+            lat = self._latency.get(name)
+            if lat is None:
+                lat = self._latency[name] = {
+                    "queue_wait_ms": deque(maxlen=LATENCY_WINDOW),
+                    "service_ms": deque(maxlen=LATENCY_WINDOW),
+                }
+            for r in reqs:
+                lat["queue_wait_ms"].append(
+                    (r.t_dispatch - r.t_submit) * 1e3)
+                lat["service_ms"].append(service_ms)
+
+    def reset_latency(self) -> None:
+        """Drop the reservoirs (benchmarks reset after warmup)."""
+        with self._lock:
+            self._latency.clear()
+
+    def latency_stats(self) -> dict:
+        """Per-model queue-wait + service-time percentiles over the
+        reservoir window."""
+        with self._lock:
+            snap = {name: {k: list(v) for k, v in lat.items()}
+                    for name, lat in self._latency.items()}
+        out = {}
+        for name, lat in sorted(snap.items()):
+            entry = {"samples": len(lat["queue_wait_ms"])}
+            for key, samples in lat.items():
+                if samples:
+                    p50, p90, p99 = np.percentile(
+                        np.asarray(samples, np.float64), [50, 90, 99])
+                    entry[key] = {"p50": round(float(p50), 3),
+                                  "p90": round(float(p90), 3),
+                                  "p99": round(float(p99), 3)}
+            out[name] = entry
+        return out

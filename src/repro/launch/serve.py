@@ -14,16 +14,26 @@ dataplane serves MANY models and traffic classes at once — Quark runs whole
 CNNs on one switch, FENIX multiplexes DNN workloads through one pipeline):
 N named heterogeneous plans (MLP/RNN/CNN/AE) behind one server, requests
 addressed ``(model_name, inputs)``, same-model requests coalesced into
-bucket-aligned micro-batches, models scheduled fairly (round-robin), and
-per-model serving + compile-cache stats.
+bucket-aligned micro-batches, models scheduled by weighted fair queueing
+(:class:`repro.launch.scheduler.WFQScheduler`: deficit round-robin over
+priority-weighted queues), and per-model serving + compile-cache +
+latency stats.
+
+``AsyncMultiModelServer`` makes that an always-on service: a background
+drain thread, thread-safe ``submit()`` returning futures, and bounded
+per-model queues with reject/block backpressure — the host-side analog of
+FENIX's multiplexed pipeline under continuous ingestion.
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 from collections import deque
+from concurrent.futures import Future
 
+import concurrent.futures
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,9 +44,58 @@ from repro.models.transformer import (
 )
 
 from .mesh import batch_specs, decode_state_specs, named, param_specs
+from .scheduler import PRIORITY_WEIGHTS, QueueFullError, WFQScheduler
 
 __all__ = ["make_serve_step", "make_prefill_step", "Server", "PegasusServer",
-           "MultiModelServer"]
+           "MultiModelServer", "AsyncMultiModelServer", "PartialDrainError",
+           "QueueFullError", "PRIORITY_WEIGHTS"]
+
+
+class PartialDrainError(RuntimeError):
+    """Some requested models failed to drain while others served.
+
+    Raised by :meth:`MultiModelServer.serve` instead of mutating and
+    re-raising the underlying exception (the old ``err.partial_results =
+    ...`` decoration failed with ``AttributeError`` on slotted/immutable
+    exception types and permanently decorated an exception object that may
+    be shared or re-raised elsewhere). Carries:
+
+      * ``partial_results`` — ``{name: [outputs]}`` for every model that DID
+        serve (that work is computed and counted; only the failed models'
+        requests need resubmitting). A failed model that served SOME slices
+        before failing appears here too, with its served prefix — its name
+        in ``failed`` is what marks it incomplete,
+      * ``failed`` — ``{name: exception}`` for every requested model that
+        did not, and
+      * ``__cause__`` — the first underlying exception (``raise ... from``).
+    """
+
+    def __init__(self, failed: dict, partial_results: dict):
+        self.failed = dict(failed)
+        self.partial_results = partial_results
+        names = ", ".join(sorted(self.failed))
+        super().__init__(
+            f"model(s) {names} failed to drain: "
+            f"{next(iter(self.failed.values()))!r} (served models' outputs "
+            "are in .partial_results; per-model errors in .failed)")
+
+
+def _resolve_future(fut: Future | None, *, result=None,
+                    error: BaseException | None = None) -> None:
+    """Resolve a request future, tolerating a caller-side cancel racing the
+    resolution (futures here are never set_running, so ``cancel()`` can win
+    between our done() check and set_result — an InvalidStateError leaking
+    out of the resolution loop would strand every later future in the
+    round)."""
+    if fut is None or fut.done():
+        return
+    try:
+        if error is not None:
+            fut.set_exception(error)
+        else:
+            fut.set_result(result)
+    except concurrent.futures.InvalidStateError:
+        pass    # cancelled mid-resolution: the caller owns that outcome
 
 
 def make_serve_step(cfg: ArchConfig):
@@ -195,9 +254,13 @@ class MultiModelServer:
     :class:`repro.engine.PlanRegistry` (per-model backend override allowed).
     Requests address models by name; pending same-model requests are
     coalesced into bucket-aligned micro-batches (``bucket_chunks``: full
-    chunks are exact bucket sizes, the tail pads minimally) and the models
-    with pending work are scheduled fairly — one micro-batch per model per
-    round-robin turn — so a burst on one model cannot starve the others.
+    chunks are exact bucket sizes, the tail pads minimally) and models with
+    pending work are scheduled by **weighted fair queueing**
+    (:class:`~repro.launch.scheduler.WFQScheduler`: deficit round-robin,
+    each model's flow share proportional to its priority weight — with
+    every model at the default weight this degenerates to the PR-3
+    one-chunk-per-model round-robin), so a burst on one model cannot
+    starve the others and a high-priority model is served first.
 
     Two call styles:
       * ``infer(name, *inputs)`` — immediate single-request dispatch.
@@ -206,17 +269,27 @@ class MultiModelServer:
         in per-model submit order. ``serve(requests)`` wraps submit+drain
         for a mixed ``[(name, inputs), ...]`` list, preserving order.
 
+    Ingestion is thread-safe: the scheduler owns every queue behind one
+    lock, so concurrent ``submit``/``add_model`` during a ``drain`` can
+    neither corrupt the queue map (the old dict-iteration RuntimeError) nor
+    lose requests (the old drain ``clear()``-ed whole queues at commit,
+    wiping anything submitted mid-drain — requests are now popped
+    individually). Plan dispatch itself stays on the draining thread.
+
     All counters (``requests_served``/``batches_run``/``flows_served``) are
-    per model and committed only when a model's queue fully serves; a
-    failing model keeps its queue (retryable, never double-counted), its
-    exception lands in ``last_drain_errors``, and every other model drains
-    and returns normally. ``schedule_log`` records the model name of every
-    dispatched micro-batch — the fairness tests assert on it.
+    per model and committed only when a pulled slice fully serves; a
+    failing slice is requeued at the front (retryable, never
+    double-counted), its exception lands in ``last_drain_errors``, and
+    every other model drains and returns normally. ``schedule_log`` records
+    the model name of every dispatched micro-batch — the fairness tests
+    assert on it.
     """
 
     def __init__(self, models: dict | None = None, *, backend: str = "onehot",
                  interpret: bool | None = None, max_batch: int | None = None,
-                 registry=None, fuse: bool = True):
+                 registry=None, fuse: bool = True,
+                 queue_depth: int | None = None, policy: str = "block",
+                 quantum: int | None = None):
         from repro.engine import DEFAULT_BUCKETS, PlanRegistry
 
         self.registry = PlanRegistry() if registry is None else registry
@@ -225,8 +298,19 @@ class MultiModelServer:
         self.fuse = fuse    # cross-bank fusion default for add_model plans
         self.max_batch = (max(DEFAULT_BUCKETS) if max_batch is None
                           else max_batch)
-        self._queues: dict[str, deque] = {}
+        self.queue_depth = queue_depth   # default bound for new model queues
+        self.policy = policy             # default backpressure policy
+        # DRR credit per round per unit weight, in flows. None → max_batch
+        # (a weight-1 model earns ~one full micro-batch per round). Set it
+        # SMALLER to ration deep backlogs across more rounds — finer-grained
+        # priority differentiation at slightly more scheduling overhead.
+        self.quantum = quantum
+        self._sched = WFQScheduler()
         self._counters: dict[str, dict] = {}
+        # counter commits are read-modify-writes shared between the drain
+        # thread and infer() callers — same race the plan-level counters
+        # guard with _PlanCounters.lock
+        self._ctr_lock = threading.Lock()
         # bounded: the log is a debugging/fairness-test surface, not an
         # audit trail — a long-lived server must not grow it without limit
         self.schedule_log: deque = deque(maxlen=4096)
@@ -237,11 +321,16 @@ class MultiModelServer:
         for name, model in dict(models or {}).items():
             self.add_model(name, model)
 
-    def _track(self, name: str) -> None:
+    def _track(self, name: str, **sched_kw) -> None:
         """Queue + counters for a registry name this server serves. Names
         registered on a shared registry after construction are adopted
-        lazily on first submit/infer."""
-        self._queues.setdefault(name, deque())
+        lazily on first submit/infer. Server-wide depth/policy defaults
+        apply only at queue CREATION — an existing queue keeps its config
+        unless the caller passed explicit overrides."""
+        if name not in self._sched:
+            sched_kw.setdefault("depth", self.queue_depth)
+            sched_kw.setdefault("policy", self.policy)
+        self._sched.add_queue(name, **sched_kw)
         self._counters.setdefault(name, {"requests_served": 0,
                                          "batches_run": 0, "flows_served": 0})
 
@@ -252,21 +341,50 @@ class MultiModelServer:
                     f"unknown model {name!r}; registered: {self.models()}")
             self._track(name)
 
+    def _quantum(self) -> int:
+        """DRR credit per round per unit weight, in flows — by default the
+        effective micro-batch ceiling, so a weight-1 model earns about one
+        full micro-batch per round and a weight-4 model earns four."""
+        return max(1, int(self.max_batch if self.quantum is None
+                          else self.quantum))
+
     # -- model management ---------------------------------------------------
 
     def add_model(self, name: str, model, *, backend: str | None = None,
+                  priority: str | None = None, weight: float | None = None,
+                  queue_depth: int | None = None, policy: str | None = None,
                   **build_kw):
-        """Compile + register one model; returns its ExecutionPlan."""
+        """Compile + register one model; returns its ExecutionPlan.
+
+        ``priority`` names a class in :data:`PRIORITY_WEIGHTS` (``high`` /
+        ``normal`` / ``low``); an explicit ``weight`` overrides it. Both
+        feed the WFQ scheduler. ``queue_depth``/``policy`` override the
+        server-wide backpressure defaults for this model's queue."""
         build_kw.setdefault("fuse", self.fuse)
         plan = self.registry.register(
             name, model, backend=backend or self.backend,
             interpret=self.interpret, **build_kw)
-        self._track(name)
+        sched_kw: dict = {"priority": priority, "weight": weight}
+        if queue_depth is not None:
+            sched_kw["depth"] = queue_depth
+        if policy is not None:
+            sched_kw["policy"] = policy
+        self._track(name, **sched_kw)   # explicit fields apply on re-register
         return plan
 
+    def set_priority(self, name: str, *, priority: str | None = None,
+                     weight: float | None = None) -> float:
+        """Re-class a served model's WFQ weight (effective next round)."""
+        self._tracked(name)
+        return self._sched.set_weight(name, weight=weight, priority=priority)
+
     def remove_model(self, name: str) -> bool:
-        """Evict a model; its pending queue is dropped with it."""
-        self._queues.pop(name, None)
+        """Evict a model; its pending queue is dropped with it (queued
+        futures, if any, fail with KeyError)."""
+        dropped = self._sched.remove_queue(name)
+        err = KeyError(f"model {name!r} removed with requests pending")
+        for r in dropped:
+            _resolve_future(r.future, error=err)
         self._counters.pop(name, None)
         return self.registry.evict(name)
 
@@ -279,98 +397,163 @@ class MultiModelServer:
         """Immediate single-request dispatch through the named plan."""
         self._tracked(name)
         y = self.registry.get(name)(*inputs, backend=backend)
-        c = self._counters[name]
-        c["requests_served"] += 1        # success-only counting
-        c["batches_run"] += 1
-        c["flows_served"] += int(np.shape(inputs[0])[0])
+        with self._ctr_lock:
+            c = self._counters[name]
+            c["requests_served"] += 1    # success-only counting
+            c["batches_run"] += 1
+            c["flows_served"] += int(np.shape(inputs[0])[0])
         return y
 
-    def submit(self, name: str, *inputs) -> int:
-        """Enqueue one request; returns its per-model position for this
-        drain round. Inputs must carry a leading batch dim."""
+    def _enqueue(self, name: str, inputs: tuple, future: Future | None,
+                 timeout: float | None) -> int:
         self._tracked(name)
-        q = self._queues[name]
-        q.append(tuple(x if isinstance(x, jax.Array) else jnp.asarray(x)
-                       for x in inputs))
-        return len(q) - 1
+        inputs = tuple(x if isinstance(x, jax.Array) else jnp.asarray(x)
+                       for x in inputs)
+        return self._sched.submit(name, inputs, int(np.shape(inputs[0])[0]),
+                                  future=future, timeout=timeout)
+
+    def submit(self, name: str, *inputs, timeout: float | None = None) -> int:
+        """Enqueue one request; returns its queue position at append time.
+        Inputs must carry a leading batch dim. Safe from any thread; on a
+        bounded queue, backpressure applies (reject raises
+        :class:`QueueFullError`, block waits up to ``timeout``)."""
+        return self._enqueue(name, inputs, None, timeout)
 
     def pending(self) -> dict[str, int]:
-        return {n: len(q) for n, q in self._queues.items() if q}
+        return self._sched.pending()
 
     def discard_pending(self, name: str) -> int:
         """Drop a model's queued requests (returns how many). The escape
         hatch for a poisoned queue: a permanently-bad request is coalesced
         with every later submit to its model, so retries would fail
-        forever until the queue is cleared."""
-        q = self._queues.get(name)
-        n = len(q) if q else 0
-        if q:
-            q.clear()
-        return n
+        forever until the queue is cleared. Dropped futures are cancelled
+        (or failed, if already running)."""
+        dropped = self._sched.discard(name)
+        err = RuntimeError(f"request discarded from {name!r}'s queue")
+        for r in dropped:
+            if r.future is not None and not r.future.done():
+                if not r.future.cancel():
+                    r.future.set_exception(err)
+        return len(dropped)
 
-    def drain(self, *, backend: str | None = None) -> dict:
-        """Serve every queued request: per model, coalesce the queue and cut
-        it into bucket-aligned micro-batches; dispatch round-robin (one
-        chunk per model with remaining work per turn). Returns
-        ``{name: [np.ndarray per request, in submit order]}``.
+    # -- dispatch -----------------------------------------------------------
 
-        Failures are isolated per model: a model whose dispatch raises keeps
-        its queue (retryable) and ALL its counters untouched (they only
-        commit when the model's queue fully serves — a retry never
-        double-counts partially-run chunks), while every other model drains
-        normally and returns its results. The per-model exceptions land in
-        ``last_drain_errors``; drain raises only if NO model succeeded. A
-        request that is itself bad will fail every retry (it coalesces with
-        whatever else queues up) — clear it with ``discard_pending``."""
+    def _begin_group(self, name: str, reqs: list, backend: str | None) -> dict:
+        """Phase 1 of serving one pulled slice: coalesce → bucket_chunks
+        micro-batches → plan calls. JAX dispatch is asynchronous, so this
+        returns as soon as every chunk is ENQUEUED on the device — the
+        caller begins every group in the round before finishing any, which
+        keeps the device pipeline full across models (blocking on model A's
+        results before dispatching model B serialized the round and cost
+        ~2x aggregate throughput). Returns a group record; a dispatch
+        failure rides in its ``"error"`` key."""
         from repro.engine import bucket_chunks
 
-        work = []
-        self.last_drain_errors = {}
-        for name, q in self._queues.items():
-            if not q:
-                continue
-            try:
-                cat, sizes, total = _coalesce(list(q))
-                plan = self.registry.get(name)
-                chunks = bucket_chunks(total, plan.buckets, self.max_batch)
-            except Exception as e:
-                self.last_drain_errors[name] = e
-                continue
-            work.append({"name": name, "plan": plan, "cat": cat,
-                         "sizes": sizes, "total": total,
-                         "chunks": deque(chunks), "start": 0, "outs": [],
-                         "batches": 0})
-
-        results: dict = {}
-        while work:
-            next_round = []
-            for w in work:                       # fair: one chunk per model
-                size = w["chunks"].popleft()
-                if w["start"] == 0 and size == w["total"]:
-                    sl = w["cat"]                # whole queue in one chunk
-                else:
-                    sl = [c[w["start"] : w["start"] + size] for c in w["cat"]]
-                try:
-                    w["outs"].append(w["plan"](*sl, backend=backend))
-                except Exception as e:           # isolate: queue + stats kept
-                    self.last_drain_errors[w["name"]] = e
-                    continue
-                self.schedule_log.append(w["name"])
+        t0 = time.perf_counter()
+        # queue-wait ends HERE, not at pull time: a round's groups dispatch
+        # sequentially, so later (lower-priority) groups keep waiting while
+        # earlier ones run — the stamp must capture that ordering effect
+        for r in reqs:
+            r.t_dispatch = t0
+        g: dict = {"name": name, "reqs": reqs, "t0": t0}
+        try:
+            plan = self.registry.get(name)
+            cat, sizes, total = _coalesce([r.inputs for r in reqs])
+            chunks = bucket_chunks(total, plan.buckets, self.max_batch)
+            outs, start = [], 0
+            for size in chunks:
+                sl = (cat if start == 0 and size == total
+                      else [c[start : start + size] for c in cat])
+                outs.append(plan(*sl, backend=backend))
+                self.schedule_log.append(name)
                 self.batches_dispatched += 1
-                w["start"] += size
-                w["batches"] += 1
-                if w["chunks"]:
-                    next_round.append(w)
-                else:                            # model fully served: commit
-                    out = (jnp.concatenate(w["outs"], axis=0)
-                           if len(w["outs"]) > 1 else w["outs"][0])
-                    results[w["name"]] = _split(out, w["sizes"])
-                    c = self._counters[w["name"]]
-                    c["requests_served"] += len(w["sizes"])
-                    c["batches_run"] += w["batches"]
-                    c["flows_served"] += w["total"]
-                    self._queues[w["name"]].clear()
-            work = next_round
+                start += size
+        except Exception as e:
+            g["error"] = e
+            return g
+        g.update(outs=outs, sizes=sizes, total=total, batches=len(chunks),
+                 t_begun=time.perf_counter())
+        return g
+
+    def _finish_group(self, g: dict, *, requeue_on_error: bool):
+        """Phase 2: block on the group's device results, split per request,
+        commit counters, record latency, resolve futures. On failure either
+        requeues the slice at the front (sync drain: retryable, counters
+        untouched) or fails its futures (async loop). Returns the per-
+        request np outputs, or None on failure."""
+        name, reqs = g["name"], g["reqs"]
+        err = g.get("error")
+        if err is None:
+            t_finish = time.perf_counter()
+            try:
+                out = (jnp.concatenate(g["outs"], axis=0)
+                       if len(g["outs"]) > 1 else g["outs"][0])
+                split = _split(out, g["sizes"])  # np conversion: sync point
+            except Exception as e:
+                err = e
+        if err is not None:
+            self.last_drain_errors[name] = err
+            if requeue_on_error:
+                self._sched.requeue_front(name, reqs)
+            else:
+                for r in reqs:
+                    _resolve_future(r.future, error=err)
+            return None
+        # service = this group's own dispatch phase + its own blocking
+        # finish — NOT wall time since begin, which would fold every
+        # earlier group's host conversion into later (lower-priority)
+        # groups' service percentiles. Still approximate under concurrent
+        # device work, but free of that systematic ordering bias.
+        service_ms = ((g["t_begun"] - g["t0"])
+                      + (time.perf_counter() - t_finish)) * 1e3
+        self._sched.record_service(name, reqs, service_ms)
+        with self._ctr_lock:
+            # .get: the model may have been remove_model'd while this slice
+            # was in flight — its results still resolve, only the counters
+            # have nowhere to go (a KeyError here would strand the futures)
+            c = self._counters.get(name)
+            if c is not None:
+                c["requests_served"] += len(reqs)
+                c["batches_run"] += g["batches"]
+                c["flows_served"] += g["total"]
+        for r, o in zip(reqs, split):
+            _resolve_future(r.future, result=o)
+        return split
+
+    def drain(self, *, backend: str | None = None) -> dict:
+        """Serve every queued request: the WFQ scheduler releases per-model
+        slices (deficit round-robin: ``quantum x weight`` flows of credit
+        per round, descending-weight dispatch order), each slice coalesces
+        and cuts into bucket-aligned micro-batches. Returns
+        ``{name: [np.ndarray per request, in submit order]}``.
+
+        Failures are isolated per model: a slice whose dispatch raises is
+        requeued at the front (retryable) with ALL its counters untouched
+        (they only commit when a slice fully serves — a retry never
+        double-counts partially-run chunks), the model is excluded for the
+        rest of this drain, and every other model drains normally. The
+        per-model exceptions land in ``last_drain_errors``; drain raises
+        only if NO model succeeded. A request that is itself bad will fail
+        every retry (it coalesces with whatever else queues up) — clear it
+        with ``discard_pending``."""
+        self.last_drain_errors = {}
+        results: dict = {}
+        failed: set = set()
+        quantum = self._quantum()
+        while True:
+            groups = self._sched.pull_round(quantum, exclude=failed)
+            if not groups:
+                break
+            # two phases: dispatch EVERY group, then block on each — the
+            # device works across models while the host splits/converts
+            begun = [self._begin_group(name, reqs, backend)
+                     for name, reqs in groups]
+            for g in begun:
+                outs = self._finish_group(g, requeue_on_error=True)
+                if outs is None:
+                    failed.add(g["name"])  # skip for the rest of this drain
+                else:
+                    results.setdefault(g["name"], []).extend(outs)
         if self.last_drain_errors and not results:
             raise next(iter(self.last_drain_errors.values()))
         return results
@@ -378,38 +561,214 @@ class MultiModelServer:
     def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
         """Mixed-model convenience: ``requests`` is ``[(name, inputs), ...]``
         (inputs a single array or a tuple); returns outputs aligned to the
-        request order. If any requested model failed to drain, its actual
-        error is raised with the already-served models' outputs attached as
-        ``partial_results`` on the exception (their work is computed and
-        counted — only the failed models' requests need resubmitting)."""
+        request order. If any requested model failed to drain, a
+        :class:`PartialDrainError` is raised carrying the already-served
+        models' outputs (``partial_results`` — that work is computed and
+        counted; only the failed models' requests need resubmitting), the
+        per-model errors (``failed``), and the first underlying exception
+        as ``__cause__``."""
         order = []
         for name, inputs in requests:
             inputs = tuple(inputs) if isinstance(inputs, (tuple, list)) else (inputs,)
             order.append((name, self.submit(name, *inputs)))
         by_model = self.drain(backend=backend)
-        for name, _ in order:
-            if name not in by_model and name in self.last_drain_errors:
-                err = self.last_drain_errors[name]
-                err.partial_results = by_model
-                raise err
+        # a name in last_drain_errors did NOT fully serve — including a
+        # model whose earlier slice landed in by_model before a later slice
+        # failed (drain excludes it from then on), so membership in
+        # by_model alone must not count as success
+        failed = {name: self.last_drain_errors[name]
+                  for name in dict.fromkeys(n for n, _ in order)
+                  if name in self.last_drain_errors}
+        if failed:
+            raise PartialDrainError(failed, by_model) \
+                from next(iter(failed.values()))
         return [by_model[name][pos] for name, pos in order]
 
     def stats(self) -> dict:
         """Per-model serving counters merged with the registry's per-plan
-        compile-cache stats, plus the memo cache_info."""
+        compile-cache stats and the scheduler's latency percentiles, plus
+        the memo cache_info and the scheduling config."""
         reg = self.registry.stats()
+        lat = self._sched.latency_stats()
         zeros = {"requests_served": 0, "batches_run": 0, "flows_served": 0}
         return {
             "models": {
                 # zeroed defaults keep the schema uniform for names on a
                 # shared registry that this server hasn't served yet
                 name: {**zeros, **self._counters.get(name, {}),
-                       **reg.get(name, {})}
+                       **reg.get(name, {}),
+                       **({"latency": lat[name]} if name in lat else {})}
                 for name in self.models()
             },
             "cache": self.registry.cache_info(),
             "batches_dispatched": self.batches_dispatched,
+            "scheduler": self._sched.describe(),
         }
+
+    def reset_latency_stats(self) -> None:
+        """Drop the latency reservoirs (benchmarks reset after warmup)."""
+        self._sched.reset_latency()
+
+
+class AsyncMultiModelServer(MultiModelServer):
+    """The always-on :class:`MultiModelServer`: a background drain thread
+    plus future-returning ``submit()``.
+
+    ``submit(name, *inputs)`` is safe from any thread and returns a
+    :class:`concurrent.futures.Future` resolving to the request's np output
+    (or raising the dispatch error — async requests are NOT requeued on
+    failure; the future carries the exception and the caller decides).
+    Queues are bounded (``queue_depth``, default 1024 requests/model) with
+    ``policy`` backpressure: ``"block"`` parks the submitter until the
+    drain loop frees space (bounding producer speed to consumer speed),
+    ``"reject"`` raises :class:`QueueFullError` immediately (shed load at
+    ingestion, dataplane-style).
+
+    The drain loop pulls one WFQ round at a time (so ``stop()`` stays
+    responsive and priorities re-evaluate between rounds) and funnels every
+    compiled-plan call through its single thread; ingestion touches the
+    scheduler lock plus one ``device_put`` per input (inputs are staged to
+    the device at submit time, on the producer's thread). Use as a context manager, or ``start()``/``stop()``:
+
+        with AsyncMultiModelServer({"ids": banks}, queue_depth=256) as srv:
+            futs = [srv.submit("ids", x) for x in bursts]
+            outs = [f.result() for f in futs]
+
+    ``stop(drain=True)`` (the default, and what ``__exit__`` calls) first
+    waits for the queues to empty, then joins the loop — pending futures
+    all resolve before stop returns.
+    """
+
+    def __init__(self, models: dict | None = None, *,
+                 queue_depth: int | None = 1024, policy: str = "block",
+                 idle_wait: float = 0.05, **kw):
+        super().__init__(models, queue_depth=queue_depth, policy=policy, **kw)
+        self._idle_wait = idle_wait
+        self._stop_flag = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.loop_errors: deque = deque(maxlen=64)   # unexpected loop crashes
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "AsyncMultiModelServer":
+        """Spawn the background drain loop (idempotent)."""
+        if self._thread is None or not self._thread.is_alive():
+            self._stop_flag.clear()
+            self._thread = threading.Thread(
+                target=self._serve_loop, name="pegasus-drain", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True, timeout: float | None = None) -> None:
+        """Stop the loop. ``drain=True`` first waits for every queue to
+        empty (in-flight futures resolve before return)."""
+        if self._thread is None:
+            return
+        deadline = None if timeout is None else time.monotonic() + timeout
+        if drain:
+            while self.pending() and self._thread.is_alive():
+                if deadline is not None and time.monotonic() > deadline:
+                    break
+                time.sleep(0.002)
+        self._stop_flag.set()
+        self._sched.kick()
+        self._thread.join(None if deadline is None
+                          else max(0.0, deadline - time.monotonic()))
+        # forget the thread only once it actually exited: after a timed-out
+        # join the loop is still live, and untracking it would let start()
+        # clear the stop flag and spawn a SECOND concurrent dispatcher
+        if not self._thread.is_alive():
+            self._thread = None
+            if drain and self.pending():
+                # a submit raced the stop flag (landed after the pending()
+                # check, unseen by the exiting loop): honor the drain
+                # contract by serving the stragglers inline, and fail any
+                # future a failing slice would otherwise strand
+                try:
+                    self.drain()
+                except Exception:
+                    pass                        # recorded per model below
+                for name in list(self.pending()):
+                    err = self.last_drain_errors.get(name) or RuntimeError(
+                        f"server stopped with {name!r} requests pending")
+                    for r in self._sched.discard(name):
+                        _resolve_future(r.future, error=err)
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def __enter__(self) -> "AsyncMultiModelServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()
+
+    # -- ingestion ----------------------------------------------------------
+
+    def submit(self, name: str, *inputs,
+               timeout: float | None = None) -> Future:
+        """Thread-safe enqueue; returns a Future of the request's output.
+        Backpressure per the model queue's policy (see class docstring)."""
+        fut: Future = Future()
+        self._enqueue(name, inputs, fut, timeout)
+        return fut
+
+    def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
+        """Mixed-request convenience over futures: submits everything, waits
+        for the results in order. Unlike the sync server there is no
+        partial-result exception — each future fails independently, so this
+        raises the FIRST failed request's error once all are settled."""
+        if backend is not None:
+            raise ValueError(
+                "AsyncMultiModelServer.serve dispatches via the background "
+                "loop; per-call backend overrides are a sync-drain feature "
+                "(register the model with the backend you want instead)")
+        if not self.running:
+            raise RuntimeError(
+                "the background drain loop is not running — start() the "
+                "server (or use it as a context manager) before serve(), "
+                "otherwise the submitted futures would never resolve")
+        futs = []
+        for name, inputs in requests:
+            inputs = tuple(inputs) if isinstance(inputs, (tuple, list)) else (inputs,)
+            futs.append(self.submit(name, *inputs))
+        # settle EVERYTHING before raising (the documented contract): an
+        # early failure must not leave later requests in flight while the
+        # caller proceeds to resubmit/stop/inspect
+        concurrent.futures.wait(futs)
+        return [f.result() for f in futs]
+
+    # -- the background loop ------------------------------------------------
+
+    def _serve_loop(self) -> None:
+        while not self._stop_flag.is_set():
+            try:
+                # re-read per round: server.quantum is documented as a live
+                # tunable, so the loop must not cache it at thread start
+                groups = self._sched.pull_round(self._quantum())
+                if not groups:
+                    self._sched.wait_for_work(self._idle_wait)
+                    continue
+                # two-phase like drain(): enqueue every model's chunks on
+                # the device before blocking on any result. Async failures
+                # land on the futures, never requeue — a poisoned request
+                # must not wedge the loop forever.
+                begun = [self._begin_group(name, reqs, None)
+                         for name, reqs in groups]
+                for g in begun:
+                    try:
+                        self._finish_group(g, requeue_on_error=False)
+                    except Exception as e:       # unexpected: _finish_group
+                        # already routes dispatch errors onto futures, so
+                        # anything escaping it would otherwise strand this
+                        # group's futures AND skip every later group's
+                        self.loop_errors.append(e)
+                        for r in g["reqs"]:
+                            _resolve_future(r.future, error=e)
+            except Exception as e:               # pragma: no cover - safety
+                self.loop_errors.append(e)
+                time.sleep(self._idle_wait)
 
 
 def _pegasus_demo(args) -> None:

@@ -13,7 +13,7 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 from benchmarks.compare import compare, trajectory_table
 
 
-def _doc(per_call, batch=1024, families=None, multi=None):
+def _doc(per_call, batch=1024, families=None, multi=None, async_serve=None):
     return {
         "engine": {
             "batch": batch,
@@ -21,6 +21,17 @@ def _doc(per_call, batch=1024, families=None, multi=None):
         },
         "families": families or {},
         **({"multi_plan": multi} if multi else {}),
+        **({"async_serve": async_serve} if async_serve else {}),
+    }
+
+
+def _async(ratio=1.0, hi=5.0, lo=20.0, flows_s=50000.0):
+    return {
+        "vs_sync": ratio,
+        "async_flows_s": flows_s,
+        "sync_flows_s": flows_s / ratio if ratio else flows_s,
+        "wfq": {"high": "mlp", "low": "ae", "skew": 4.0,
+                "high_p50_wait_ms": hi, "low_p50_wait_ms": lo},
     }
 
 
@@ -177,6 +188,68 @@ def test_multi_plan_absent_or_batch_mismatch_skips_gate():
     lines, regressions = compare(base, fresh, 0.25)
     assert regressions == []
     assert any("batch changed" in l for l in lines)
+
+
+def test_async_serve_invariants_pass():
+    base = _doc(BASE, async_serve=_async())
+    fresh = _doc(BASE, async_serve=_async(ratio=0.95, hi=4.0, lo=18.0))
+    lines, regressions = compare(base, fresh, 0.25)
+    assert regressions == []
+    assert any("vs_sync" in l and "OK" in l for l in lines)
+    assert any("wfq p50 wait" in l and "OK" in l for l in lines)
+
+
+def test_async_serve_ratio_floor_gated():
+    """The async path must not tax throughput: a paired ratio below the
+    floor fails the FRESH run regardless of the baseline."""
+    fresh = _doc(BASE, async_serve=_async(ratio=0.6))
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert len(regressions) == 1
+    assert "ratio 0.60" in regressions[0]
+
+
+def test_async_serve_wfq_ordering_gated():
+    """High-priority p50 queue-wait ≥ low-priority = WFQ broken — a
+    host-independent invariant, gated on every run."""
+    fresh = _doc(BASE, async_serve=_async(hi=21.0, lo=20.0))
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert len(regressions) == 1
+    assert "WFQ ordering broken" in regressions[0]
+
+
+def test_async_serve_cross_run_collapse_gated():
+    base = _doc(BASE, async_serve=_async(flows_s=50000.0))
+    dead = _doc(BASE, async_serve=_async(flows_s=20000.0))   # 2.5x collapse
+    _, regressions = compare(base, dead, 0.25)
+    assert len(regressions) == 1 and "collapse limit" in regressions[0]
+    ok = _doc(BASE, async_serve=_async(flows_s=30000.0))     # 1.67x: noise
+    _, regressions = compare(base, ok, 0.25)
+    assert regressions == []
+
+
+def test_async_serve_zero_or_missing_flows_is_visible():
+    """A measured 0 flows/s is a total collapse (regression); a dropped key
+    is a loud info line — never a silent green (same rule as multi_plan)."""
+    base = _doc(BASE, async_serve=_async())
+    dead = _doc(BASE, async_serve=_async(flows_s=0.0))
+    _, regressions = compare(base, dead, 0.25)
+    assert any("collapsed to 0" in r for r in regressions)
+    dropped = _doc(BASE, async_serve={k: v for k, v in _async().items()
+                                      if k != "async_flows_s"})
+    lines, regressions = compare(base, dropped, 0.25)
+    assert regressions == []
+    assert any("flows_s missing" in l and "NOT applied" in l for l in lines)
+
+
+def test_async_serve_missing_section_is_visible_not_silent():
+    base = _doc(BASE, async_serve=_async())
+    lines, regressions = compare(base, _doc(BASE), 0.25)
+    assert regressions == []
+    assert any("async_serve section missing" in l for l in lines)
+    # added since baseline: invariants still gate, collapse skipped
+    lines, regressions = compare(_doc(BASE), base, 0.25)
+    assert regressions == []
+    assert any("async_serve added since baseline" in l for l in lines)
 
 
 def test_trajectory_table(tmp_path):

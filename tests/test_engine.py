@@ -534,6 +534,96 @@ def test_plan_registry_named_entries():
         reg.get("mlp-a")
 
 
+def test_plan_registry_reregister_discards_replaced_memo():
+    """Satellite: register() over an existing name must discard the replaced
+    model's memo entry, exactly like evict() — otherwise the superseded
+    plan lingered in the bounded memo until LRU churn or GC."""
+    from repro.engine import PlanRegistry
+
+    reg = PlanRegistry()
+    a, b = _fresh_banks(51), _fresh_banks(52)
+    plan_a = reg.register("m", a)
+    assert len(reg) == 1
+    plan_b = reg.register("m", b)               # replaces a
+    assert plan_b is not plan_a
+    assert reg.model("m") is b
+    assert len(reg) == 1                        # a's memo entry discarded
+    # b's memo entry intact (same build options as register's)
+    assert reg.plan_for(b, backend="onehot") is plan_b
+    # re-registering the SAME model must not discard its own entry
+    assert reg.register("m", b) is plan_b
+    assert len(reg) == 1
+
+
+def test_plan_registry_reregister_same_banks_keeps_memo():
+    """Re-registering a DIFFERENT wrapper over the SAME bank objects must
+    not discard the (shared, bank-identity-keyed) memo entry the new model
+    just produced — that discard would force a duplicate compile on the
+    next plan_for."""
+    from repro.engine import PlanRegistry
+
+    reg = PlanRegistry()
+    banks = _fresh_banks(55)
+    a, b = list(banks), list(banks)            # distinct wrappers, same banks
+    plan = reg.register("m", a)
+    assert len(reg) == 1
+    plan2 = reg.register("m", b)               # same key (element identity)
+    assert plan2 is plan                       # memo hit, not a rebuild
+    assert len(reg) == 1                       # and the entry survived
+
+
+def test_plan_registry_recompile_refreshes_named_stats():
+    """Satellite: the get() recompile-on-stale path must refresh the named
+    entry's build stats (plan_build_ms re-timed, recompiles counted) —
+    the old path left register()-time numbers on a replaced plan."""
+    import dataclasses as dc
+
+    from repro.engine import PlanRegistry
+
+    reg = PlanRegistry()
+    model = list(_fresh_banks(53))
+    reg.register("m", model)
+    st0 = reg.stats()["m"]
+    assert st0["recompiles"] == 0
+    p1 = reg.get("m")
+    assert reg.stats()["m"]["recompiles"] == 0  # fresh get: no rebuild
+    model[-1] = dc.replace(model[-1])           # refine()-style bank swap
+    p2 = reg.get("m")
+    assert p2 is not p1                         # stale → recompiled
+    st1 = reg.stats()["m"]
+    assert st1["recompiles"] == 1
+    assert st1["plan_build_ms"] != st0["plan_build_ms"]   # re-timed
+    assert reg.get("m") is p2                   # fresh again: stable
+
+
+def test_plan_registry_concurrent_first_call_builds_once():
+    """Tentpole thread-safety: N threads racing plan_for on one uncached
+    model must serialize on the registry lock — exactly ONE build, every
+    caller handed the same plan."""
+    import threading
+
+    from repro.engine import PlanRegistry
+
+    reg = PlanRegistry()
+    banks = _fresh_banks(54)
+    before = STATS.plan_builds
+    n = 4
+    plans = [None] * n
+    barrier = threading.Barrier(n)
+
+    def first_call(i):
+        barrier.wait()
+        plans[i] = reg.plan_for(banks)
+
+    threads = [threading.Thread(target=first_call, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert STATS.plan_builds == before + 1      # no double-compile
+    assert all(p is plans[0] for p in plans)
+
+
 def _multi_server(ds):
     """One server holding 3 mixed-family plans (mlp, ae fast; rnn cached)."""
     from repro.launch.serve import MultiModelServer
@@ -824,6 +914,60 @@ def test_ops_layout_memo_pads_static_operands_once():
     builds_q8 = LAYOUT_STATS["layout_builds"]
     fuzzy_lut_matmul_q8(layer, x, block_t=8, block_n=8, block_k=4)
     assert LAYOUT_STATS["layout_builds"] == builds_q8
+
+
+@pytest.mark.slow
+def test_fuse_nmax_cap_splits_ballooning_groups():
+    """Satellite: one wide bank must not balloon a narrow stack's padded
+    [L, Kmax, C, Nmax] footprint — the run splits at the cap (the wide bank
+    stands alone), narrow neighbors still fuse, and outputs stay identical
+    to the unfused path."""
+    layers = _chain_banks(45, dims=(8, 8, 64, 8, 5))    # N = (8, 64, 8, 5)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(16, 8)), jnp.float32)
+    wide = build_plan(layers)                   # default cap: all 4 banks fuse
+    assert (wide.fused_groups, wide.fused_banks) == (1, 4)
+    capped = build_plan(layers, fuse_nmax_cap=16)
+    # b0 alone (joining N=64 would balloon it), b1 (N=64) alone, b2+b3 fuse
+    assert (capped.fused_groups, capped.fused_banks) == (1, 2)
+    unfused = build_plan(layers, fuse=False)
+    for be in BACKENDS:
+        np.testing.assert_allclose(
+            np.asarray(capped(x, backend=be)),
+            np.asarray(unfused(x, backend=be)), rtol=1e-4, atol=1e-4,
+            err_msg=f"nmax-capped plan parity broke on {be}")
+        np.testing.assert_allclose(
+            np.asarray(wide(x, backend=be)),
+            np.asarray(unfused(x, backend=be)), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_fuse_nmax_cap_allows_uniformly_wide_runs():
+    """Equal-width banks above the cap add no padding — they still fuse."""
+    layers = _chain_banks(46, dims=(64, 64, 64))        # N = (64, 64)
+    plan = build_plan(layers, fuse_nmax_cap=16)
+    assert (plan.fused_groups, plan.fused_banks) == (1, 2)
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(8, 64)), jnp.float32)
+    unfused = build_plan(layers, fuse=False)
+    for be in ("gather", "kernel"):
+        np.testing.assert_allclose(
+            np.asarray(plan(x, backend=be)),
+            np.asarray(unfused(x, backend=be)), rtol=1e-4, atol=1e-4)
+
+
+def test_fuse_nmax_cap_participates_in_plan_key(ds):
+    from repro.engine import DEFAULT_FUSE_NMAX_CAP
+
+    banks, _, _ = _family(ds, "mlp")
+    p_default = plan_for(banks)                 # N=(32,32,32,3): one group of 4
+    p_capped = plan_for(banks, fuse_nmax_cap=1)
+    assert p_default is not p_capped
+    # cap 1 splits the narrow classifier off; the equal-width hidden run
+    # stays fused (uniform width adds no padding)
+    assert (p_default.fused_groups, p_default.fused_banks) == (1, 4)
+    assert (p_capped.fused_groups, p_capped.fused_banks) == (1, 3)
+    # the default cap is normalized into the key: explicit == implicit
+    assert plan_for(banks, fuse_nmax_cap=DEFAULT_FUSE_NMAX_CAP) is p_default
+    assert plan_for(banks, fuse_nmax_cap=None) is not p_default
 
 
 def test_multi_model_drain_isolates_failing_model(ds):

@@ -1,0 +1,470 @@
+"""Async serving runtime tests (ISSUE 5): WFQ scheduler invariants
+(deficit round-robin flow shares, priority ordering, progress), bounded-
+queue backpressure (reject vs block), thread-safe ingestion under
+concurrent submit/add_model/drain, the future-returning async server, and
+the PartialDrainError regression (no mutation of slotted exceptions).
+
+Everything here runs tiny gather-backend plans — fast-lane material.
+"""
+
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.amm import init_pegasus_linear
+from repro.launch.scheduler import (
+    PRIORITY_WEIGHTS, QueueFullError, WFQScheduler,
+)
+from repro.launch.serve import (
+    AsyncMultiModelServer, MultiModelServer, PartialDrainError,
+)
+
+
+def _banks(seed: int = 0, n_out: int = 5) -> list:
+    rng = np.random.default_rng(seed)
+    return [init_pegasus_linear(
+        rng.normal(size=(8, n_out)).astype(np.float32), None,
+        rng.normal(size=(64, 8)).astype(np.float32), group_size=2, depth=3,
+        lut_bits=None)]
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)),
+                       jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# WFQScheduler unit tests: pure queue/credit mechanics, no plans involved
+# ---------------------------------------------------------------------------
+
+
+def test_drr_flow_share_matches_weights():
+    """Under sustained backlog, served flows converge to the weight ratio —
+    the WFQ acceptance invariant, measured over a long pull log."""
+    s = WFQScheduler()
+    s.add_queue("hi", weight=4.0)
+    s.add_queue("lo", weight=1.0)
+    for _ in range(400):
+        s.submit("hi", (), 32)
+        s.submit("lo", (), 32)
+    served = {"hi": 0, "lo": 0}
+    while s.pending().get("hi") and s.pending().get("lo"):  # both backlogged
+        for name, reqs in s.pull_round(64):
+            served[name] += sum(r.size for r in reqs)
+    ratio = served["hi"] / max(served["lo"], 1)
+    assert 3.0 <= ratio <= 5.0, served          # 4:1 within tolerance
+
+
+def test_drr_high_weight_dispatches_first_each_round():
+    s = WFQScheduler()
+    s.add_queue("lo", weight=1.0)               # inserted FIRST
+    s.add_queue("hi", weight=4.0)
+    s.submit("lo", (), 8)
+    s.submit("hi", (), 8)
+    order = [name for name, _ in s.pull_round(8)]
+    assert order == ["hi", "lo"]                # descending weight wins
+
+
+def test_drr_equal_weights_degenerate_to_round_robin():
+    """With uniform weights and quantum = one micro-batch, each round
+    releases one request per model in insertion order (the PR-3 behavior
+    the fair-scheduling test pins at the server level)."""
+    s = WFQScheduler()
+    for name in ("a", "b", "c"):
+        s.add_queue(name)
+        for _ in range(2):
+            s.submit(name, (), 8)
+    log = []
+    while s.pending():
+        log += [name for name, _ in s.pull_round(8)]
+    assert log == ["a", "b", "c", "a", "b", "c"]
+
+
+def test_drr_oversize_request_eventually_dispatches():
+    """A request bigger than one quantum must not stall: credit accumulates
+    across internal catch-up rounds until the head fits."""
+    s = WFQScheduler()
+    s.add_queue("a", weight=1.0)
+    s.submit("a", (), 1000)                     # >> quantum
+    out = s.pull_round(64)
+    assert len(out) == 1
+    assert out[0][0] == "a" and out[0][1][0].size == 1000
+    assert not s.pending()
+
+
+def test_drr_idle_queue_forfeits_credit():
+    """Classic DRR: an emptied queue resets its deficit — idle models never
+    bank bandwidth to burst past their weight later."""
+    s = WFQScheduler()
+    s.add_queue("a")
+    s.submit("a", (), 4)
+    s.pull_round(64)                            # served; queue now empty
+    assert s._deficit["a"] == 0.0
+
+
+def test_priority_classes_map_to_weights():
+    s = WFQScheduler()
+    assert s.add_queue("h", priority="high").weight == PRIORITY_WEIGHTS["high"]
+    assert s.add_queue("n").weight == PRIORITY_WEIGHTS["normal"]
+    assert s.add_queue("l", priority="low").weight == PRIORITY_WEIGHTS["low"]
+    assert s.add_queue("w", weight=2.5).weight == 2.5
+    with pytest.raises(ValueError, match="unknown priority"):
+        s.add_queue("bad", priority="urgent")
+    assert s.set_weight("l", priority="high") == PRIORITY_WEIGHTS["high"]
+    # set_weight validates too — no bare calls, no unknown classes
+    with pytest.raises(ValueError, match="unknown priority"):
+        s.set_weight("l", priority="urgent")
+    with pytest.raises(ValueError, match="weight= or priority="):
+        s.set_weight("l")
+    # re-adding an existing queue with an EXPLICIT class re-weights it;
+    # without one, the existing weight is kept
+    assert s.add_queue("n", priority="high").weight == PRIORITY_WEIGHTS["high"]
+    assert s.add_queue("n").weight == PRIORITY_WEIGHTS["high"]
+    # depth/policy of a live queue change only via configure
+    s.add_queue("b", depth=4, policy="reject")
+    s.configure("b", depth=1, policy="block")
+    q = s.add_queue("b")
+    assert (q.depth, q.policy) == (1, "block")
+
+
+def test_reregister_model_updates_priority(x):
+    """add_model over an existing name must honor the new scheduling class
+    (the queue already exists — its weight must not silently stay stale)."""
+    server = MultiModelServer({"m": _banks()}, backend="gather")
+    assert server.stats()["scheduler"]["m"]["weight"] == 1.0
+    server.add_model("m", _banks(9), priority="high", queue_depth=7)
+    st = server.stats()["scheduler"]["m"]
+    assert st["weight"] == PRIORITY_WEIGHTS["high"]
+    assert st["depth"] == 7
+
+
+def test_backpressure_reject_policy():
+    s = WFQScheduler()
+    s.add_queue("a", depth=2, policy="reject")
+    s.submit("a", (), 1)
+    s.submit("a", (), 1)
+    with pytest.raises(QueueFullError, match="policy=reject"):
+        s.submit("a", (), 1)
+    s.pull_round(8)                             # frees the queue
+    s.submit("a", (), 1)                        # accepted again
+
+
+def test_backpressure_block_times_out_then_releases():
+    s = WFQScheduler()
+    s.add_queue("a", depth=1, policy="block")
+    s.submit("a", (), 1)
+    t0 = time.perf_counter()
+    with pytest.raises(QueueFullError, match="after blocking"):
+        s.submit("a", (), 1, timeout=0.05)
+    assert time.perf_counter() - t0 >= 0.04     # actually blocked
+    # a dispatcher pulling frees space → the parked submitter completes
+    done = []
+
+    def parked():
+        s.submit("a", (), 1, timeout=5.0)
+        done.append(1)
+
+    t = threading.Thread(target=parked)
+    t.start()
+    time.sleep(0.02)
+    assert s.pull_round(8)
+    t.join(5.0)
+    assert done == [1]
+    assert s.pending() == {"a": 1}
+
+
+def test_backpressure_blocked_submitter_freed_by_unbounding():
+    """configure(depth=None) while a submitter is parked on a full queue
+    must wake it cleanly (the re-check must tolerate the lifted bound)."""
+    s = WFQScheduler()
+    s.add_queue("a", depth=1, policy="block")
+    s.submit("a", (), 1)
+    done = []
+
+    def parked():
+        s.submit("a", (), 1, timeout=5.0)
+        done.append(1)
+
+    t = threading.Thread(target=parked)
+    t.start()
+    time.sleep(0.02)
+    s.configure("a", depth=None)                # lift the bound
+    t.join(5.0)
+    assert done == [1]
+    assert s.pending() == {"a": 2}
+
+
+def test_latency_reservoir_percentiles():
+    s = WFQScheduler()
+    s.add_queue("a")
+    for _ in range(10):
+        s.submit("a", (), 4)
+    for name, reqs in s.pull_round(1000):
+        s.record_service(name, reqs, 7.5)
+    st = s.latency_stats()["a"]
+    assert st["samples"] == 10
+    assert st["service_ms"]["p50"] == 7.5
+    assert st["queue_wait_ms"]["p50"] >= 0.0
+    s.reset_latency()
+    assert s.latency_stats() == {}
+
+
+# ---------------------------------------------------------------------------
+# MultiModelServer: thread-safe ingestion + PartialDrainError
+# ---------------------------------------------------------------------------
+
+
+class _SlottedError(Exception):
+    """Immutable exception (slotted-type stand-in): attribute assignment
+    fails — the old ``err.partial_results = ...`` decoration crashed here."""
+
+    __slots__ = ()
+
+    def __setattr__(self, key, value):
+        raise AttributeError(f"immutable exception: cannot set {key!r}")
+
+
+def test_serve_wraps_failures_in_partial_drain_error(x):
+    banks = _banks()
+    server = MultiModelServer({"good": banks, "bad": banks}, backend="gather")
+    boom = _SlottedError("kernel rejected the batch")
+    real_get = server.registry.get
+    server.registry.get = (
+        lambda name: (_ for _ in ()).throw(boom) if name == "bad"
+        else real_get(name))
+    with pytest.raises(PartialDrainError) as ei:
+        server.serve([("good", x[:4]), ("bad", x[:4])])
+    err = ei.value
+    assert err.partial_results["good"][0].shape[0] == 4   # served work kept
+    assert err.failed["bad"] is boom
+    assert err.__cause__ is boom                # wrapped, chained...
+    assert not hasattr(boom, "partial_results")  # ...and NOT mutated
+    # the good model's work was counted; bad's queue is intact for retry
+    st = server.stats()["models"]
+    assert st["good"]["requests_served"] == 1
+    assert st["bad"]["requests_served"] == 0
+    assert server.pending() == {"bad": 1}
+
+
+def test_serve_partial_slice_failure_still_raises_partial_drain_error(x):
+    """A model whose FIRST slice serves but whose second fails must still
+    surface as failed: its partial output list in by_model must not count
+    as success (the pre-fix path fell through to an IndexError instead of
+    PartialDrainError)."""
+    server = MultiModelServer({"m": _banks()}, backend="gather")
+    server.quantum = 8                          # one 8-flow request per round
+    calls = {"n": 0}
+    real_get = server.registry.get
+
+    def flaky_get(name):
+        calls["n"] += 1
+        if calls["n"] >= 2:                     # slice 1 fine, slice 2 dies
+            raise RuntimeError("device fell over")
+        return real_get(name)
+
+    server.registry.get = flaky_get
+    with pytest.raises(PartialDrainError) as ei:
+        server.serve([("m", x[:8]), ("m", x[8:16])])
+    err = ei.value
+    assert isinstance(err.failed["m"], RuntimeError)
+    assert len(err.partial_results.get("m", [])) == 1   # served prefix kept
+    # the failed slice was requeued for retry
+    assert server.pending() == {"m": 1}
+
+
+def test_concurrent_submit_and_add_model_during_drain(x):
+    """Satellite regression: submits and add_model racing a drain must
+    neither crash (the old ``self._queues.items()`` iteration raised
+    ``RuntimeError: dictionary changed size during iteration``) nor lose
+    requests (the old commit ``clear()``-ed whole queues, wiping anything
+    submitted mid-drain). Deterministic check: every submitted flow comes
+    back exactly once."""
+    server = MultiModelServer({"m0": _banks()}, backend="gather")
+    server.submit("m0", x[:8])
+    server.drain()                              # warm the plan
+    n_threads, n_reqs = 4, 40
+    sizes = [1 + (i % 8) for i in range(n_reqs)]
+    expected = n_threads * sum(sizes)
+    errors: list = []
+
+    def submitter():
+        try:
+            for sz in sizes:
+                server.submit("m0", x[:sz])
+        except Exception as e:                  # pragma: no cover
+            errors.append(e)
+
+    def modeler():
+        try:
+            for i in range(6):
+                server.add_model(f"extra-{i}", _banks(seed=100 + i))
+                time.sleep(0.001)
+        except Exception as e:                  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=submitter) for _ in range(n_threads)]
+    threads.append(threading.Thread(target=modeler))
+    for t in threads:
+        t.start()
+    collected = 0
+    deadline = time.monotonic() + 120
+    while ((any(t.is_alive() for t in threads) or server.pending())
+           and time.monotonic() < deadline):
+        for outs in server.drain().values():
+            collected += sum(o.shape[0] for o in outs)
+    for t in threads:
+        t.join(5.0)
+    assert errors == []
+    assert collected == expected                # nothing lost, nothing doubled
+    assert server.pending() == {}
+    assert server.stats()["models"]["m0"]["flows_served"] == expected + 8
+
+
+def test_sync_server_weighted_drain_order(x):
+    """Server-level WFQ: a 4:1 weight skew yields a ~4:1 micro-batch share
+    in schedule_log while both models stay backlogged."""
+    server = MultiModelServer(backend="gather", max_batch=8)
+    server.add_model("hi", _banks(0), weight=4.0)
+    server.add_model("lo", _banks(7), weight=1.0)
+    for _ in range(20):
+        server.submit("hi", x[:8])
+        server.submit("lo", x[:8])
+    server.drain()
+    log = list(server.schedule_log)
+    # first 5 rounds: hi releases 4 chunks per round to lo's 1
+    head = log[:25]
+    assert head.count("hi") >= 3 * head.count("lo"), head
+    # everything drains in the end regardless of weight
+    assert log.count("hi") == log.count("lo") == 20
+
+
+# ---------------------------------------------------------------------------
+# AsyncMultiModelServer: background loop, futures, backpressure, priorities
+# ---------------------------------------------------------------------------
+
+
+def test_async_futures_match_sync_outputs(x):
+    banks = _banks()
+    sync = MultiModelServer({"m": banks}, backend="gather")
+    ref = np.concatenate([np.asarray(sync.infer("m", x[i : i + 4]))
+                          for i in range(0, 16, 4)])
+    server = AsyncMultiModelServer({"m": banks}, backend="gather")
+    with server:
+        futs = [server.submit("m", x[i : i + 4]) for i in range(0, 16, 4)]
+        outs = [f.result(timeout=60) for f in futs]
+    np.testing.assert_allclose(np.concatenate(outs), ref, rtol=1e-6, atol=1e-6)
+    st = server.stats()["models"]["m"]
+    assert st["requests_served"] == 4
+    assert st["flows_served"] == 16
+    assert st["latency"]["samples"] == 4
+    assert st["latency"]["queue_wait_ms"]["p50"] >= 0.0
+    assert not server.running                   # __exit__ stopped the loop
+
+
+def test_async_failure_lands_on_future_not_queue(x):
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather")
+    with server:
+        bad = server.submit("m", x[:4, :4])     # wrong feature width
+        with pytest.raises(Exception):
+            bad.result(timeout=60)
+        # the loop is still alive and the queue clean: later requests serve
+        good = server.submit("m", x[:4])
+        assert good.result(timeout=60).shape[0] == 4
+    assert server.pending() == {}               # failed request NOT requeued
+    st = server.stats()["models"]["m"]
+    assert st["requests_served"] == 1           # success-only counting
+    assert "m" in server.last_drain_errors
+
+
+def test_async_stop_drains_pending(x):
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather")
+    server.start()
+    futs = [server.submit("m", x[: 1 + (i % 8)]) for i in range(64)]
+    server.stop()                               # drain=True default
+    assert all(f.done() for f in futs)
+    assert sum(f.result().shape[0] for f in futs) == sum(
+        1 + (i % 8) for i in range(64))
+
+
+def test_async_backpressure_reject_before_loop_starts(x):
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather",
+                                   queue_depth=2, policy="reject")
+    f1, f2 = server.submit("m", x[:2]), server.submit("m", x[:2])
+    with pytest.raises(QueueFullError):
+        server.submit("m", x[:2])
+    with server:                                # loop drains the queue
+        assert f1.result(timeout=60).shape[0] == 2
+        assert f2.result(timeout=60).shape[0] == 2
+        f3 = server.submit("m", x[:2])          # space again
+        assert f3.result(timeout=60).shape[0] == 2
+
+
+def test_async_backpressure_block_bounds_producer(x):
+    """policy=block parks the submitting thread until the loop frees space
+    — every request still completes exactly once."""
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather",
+                                   queue_depth=2, policy="block")
+    with server:
+        futs = [server.submit("m", x[:3], timeout=60) for _ in range(12)]
+        outs = [f.result(timeout=60) for f in futs]
+    assert len(outs) == 12 and all(o.shape[0] == 3 for o in outs)
+
+
+def test_async_priority_queue_wait_under_saturation(x):
+    """Acceptance: under a saturated backlog, a 4:1 WFQ weight skew gives
+    the high-priority model a strictly lower p50 queue-wait."""
+    banks = _banks()
+    server = AsyncMultiModelServer(backend="gather", queue_depth=None,
+                                   max_batch=32)
+    server.add_model("hi", banks, weight=4.0)
+    server.add_model("lo", banks, weight=1.0)
+    # saturate BEFORE the loop starts: every request is already queued when
+    # scheduling begins, so waits are set purely by the WFQ dispatch order
+    futs = []
+    for _ in range(40):
+        futs.append(server.submit("hi", x))
+        futs.append(server.submit("lo", x))
+    with server:
+        for f in futs:
+            f.result(timeout=120)
+    lat = {n: server.stats()["models"][n]["latency"]["queue_wait_ms"]
+           for n in ("hi", "lo")}
+    assert lat["hi"]["p50"] < lat["lo"]["p50"], lat
+    # and the flow share matches the skew while both were backlogged
+    log = list(server.schedule_log)
+    head = log[: len(log) // 2]
+    assert head.count("hi") >= 2 * head.count("lo"), head[:20]
+
+
+def test_async_serve_requires_running_loop(x):
+    """serve() without a started loop must raise, not hang on futures that
+    nothing will ever resolve."""
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather")
+    with pytest.raises(RuntimeError, match="not running"):
+        server.serve([("m", x[:4])])
+    with server:
+        assert server.serve([("m", x[:4])])[0].shape[0] == 4
+    with pytest.raises(RuntimeError, match="not running"):   # after stop()
+        server.serve([("m", x[:4])])
+
+
+def test_remove_model_fails_pending_futures(x):
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather")
+    fut = server.submit("m", x[:4])             # loop not started: stays queued
+    assert server.remove_model("m")
+    with pytest.raises(KeyError, match="removed"):
+        fut.result(timeout=5)
+    with pytest.raises(KeyError, match="unknown model"):
+        server.submit("m", x[:4])
+
+
+def test_discard_pending_cancels_futures(x):
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather")
+    fut = server.submit("m", x[:4])
+    assert server.discard_pending("m") == 1
+    assert fut.cancelled()
+    assert server.pending() == {}

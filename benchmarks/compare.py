@@ -24,8 +24,15 @@ scheduling livelock, accidental serialization) cost 5-10x. Per-model
 HOST-INDEPENDENT gates on the fresh run itself — the async/sync paired
 throughput ratio must stay ≥ ``ASYNC_RATIO_FLOOR`` and the WFQ
 high-priority p50 queue-wait must sit below the low-priority one's —
-plus a 2x cross-run collapse gate on absolute async flows/s. Keys
-present in only ONE of {baseline, fresh} — a PR adding or
+plus a 2x cross-run collapse gate on absolute async flows/s. The
+``overload`` sweep (deadline/SLO serving) carries two further
+host-independent fresh-run gates — under 2x overload the high-priority
+class's p99 queue-wait must stay below ``OVERLOAD_WAIT_FACTOR`` x the
+sweep's deadline (slack-based shedding bounds waits), and goodput at 2x
+must hold ≥ ``OVERLOAD_PLATEAU_FLOOR`` x goodput at 1x (the
+goodput-within-deadline curve plateaus past saturation instead of
+collapsing) — plus the same 2x cross-run collapse gate on goodput at 1x
+load. Keys present in only ONE of {baseline, fresh} — a PR adding or
 retiring a backend, family, or served model — are reported as info, never
 failed: gating the symmetric difference would break every PR that grows the
 bench surface. The engine bench always runs at the same batch
@@ -146,6 +153,8 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], l
                                              lines, regressions)
     lines, regressions = _compare_async_serve(baseline, fresh, threshold,
                                               lines, regressions)
+    lines, regressions = _compare_overload(baseline, fresh, threshold,
+                                           lines, regressions)
     return lines, regressions
 
 
@@ -215,6 +224,92 @@ def _compare_async_serve(baseline: dict, fresh: dict, threshold: float,
         lines.append("  [info] async_serve flows_s missing from "
                      f"{'baseline' if not b_agg else 'fresh'} run — "
                      "collapse gate NOT applied")
+    return lines, regressions
+
+
+# Overload-sweep invariants (both host-independent, gated on the fresh run
+# itself): with slack-based shedding on, the high-priority class's p99
+# queue-wait under 2x overload must stay below WAIT_FACTOR x the deadline
+# (a dispatched request clears the slack check with wait ≤ deadline, then
+# re-stamps at group dispatch — the factor absorbs that one-round skid),
+# and goodput at 2x must hold ≥ PLATEAU_FLOOR x goodput at 1x (the curve
+# plateaus at capacity; without shedding every request completes late and
+# goodput collapses toward 0 — the floor is far below any real plateau and
+# far above any real collapse).
+OVERLOAD_WAIT_FACTOR = 2.0
+OVERLOAD_PLATEAU_FLOOR = 0.5
+
+
+def _compare_overload(baseline: dict, fresh: dict, threshold: float,
+                      lines: list[str], regressions: list[str]):
+    """Gate the deadline/SLO overload sweep: fresh-run invariants (bounded
+    high-priority p99 wait at 2x, goodput plateau past saturation) plus a
+    cross-run collapse gate on goodput at 1x load."""
+    bov, fov = baseline.get("overload"), fresh.get("overload")
+    if not fov:
+        if bov:
+            lines.append("  [info] overload section missing from fresh run "
+                         "— deadline/SLO gates NOT applied (did the sweep "
+                         "get dropped?)")
+        return lines, regressions
+    if not bov:
+        lines.append("  [info] overload added since baseline (cross-run "
+                     "collapse gate skipped; invariants gated)")
+    lines.append(
+        f"gate: overload — hi p99 wait < {OVERLOAD_WAIT_FACTOR:.0f}x "
+        f"deadline @ 2x load, goodput(2x) ≥ "
+        f"{OVERLOAD_PLATEAU_FLOOR:.2f}x goodput(1x)")
+    phases = fov.get("phases", {})
+    deadline = fov.get("deadline_ms")
+    p1, p2 = phases.get("1.0"), phases.get("2.0")
+    if not deadline or not p1 or not p2:
+        lines.append("  [info] overload deadline_ms or 1x/2x phases "
+                     "missing — invariant gates NOT applied")
+    else:
+        hi99 = p2.get("hi_p99_wait_ms")
+        bound = OVERLOAD_WAIT_FACTOR * deadline
+        if hi99 is None:
+            lines.append("  [info] overload hi_p99_wait_ms missing from 2x "
+                         "phase — wait gate NOT applied")
+        elif hi99 >= bound:
+            regressions.append(
+                f"overload: high-priority p99 queue-wait {hi99:.1f} ms ≥ "
+                f"{bound:.0f} ms ({OVERLOAD_WAIT_FACTOR:.0f}x the "
+                f"{deadline:.0f} ms deadline) under 2x overload — shedding "
+                "is not bounding waits")
+            lines.append(f"  hi p99 wait @2x {hi99:9.1f} ms "
+                         f"(bound {bound:.0f} ms)  REGRESSION")
+        else:
+            lines.append(f"  hi p99 wait @2x {hi99:9.1f} ms < {bound:.0f} ms "
+                         f"({OVERLOAD_WAIT_FACTOR:.0f}x {deadline:.0f} ms "
+                         "deadline)  OK")
+        g1, g2 = p1.get("goodput_flows_s"), p2.get("goodput_flows_s")
+        if not g1 or g2 is None:
+            lines.append("  [info] overload goodput missing from 1x/2x "
+                         "phase — plateau gate NOT applied")
+        else:
+            ratio = g2 / g1
+            if ratio < OVERLOAD_PLATEAU_FLOOR:
+                regressions.append(
+                    f"overload: goodput collapsed past saturation — "
+                    f"{g1:.0f} flows/s at 1x load → {g2:.0f} at 2x "
+                    f"({ratio:.2f}x < {OVERLOAD_PLATEAU_FLOOR:.2f} plateau "
+                    "floor)")
+                lines.append(f"  goodput 1x {g1:9.0f} → 2x {g2:9.0f} flows/s "
+                             f"({ratio:5.2f}x)  REGRESSION")
+            else:
+                lines.append(f"  goodput 1x {g1:9.0f} → 2x {g2:9.0f} flows/s "
+                             f"({ratio:5.2f}x ≥ {OVERLOAD_PLATEAU_FLOOR:.2f} "
+                             "floor)  OK")
+    b1 = (bov or {}).get("phases", {}).get("1.0", {}).get("goodput_flows_s")
+    f1 = (phases.get("1.0") or {}).get("goodput_flows_s")
+    if b1 and f1 is not None:
+        _collapse_gate("overload", "goodput @1x", b1, f1,
+                       threshold, lines, regressions)
+    elif bov:
+        lines.append("  [info] overload goodput @1x missing from "
+                     f"{'baseline' if not b1 else 'fresh'} run — collapse "
+                     "gate NOT applied")
     return lines, regressions
 
 

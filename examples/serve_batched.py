@@ -13,8 +13,17 @@ weighted fair queueing (deficit round-robin — the 4x-weighted MLP gets 4x
 the flow share and dispatches first each round). The wrap-up prints the
 per-model serving / compile-cache / queue-wait-percentile stats.
 
+With ``--deadline-ms B`` every request carries an end-to-end latency
+budget: requests the scheduler predicts (or observes) missing it are shed
+— async futures fail with ``DeadlineExceededError`` and the client counts
+them instead of crashing; the sync flavor reads the per-model shed tally
+off ``server.last_shed`` after ``drain()``. The wrap-up then also prints
+the per-model SLO counters (admitted/rejected/shed/goodput — see
+docs/SERVING.md for the field reference).
+
 Run:  PYTHONPATH=src python examples/serve_batched.py [--backend kernel]
       add --sync for the synchronous submit+drain flavor
+      add --deadline-ms 150 for the deadline-bearing client
 """
 
 import argparse
@@ -24,7 +33,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.data.synthetic_traffic import make_dataset
-from repro.launch.serve import AsyncMultiModelServer, MultiModelServer
+from repro.launch.serve import (
+    AsyncMultiModelServer, DeadlineExceededError, MultiModelServer,
+)
 from repro.nets.autoencoder import anomaly_features, pegasusify_ae, train_autoencoder
 from repro.nets.mlp import pegasusify_mlp, train_mlp
 from repro.nets.rnn import pegasusify_rnn, train_rnn
@@ -39,6 +50,10 @@ def main():
     ap.add_argument("--sync", action="store_true",
                     help="use the synchronous submit+drain path instead of "
                          "the async background loop")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="attach this latency budget (ms) to every request; "
+                         "requests that cannot make it are shed with "
+                         "DeadlineExceededError instead of served late")
     args = ap.parse_args()
 
     ds = make_dataset("peerrush", flows_per_class=200)   # test split: 90 flows
@@ -73,28 +88,41 @@ def main():
     sizes = (48, 17, 80)
     flows = sum(sizes) * 3
 
+    shed = {"count": 0}           # deadline sheds seen by this client
+
     def submit_burst():
         futs = []
         for s in sizes:
-            futs.append(server.submit("mlp-stats", x_stats[:s]))
-            futs.append(server.submit("rnn-seq", x_seq[:s]))
-            futs.append(server.submit("ae-anomaly", x_feat[:s]))
+            for name, xb in (("mlp-stats", x_stats[:s]),
+                             ("rnn-seq", x_seq[:s]),
+                             ("ae-anomaly", x_feat[:s])):
+                try:
+                    futs.append((name, server.submit(
+                        name, xb, deadline_ms=args.deadline_ms)))
+                except DeadlineExceededError:
+                    # admission control: the backlog already predicts a
+                    # miss, so the submit is refused before queueing
+                    shed["count"] += 1
         return futs
 
     if args.sync:
         def burst():
             submit_burst()
-            return server.drain()
+            out = server.drain()
+            # sync submits carry no future; drain() tallies their sheds
+            shed["count"] += sum(server.last_shed.values())
+            return out
     else:
         server.start()            # background drain loop: always-on serving
 
         def burst():
             futs = submit_burst()           # thread-safe, returns futures
-            outs = [f.result(timeout=600) for f in futs]
-            names = ["mlp-stats", "rnn-seq", "ae-anomaly"] * len(sizes)
             by_model: dict = {}
-            for n, o in zip(names, outs):
-                by_model.setdefault(n, []).append(o)
+            for name, f in futs:
+                try:
+                    by_model.setdefault(name, []).append(f.result(timeout=600))
+                except DeadlineExceededError:
+                    shed["count"] += 1      # served late is worthless: skip
             return by_model
 
     burst()  # warmup: traces one XLA computation per (model, bucket)
@@ -108,6 +136,10 @@ def main():
     mode = "sync drain" if args.sync else "async loop"
     print(f"\nserved {len(sizes) * 3} requests ({flows} flows) per burst in "
           f"{dt * 1e3:.1f} ms via {mode} → {flows / dt:.0f} flows/s aggregate")
+    if args.deadline_ms is not None:
+        print(f"deadline budget {args.deadline_ms:.0f} ms: {shed['count']} "
+              f"request(s) shed across all rounds — handled by the client, "
+              f"served work stayed within budget")
     print(f"schedule (WFQ deficit round-robin, {per_burst} micro-batches/"
           f"burst): {list(server.schedule_log)[-per_burst:]}")
     for name, outs in out.items():
@@ -127,6 +159,13 @@ def main():
               f"traces={s['traces']} bucket_hits={s['bucket_hits']} "
               f"build={s['plan_build_ms']:.0f} ms "
               f"tables={s['table_bytes'] / 1024:.0f} KiB {wait}")
+        slo = s.get("slo")
+        if args.deadline_ms is not None and slo:
+            print(f"  {'':11s}   slo: admitted={slo['admitted']} "
+                  f"rejected={slo['rejected']} shed={slo['shed']} "
+                  f"goodput_flows={slo['goodput_flows']} "
+                  f"late_flows={slo['late_flows']} "
+                  f"max_wait={slo['max_wait_ms']:.1f} ms")
     print(f"registry: {st['cache']}")
     print(f"scheduler: {st['scheduler']}")
 

@@ -834,16 +834,45 @@ def build_plan(
       * ``.window_bank``             → PegasusCNN (B and M/NAM)
       * ``.emb_tree``/``.logit_lut`` → PegasusCNNL (two-level NAM)
 
-    ``interpret=None`` resolves via :func:`default_interpret` (Pallas
-    interpret mode everywhere except a real TPU backend); ``bucket_sizes``
-    overrides the batch-bucket ladder (default :data:`DEFAULT_BUCKETS`);
-    ``fuse=False`` disables the cross-bank fusion pass (``fuse_banks``) —
-    useful for A/B benchmarks and as the escape hatch for a shape the
-    stacked kernel mishandles — and ``fuse_nmax_cap`` bounds each fused
-    group's padded output width (:data:`DEFAULT_FUSE_NMAX_CAP`; ``None``
-    disables the cap) so one wide bank cannot balloon a narrow stack's
-    VMEM footprint. Both participate in ``plan_for``'s memo key, so fused
-    and unfused plans of one model coexist.
+    Args:
+        model: any pegasusified model (see the dispatch table above). A
+            bare ``PegasusLinear`` is treated as a one-bank stack.
+            Unrecognized structures raise ``TypeError`` at build time,
+            never at call time.
+        backend: default execution backend for ``plan(x)`` calls —
+            ``"gather"`` | ``"onehot"`` | ``"kernel"`` | ``"kernel_q8"``
+            (:data:`BACKENDS`); overridable per call via
+            ``plan(x, backend=...)``. Unknown names raise ``ValueError``.
+        block_t / block_n / block_k: Pallas kernel tile sizes (rows of the
+            batch / LUT output columns / tree-descent lanes per program).
+            Only the kernel backends read them; defaults suit the bank
+            shapes the nets produce. Mis-sized tiles fail inside
+            ``pallas_call`` at first trace, not at build.
+        interpret: ``True`` forces Pallas interpret mode (slow, runs
+            anywhere), ``False`` requires a compiled Pallas backend,
+            ``None`` (default) resolves via :func:`default_interpret` —
+            interpret everywhere except a real TPU backend.
+        strategy: Map+SumReduce realization for the kernel backends —
+            ``"mxu"`` (one-hot × LUT matmul), ``"lookup"`` (sparse
+            gather descent), or ``"auto"`` (default: ``lookup`` under
+            interpret mode, ``mxu`` on compiled TPU).
+        bucket_sizes: overrides the batch-bucket ladder (default
+            :data:`DEFAULT_BUCKETS`, 8…4096). Must be sorted ascending;
+            batches above the top bucket round up to multiples of it.
+            Fewer buckets ⇒ fewer traces but more padded compute
+            (``compile_stats()["pad_waste"]`` reports the waste).
+        fuse: ``False`` disables the cross-bank fusion pass
+            (:func:`fuse_banks`) — the A/B switch and the escape hatch
+            for a shape the stacked kernel mishandles (a stack the
+            kernel refuses falls back per-bank instead of dying).
+        fuse_nmax_cap: bounds each fused group's padded output width
+            (:data:`DEFAULT_FUSE_NMAX_CAP` = 2048 columns; ``None``
+            disables the cap) so one wide bank cannot balloon a narrow
+            stack's padded ``[L, Kmax, C, Nmax]`` VMEM footprint;
+            uniformly-wide runs still fuse above the cap because they
+            add no padding. Both fusion knobs participate in
+            ``plan_for``'s memo key, so fused and unfused plans of one
+            model coexist.
 
     The plan freezes ALL model state at build time — banks and non-bank
     attributes alike (RNN window, CNN nam/out_bias, CNN-L

@@ -20,14 +20,24 @@ priority-weighted queues), and per-model serving + compile-cache +
 latency stats.
 
 ``AsyncMultiModelServer`` makes that an always-on service: a background
-drain thread, thread-safe ``submit()`` returning futures, and bounded
-per-model queues with reject/block backpressure — the host-side analog of
-FENIX's multiplexed pipeline under continuous ingestion.
+drain thread, thread-safe ``submit()`` returning futures, an
+asyncio-native ``infer_async()`` frontend, and bounded per-model queues
+with reject/block backpressure — the host-side analog of FENIX's
+multiplexed pipeline under continuous ingestion.
+
+Requests may carry a ``deadline_ms`` budget: the scheduler sheds a
+request whose queue-wait has already burned through its slack instead of
+dispatching it (its future fails with
+:class:`~repro.launch.scheduler.DeadlineExceededError`; sync ``serve()``
+surfaces sheds through :class:`PartialDrainError`), and admission control
+refuses doomed requests at submit once a service rate is observed. See
+docs/SERVING.md for the operator guide.
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import threading
 import time
 from collections import deque
@@ -44,15 +54,18 @@ from repro.models.transformer import (
 )
 
 from .mesh import batch_specs, decode_state_specs, named, param_specs
-from .scheduler import PRIORITY_WEIGHTS, QueueFullError, WFQScheduler
+from .scheduler import (
+    PRIORITY_WEIGHTS, DeadlineExceededError, QueueFullError, WFQScheduler,
+)
 
 __all__ = ["make_serve_step", "make_prefill_step", "Server", "PegasusServer",
            "MultiModelServer", "AsyncMultiModelServer", "PartialDrainError",
-           "QueueFullError", "PRIORITY_WEIGHTS"]
+           "QueueFullError", "DeadlineExceededError", "PRIORITY_WEIGHTS"]
 
 
 class PartialDrainError(RuntimeError):
-    """Some requested models failed to drain while others served.
+    """Some requests did not serve — a model failed to drain and/or
+    deadline-bearing requests were shed — while the rest completed.
 
     Raised by :meth:`MultiModelServer.serve` instead of mutating and
     re-raising the underlying exception (the old ``err.partial_results =
@@ -66,18 +79,32 @@ class PartialDrainError(RuntimeError):
         before failing appears here too, with its served prefix — its name
         in ``failed`` is what marks it incomplete,
       * ``failed`` — ``{name: exception}`` for every requested model that
-        did not, and
+        did not,
+      * ``shed`` — ``{name: [DeadlineExceededError per shed request]}``
+        for requests dropped for a missed deadline (refused at admission
+        or shed at pull time). Shed work was never computed — resubmit it
+        only if the caller still wants a LATE answer, and
       * ``__cause__`` — the first underlying exception (``raise ... from``).
     """
 
-    def __init__(self, failed: dict, partial_results: dict):
+    def __init__(self, failed: dict, partial_results: dict,
+                 shed: dict | None = None):
         self.failed = dict(failed)
         self.partial_results = partial_results
-        names = ", ".join(sorted(self.failed))
+        self.shed = {k: list(v) for k, v in (shed or {}).items()}
+        parts = []
+        if self.failed:
+            names = ", ".join(sorted(self.failed))
+            parts.append(f"model(s) {names} failed to drain: "
+                         f"{next(iter(self.failed.values()))!r}")
+        if self.shed:
+            n = sum(len(v) for v in self.shed.values())
+            parts.append(f"{n} request(s) shed past their deadline on "
+                         f"{', '.join(sorted(self.shed))}")
         super().__init__(
-            f"model(s) {names} failed to drain: "
-            f"{next(iter(self.failed.values()))!r} (served models' outputs "
-            "are in .partial_results; per-model errors in .failed)")
+            "; ".join(parts) + " (served models' outputs are in "
+            ".partial_results; per-model errors in .failed; shed requests "
+            "in .shed)")
 
 
 def _resolve_future(fut: Future | None, *, result=None,
@@ -316,6 +343,7 @@ class MultiModelServer:
         self.schedule_log: deque = deque(maxlen=4096)
         self.batches_dispatched = 0
         self.last_drain_errors: dict[str, Exception] = {}
+        self.last_shed: dict[str, int] = {}   # sheds seen by the last drain
         for name in self.registry.names():   # adopt a pre-populated registry
             self._track(name)
         for name, model in dict(models or {}).items():
@@ -356,10 +384,30 @@ class MultiModelServer:
                   **build_kw):
         """Compile + register one model; returns its ExecutionPlan.
 
-        ``priority`` names a class in :data:`PRIORITY_WEIGHTS` (``high`` /
-        ``normal`` / ``low``); an explicit ``weight`` overrides it. Both
-        feed the WFQ scheduler. ``queue_depth``/``policy`` override the
-        server-wide backpressure defaults for this model's queue."""
+        Args:
+            name: the serving handle requests address; re-registering an
+                existing name rebuilds its plan and re-applies any
+                explicit scheduling fields below.
+            model: the Pegasus bank structure to compile (whatever
+                ``repro.engine.build_plan`` accepts).
+            backend: engine backend for this plan (``gather | onehot |
+                kernel | kernel_q8``); ``None`` uses the server default.
+            priority: a class in :data:`PRIORITY_WEIGHTS` (``"high"`` = 4x
+                the flow share of ``"normal"``; ``"low"`` = 0.25x).
+            weight: explicit WFQ weight (flows-per-round multiplier);
+                overrides ``priority``. Must be > 0.
+            queue_depth: max queued requests for this model (``None`` =
+                server default; unbounded if that is also ``None``).
+            policy: backpressure when the bounded queue is full —
+                ``"reject"`` raises :class:`QueueFullError` at submit,
+                ``"block"`` parks the submitter until space frees.
+            **build_kw: forwarded to ``build_plan`` (``fuse``,
+                ``bucket_sizes``, ``block_t``, ... — see its docstring).
+
+        Raises:
+            ValueError: unknown ``priority``/``policy``, or
+                non-positive ``weight``/``queue_depth``.
+        """
         build_kw.setdefault("fuse", self.fuse)
         plan = self.registry.register(
             name, model, backend=backend or self.backend,
@@ -394,7 +442,12 @@ class MultiModelServer:
     # -- request paths ------------------------------------------------------
 
     def infer(self, name: str, *inputs, backend: str | None = None):
-        """Immediate single-request dispatch through the named plan."""
+        """Immediate single-request dispatch through the named plan — no
+        queueing, no coalescing, no deadline (the request runs NOW on the
+        calling thread). ``inputs`` carry a leading batch dim; ``backend``
+        optionally overrides the plan's compiled backend for this call.
+        Raises ``KeyError`` for an unknown name; plan errors (bad shape,
+        unknown backend) propagate without touching the counters."""
         self._tracked(name)
         y = self.registry.get(name)(*inputs, backend=backend)
         with self._ctr_lock:
@@ -405,19 +458,51 @@ class MultiModelServer:
         return y
 
     def _enqueue(self, name: str, inputs: tuple, future: Future | None,
-                 timeout: float | None) -> int:
+                 timeout: float | None,
+                 deadline_ms: float | None = None) -> int:
         self._tracked(name)
         inputs = tuple(x if isinstance(x, jax.Array) else jnp.asarray(x)
                        for x in inputs)
         return self._sched.submit(name, inputs, int(np.shape(inputs[0])[0]),
-                                  future=future, timeout=timeout)
+                                  future=future, timeout=timeout,
+                                  deadline_ms=deadline_ms)
 
-    def submit(self, name: str, *inputs, timeout: float | None = None) -> int:
-        """Enqueue one request; returns its queue position at append time.
-        Inputs must carry a leading batch dim. Safe from any thread; on a
-        bounded queue, backpressure applies (reject raises
-        :class:`QueueFullError`, block waits up to ``timeout``)."""
-        return self._enqueue(name, inputs, None, timeout)
+    def submit(self, name: str, *inputs, timeout: float | None = None,
+               deadline_ms: float | None = None) -> int:
+        """Enqueue one request for the next :meth:`drain`.
+
+        Args:
+            name: a registered model name (:meth:`add_model` /
+                pre-populated registry). Unknown names raise ``KeyError``.
+            *inputs: the request arrays, each with a LEADING BATCH DIM
+                (wrap a single flow as ``x[None]``); multi-input models
+                (e.g. CNN-L) take their inputs positionally.
+            timeout: seconds to wait for queue space when the model queue
+                is bounded with ``policy="block"``; ``None`` waits forever.
+                Expiry raises :class:`QueueFullError`.
+            deadline_ms: optional end-to-end latency budget in
+                MILLISECONDS from this call. The scheduler sheds the
+                request at pull time once its queue-wait exceeds
+                ``deadline_ms`` minus the model's EWMA service time
+                (:class:`DeadlineExceededError` on the future, if any);
+                admission control may refuse it immediately with the same
+                error when the current backlog already predicts a miss.
+                ``None`` (default) never sheds.
+
+        Returns:
+            The request's queue position at append time (0-based).
+
+        Raises:
+            KeyError: unknown model name.
+            QueueFullError: bounded queue full (``policy="reject"``, or
+                ``block`` timed out) — also raised at admission when the
+                queue's ``admit_ms`` horizon is exceeded.
+            DeadlineExceededError: admission control predicts the deadline
+                cannot be met given the observed service rate.
+            ValueError: non-positive ``deadline_ms``.
+        """
+        return self._enqueue(name, inputs, None, timeout,
+                             deadline_ms=deadline_ms)
 
     def pending(self) -> dict[str, int]:
         return self._sched.pending()
@@ -535,7 +620,12 @@ class MultiModelServer:
         per-model exceptions land in ``last_drain_errors``; drain raises
         only if NO model succeeded. A request that is itself bad will fail
         every retry (it coalesces with whatever else queues up) — clear it
-        with ``discard_pending``."""
+        with ``discard_pending``.
+
+        Deadline-bearing requests whose slack ran out while queued are
+        SHED by the scheduler (dropped, future failed with
+        :class:`DeadlineExceededError`) and do not appear in the returned
+        lists; ``last_shed`` records ``{name: count}`` for this drain."""
         self.last_drain_errors = {}
         results: dict = {}
         failed: set = set()
@@ -554,23 +644,53 @@ class MultiModelServer:
                     failed.add(g["name"])  # skip for the rest of this drain
                 else:
                     results.setdefault(g["name"], []).extend(outs)
+        self.last_shed = {name: len(reqs)
+                          for name, reqs in self._sched.take_shed().items()}
         if self.last_drain_errors and not results:
             raise next(iter(self.last_drain_errors.values()))
         return results
 
     def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
-        """Mixed-model convenience: ``requests`` is ``[(name, inputs), ...]``
-        (inputs a single array or a tuple); returns outputs aligned to the
-        request order. If any requested model failed to drain, a
-        :class:`PartialDrainError` is raised carrying the already-served
-        models' outputs (``partial_results`` — that work is computed and
-        counted; only the failed models' requests need resubmitting), the
-        per-model errors (``failed``), and the first underlying exception
-        as ``__cause__``."""
-        order = []
-        for name, inputs in requests:
+        """Mixed-model convenience: submit everything, drain, return
+        outputs aligned to the request order.
+
+        Args:
+            requests: a list of ``(name, inputs)`` or
+                ``(name, inputs, deadline_ms)`` tuples — ``inputs`` a
+                single array or a tuple of arrays (each with a leading
+                batch dim), ``deadline_ms`` an optional per-request budget
+                in milliseconds (see :meth:`submit`).
+            backend: per-drain engine backend override (sync drain only).
+
+        Returns:
+            One output per request, in request order — only when EVERY
+            request served.
+
+        Raises:
+            PartialDrainError: any requested model failed to drain and/or
+                any deadline-bearing request was shed. Served outputs ride
+                in ``.partial_results`` (``{name: [outputs]}`` — that work
+                is computed and counted), drain failures in ``.failed``,
+                and shed requests in ``.shed``
+                (``{name: [DeadlineExceededError]}``); shed work was never
+                computed and only the failed/shed requests need
+                resubmitting.
+        """
+        order: list[tuple[str, Future]] = []
+        for item in requests:
+            name, inputs = item[0], item[1]
+            deadline_ms = item[2] if len(item) > 2 else None
             inputs = tuple(inputs) if isinstance(inputs, (tuple, list)) else (inputs,)
-            order.append((name, self.submit(name, *inputs)))
+            # a private future per request keeps served/shed alignment
+            # robust: drain()'s per-model lists exclude shed requests, so
+            # the old positional indexing into them would mis-align
+            fut: Future = Future()
+            try:
+                self._enqueue(name, inputs, fut, None,
+                              deadline_ms=deadline_ms)
+            except DeadlineExceededError as e:
+                _resolve_future(fut, error=e)   # admission refusal == shed
+            order.append((name, fut))
         by_model = self.drain(backend=backend)
         # a name in last_drain_errors did NOT fully serve — including a
         # model whose earlier slice landed in by_model before a later slice
@@ -579,17 +699,27 @@ class MultiModelServer:
         failed = {name: self.last_drain_errors[name]
                   for name in dict.fromkeys(n for n, _ in order)
                   if name in self.last_drain_errors}
-        if failed:
-            raise PartialDrainError(failed, by_model) \
-                from next(iter(failed.values()))
-        return [by_model[name][pos] for name, pos in order]
+        shed: dict[str, list] = {}
+        for name, fut in order:
+            if fut.done():
+                exc = fut.exception()
+                if isinstance(exc, DeadlineExceededError):
+                    shed.setdefault(name, []).append(exc)
+        if failed or shed:
+            cause = (next(iter(failed.values())) if failed
+                     else next(iter(shed.values()))[0])
+            raise PartialDrainError(failed, by_model, shed=shed) from cause
+        return [fut.result() for _, fut in order]
 
     def stats(self) -> dict:
         """Per-model serving counters merged with the registry's per-plan
-        compile-cache stats and the scheduler's latency percentiles, plus
-        the memo cache_info and the scheduling config."""
+        compile-cache stats, the scheduler's latency percentiles, and the
+        scheduler's SLO counters (admission/shed/goodput/starvation —
+        under each model's ``"slo"`` key), plus the memo cache_info and
+        the scheduling config. Field-by-field reference: docs/SERVING.md."""
         reg = self.registry.stats()
         lat = self._sched.latency_stats()
+        slo = self._sched.counters()
         zeros = {"requests_served": 0, "batches_run": 0, "flows_served": 0}
         return {
             "models": {
@@ -597,13 +727,24 @@ class MultiModelServer:
                 # shared registry that this server hasn't served yet
                 name: {**zeros, **self._counters.get(name, {}),
                        **reg.get(name, {}),
-                       **({"latency": lat[name]} if name in lat else {})}
+                       **({"latency": lat[name]} if name in lat else {}),
+                       **({"slo": slo[name]} if name in slo else {})}
                 for name in self.models()
             },
             "cache": self.registry.cache_info(),
             "batches_dispatched": self.batches_dispatched,
             "scheduler": self._sched.describe(),
         }
+
+    def slo_counters(self) -> dict:
+        """The scheduler's per-model SLO counters alone (cheaper than full
+        :meth:`stats`; see :meth:`WFQScheduler.counters` for the fields).
+        The overload benchmark diffs these across phases."""
+        return self._sched.counters()
+
+    def reset_slo_counters(self) -> None:
+        """Zero the SLO counters (benchmarks reset between load phases)."""
+        self._sched.reset_counters()
 
     def reset_latency_stats(self) -> None:
         """Drop the latency reservoirs (benchmarks reset after warmup)."""
@@ -651,7 +792,11 @@ class AsyncMultiModelServer(MultiModelServer):
     # -- lifecycle ----------------------------------------------------------
 
     def start(self) -> "AsyncMultiModelServer":
-        """Spawn the background drain loop (idempotent)."""
+        """Spawn the background drain loop and return ``self`` (idempotent
+        — a live loop is left alone; after ``stop()`` a fresh thread is
+        spawned). Until start, submitted futures sit queued and never
+        resolve; ``serve()``/``infer_async()`` refuse to run with the loop
+        down rather than hang."""
         if self._thread is None or not self._thread.is_alive():
             self._stop_flag.clear()
             self._thread = threading.Thread(
@@ -660,8 +805,20 @@ class AsyncMultiModelServer(MultiModelServer):
         return self
 
     def stop(self, *, drain: bool = True, timeout: float | None = None) -> None:
-        """Stop the loop. ``drain=True`` first waits for every queue to
-        empty (in-flight futures resolve before return)."""
+        """Stop the loop (what ``__exit__`` calls, with the defaults).
+
+        Args:
+            drain: wait for every queue to empty first, so in-flight
+                futures all resolve before return; ``False`` halts after
+                the current round — pending requests stay queued (their
+                futures unresolved) until a ``start()``/``drain()``.
+            timeout: overall budget in SECONDS for drain-wait + join;
+                ``None`` waits indefinitely. On expiry the loop may still
+                be alive (``running`` stays true) and a later ``stop()``
+                can finish the job — the thread is never abandoned while
+                alive, which would let ``start()`` spawn a second
+                concurrent dispatcher.
+        """
         if self._thread is None:
             return
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -706,19 +863,57 @@ class AsyncMultiModelServer(MultiModelServer):
 
     # -- ingestion ----------------------------------------------------------
 
-    def submit(self, name: str, *inputs,
-               timeout: float | None = None) -> Future:
-        """Thread-safe enqueue; returns a Future of the request's output.
-        Backpressure per the model queue's policy (see class docstring)."""
+    def submit(self, name: str, *inputs, timeout: float | None = None,
+               deadline_ms: float | None = None) -> Future:
+        """Thread-safe enqueue; returns a
+        :class:`concurrent.futures.Future` of the request's np output.
+        Parameters and failure modes as :meth:`MultiModelServer.submit`
+        (``timeout`` in seconds for ``block`` backpressure;
+        ``deadline_ms`` in milliseconds), with one difference in how
+        deadline misses surface: a shed or admission-refused request FAILS
+        THE RETURNED FUTURE with :class:`DeadlineExceededError` instead of
+        raising here (uniform handling at ``future.result()`` whether the
+        miss was predicted at submit or happened in the queue). Dispatch
+        errors also ride on the future — async requests are never
+        requeued."""
         fut: Future = Future()
-        self._enqueue(name, inputs, fut, timeout)
+        try:
+            self._enqueue(name, inputs, fut, timeout,
+                          deadline_ms=deadline_ms)
+        except DeadlineExceededError as e:
+            _resolve_future(fut, error=e)
         return fut
 
+    async def infer_async(self, name: str, *inputs,
+                          timeout: float | None = None,
+                          deadline_ms: float | None = None):
+        """asyncio-native single request: ``await`` the np output from a
+        running event loop without blocking it.
+
+        The enqueue itself runs in a worker thread
+        (``asyncio.to_thread``) because ``policy="block"`` backpressure
+        can park the submitter; the returned future is then awaited via
+        ``asyncio.wrap_future``. Parameters as :meth:`submit`. Raises
+        :class:`DeadlineExceededError` if the request is refused at
+        admission or shed in the queue, ``RuntimeError`` if the drain loop
+        is not running (the await would never complete)."""
+        if not self.running:
+            raise RuntimeError(
+                "the background drain loop is not running — start() the "
+                "server (or use it as a context manager) before "
+                "infer_async(), otherwise the await would never resolve")
+        fut = await asyncio.to_thread(
+            self.submit, name, *inputs,
+            timeout=timeout, deadline_ms=deadline_ms)
+        return await asyncio.wrap_future(fut)
+
     def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
-        """Mixed-request convenience over futures: submits everything, waits
-        for the results in order. Unlike the sync server there is no
-        partial-result exception — each future fails independently, so this
-        raises the FIRST failed request's error once all are settled."""
+        """Mixed-request convenience over futures: submits everything
+        (``(name, inputs)`` or ``(name, inputs, deadline_ms)`` tuples),
+        waits for the results in order. Unlike the sync server there is no
+        partial-result exception — each future fails independently (sheds
+        carry :class:`DeadlineExceededError`), so this raises the FIRST
+        failed request's error once all are settled."""
         if backend is not None:
             raise ValueError(
                 "AsyncMultiModelServer.serve dispatches via the background "
@@ -730,9 +925,11 @@ class AsyncMultiModelServer(MultiModelServer):
                 "server (or use it as a context manager) before serve(), "
                 "otherwise the submitted futures would never resolve")
         futs = []
-        for name, inputs in requests:
+        for item in requests:
+            name, inputs = item[0], item[1]
+            deadline_ms = item[2] if len(item) > 2 else None
             inputs = tuple(inputs) if isinstance(inputs, (tuple, list)) else (inputs,)
-            futs.append(self.submit(name, *inputs))
+            futs.append(self.submit(name, *inputs, deadline_ms=deadline_ms))
         # settle EVERYTHING before raising (the documented contract): an
         # early failure must not leave later requests in flight while the
         # caller proceeds to resubmit/stop/inspect

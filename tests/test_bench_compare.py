@@ -13,7 +13,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 from benchmarks.compare import compare, trajectory_table
 
 
-def _doc(per_call, batch=1024, families=None, multi=None, async_serve=None):
+def _doc(per_call, batch=1024, families=None, multi=None, async_serve=None,
+         overload=None):
     return {
         "engine": {
             "batch": batch,
@@ -22,6 +23,7 @@ def _doc(per_call, batch=1024, families=None, multi=None, async_serve=None):
         "families": families or {},
         **({"multi_plan": multi} if multi else {}),
         **({"async_serve": async_serve} if async_serve else {}),
+        **({"overload": overload} if overload else {}),
     }
 
 
@@ -250,6 +252,77 @@ def test_async_serve_missing_section_is_visible_not_silent():
     lines, regressions = compare(_doc(BASE), base, 0.25)
     assert regressions == []
     assert any("async_serve added since baseline" in l for l in lines)
+
+
+def _overload(g1=20000.0, g2=22000.0, hi99=60.0, deadline=100.0):
+    return {
+        "deadline_ms": deadline,
+        "capacity_flows_s": 50000.0,
+        "phases": {
+            "0.5": {"goodput_flows_s": g1 / 2, "hi_p99_wait_ms": 5.0},
+            "1.0": {"goodput_flows_s": g1, "hi_p99_wait_ms": 30.0},
+            "2.0": {"goodput_flows_s": g2, "hi_p99_wait_ms": hi99},
+        },
+    }
+
+
+def test_overload_invariants_pass():
+    base = _doc(BASE, overload=_overload())
+    fresh = _doc(BASE, overload=_overload(g1=18000.0, g2=19000.0, hi99=80.0))
+    lines, regressions = compare(base, fresh, 0.25)
+    assert regressions == []
+    assert any("hi p99 wait @2x" in l and "OK" in l for l in lines)
+    assert any("goodput 1x" in l and "OK" in l for l in lines)
+
+
+def test_overload_unbounded_hi_wait_gated():
+    """Fresh-run invariant: hi p99 queue-wait ≥ 2x the deadline under 2x
+    overload means shedding stopped bounding waits — host-independent,
+    gated on every run (even with no baseline section)."""
+    fresh = _doc(BASE, overload=_overload(hi99=250.0, deadline=100.0))
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert len(regressions) == 1
+    assert "shedding is not bounding waits" in regressions[0]
+    # just inside the bound: passes
+    ok = _doc(BASE, overload=_overload(hi99=199.0, deadline=100.0))
+    _, regressions = compare(_doc(BASE), ok, 0.25)
+    assert regressions == []
+
+
+def test_overload_goodput_collapse_past_saturation_gated():
+    """goodput(2x) < 0.5x goodput(1x) = the overload curve collapsed
+    instead of plateauing (the failure mode shedding exists to prevent)."""
+    fresh = _doc(BASE, overload=_overload(g1=20000.0, g2=8000.0))
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert len(regressions) == 1
+    assert "collapsed past saturation" in regressions[0]
+
+
+def test_overload_cross_run_collapse_gated():
+    base = _doc(BASE, overload=_overload(g1=20000.0))
+    dead = _doc(BASE, overload=_overload(g1=8000.0, g2=8500.0))  # 2.5x drop
+    _, regressions = compare(base, dead, 0.25)
+    assert len(regressions) == 1 and "collapse limit" in regressions[0]
+    ok = _doc(BASE, overload=_overload(g1=12000.0, g2=13000.0))  # 1.67x
+    _, regressions = compare(base, ok, 0.25)
+    assert regressions == []
+
+
+def test_overload_missing_section_or_phases_is_visible():
+    base = _doc(BASE, overload=_overload())
+    lines, regressions = compare(base, _doc(BASE), 0.25)
+    assert regressions == []
+    assert any("overload section missing" in l for l in lines)
+    # added since baseline: invariants still gate, collapse skipped
+    lines, regressions = compare(_doc(BASE), base, 0.25)
+    assert regressions == []
+    assert any("overload added since baseline" in l for l in lines)
+    # dropped phases: loud info, not a crash or a silent green
+    broken = _doc(BASE, overload={"deadline_ms": 100.0, "phases": {}})
+    lines, regressions = compare(base, broken, 0.25)
+    assert regressions == []
+    assert any("invariant gates NOT applied" in l for l in lines)
+    assert any("collapse gate NOT applied" in l for l in lines)
 
 
 def test_trajectory_table(tmp_path):

@@ -3,12 +3,16 @@
 queue backpressure (reject vs block), thread-safe ingestion under
 concurrent submit/add_model/drain, the future-returning async server, and
 the PartialDrainError regression (no mutation of slotted exceptions).
+Plus the deadline/SLO layer (ISSUE 6): slack-based shedding, admission
+control, goodput counters, and the asyncio frontend.
 
 Everything here runs tiny gather-backend plans — fast-lane material.
 """
 
+import asyncio
 import threading
 import time
+from concurrent.futures import Future
 
 import numpy as np
 import jax.numpy as jnp
@@ -16,7 +20,7 @@ import pytest
 
 from repro.core.amm import init_pegasus_linear
 from repro.launch.scheduler import (
-    PRIORITY_WEIGHTS, QueueFullError, WFQScheduler,
+    PRIORITY_WEIGHTS, DeadlineExceededError, QueueFullError, WFQScheduler,
 )
 from repro.launch.serve import (
     AsyncMultiModelServer, MultiModelServer, PartialDrainError,
@@ -468,3 +472,169 @@ def test_discard_pending_cancels_futures(x):
     assert server.discard_pending("m") == 1
     assert fut.cancelled()
     assert server.pending() == {}
+
+
+# ---------------------------------------------------------------------------
+# Deadline/SLO layer (ISSUE 6): shedding, admission control, goodput
+# ---------------------------------------------------------------------------
+
+
+def test_shed_fails_future_and_never_dispatches():
+    """The acceptance triple: an expired deadline-bearing request is shed
+    (typed error on its future, never pulled), while a no-deadline request
+    on the SAME queue dispatches untouched."""
+    s = WFQScheduler()
+    s.add_queue("m")
+    doomed, fine = Future(), Future()
+    s.submit("m", ("doomed",), 4, future=doomed, deadline_ms=1e-6)
+    s.submit("m", ("fine",), 4, future=fine)
+    time.sleep(0.005)                           # burn the 1 ns budget
+    pulled = s.pull_round(64)
+    assert [r.inputs for _, reqs in pulled for r in reqs] == [("fine",)]
+    assert isinstance(doomed.exception(timeout=0), DeadlineExceededError)
+    assert not fine.done()                      # dispatched, not failed
+    shed = s.take_shed()
+    assert [r.inputs for r in shed["m"]] == [("doomed",)]
+    assert s.take_shed() == {}                  # take = drain-once
+    c = s.counters()["m"]
+    assert (c["admitted"], c["shed"], c["shed_flows"]) == (2, 1, 4)
+    assert c["max_wait_ms"] > 0.0
+    assert s.pending() == {}                    # shed frees backlog too
+
+
+def test_deadline_validation():
+    s = WFQScheduler()
+    s.add_queue("m")
+    with pytest.raises(ValueError, match="deadline_ms"):
+        s.submit("m", (), 1, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="admit_ms"):
+        s.add_queue("n", admit_ms=-1.0)
+
+
+def test_shed_slack_uses_service_estimate():
+    """Shedding is SLACK-based: a deadline that raw queue-wait has not yet
+    burned is still shed when the EWMA service time would blow it anyway
+    (dispatching work guaranteed to finish late is wasted capacity) — BUT
+    the estimate's claim is capped at half the budget, so a fresh request
+    always gets deadline/2 of queue time first (an inflated estimate must
+    not shed everything forever: only served slices can correct it)."""
+    s = WFQScheduler()
+    s.add_queue("m")
+    s.submit("m", (), 8)
+    for name, reqs in s.pull_round(64):
+        s.record_service(name, reqs, 50.0)      # svc estimate := 50 ms
+    fresh = Future()
+    s.submit("m", (), 8, future=fresh, deadline_ms=40.0)  # < svc estimate
+    # self-healing guarantee: not shed instantly despite estimate > budget
+    assert len(s.pull_round(64)) == 1
+    assert not fresh.done()
+    # past the half-budget (40/2 = 20 ms of wait), the estimate sheds it
+    fut = Future()
+    s.submit("m", (), 8, future=fut, deadline_ms=40.0)
+    time.sleep(0.025)                           # 25 ms > 40 - min(50, 20)
+    assert s.pull_round(64) == []               # shed, not dispatched
+    assert isinstance(fut.exception(timeout=0), DeadlineExceededError)
+
+
+def test_admission_control_refuses_doomed_and_over_horizon():
+    """Once a service rate is observed, a submit whose predicted queue-wait
+    already exceeds its deadline is refused up front (typed error), and an
+    admit_ms horizon rejects ANY submit past it (QueueFullError). Without
+    rate data admission stays inactive — nothing is refused blind."""
+    s = WFQScheduler()
+    s.add_queue("m")
+    s.submit("m", (), 100, deadline_ms=1.0)     # no rate yet: admitted
+    for name, reqs in s.pull_round(1000):
+        s.record_service(name, reqs, 100.0)     # rate := 1000 flows/s
+    for _ in range(5):
+        s.submit("m", (), 10)                   # 50-flow backlog ≈ 50 ms
+    with pytest.raises(DeadlineExceededError, match="admission"):
+        s.submit("m", (), 1, deadline_ms=10.0)
+    s.submit("m", (), 1, deadline_ms=200.0)     # enough slack: admitted
+    s.configure("m", admit_ms=20.0)
+    with pytest.raises(QueueFullError, match="admit_ms"):
+        s.submit("m", (), 1)                    # horizon caps ALL submits
+    c = s.counters()["m"]
+    assert c["rejected"] == 2
+    assert c["service_rate_flows_s"] == pytest.approx(1000.0)
+    assert c["head_wait_ms"] >= 0.0
+
+
+def test_goodput_counters_split_on_deadline():
+    s = WFQScheduler()
+    s.add_queue("m")
+    s.submit("m", (), 4, deadline_ms=60_000.0)  # will finish well inside
+    s.submit("m", (), 4)                        # no deadline: neither bucket
+    for name, reqs in s.pull_round(64):
+        s.record_service(name, reqs, 1.0)
+    c = s.counters()["m"]
+    assert c["served_flows"] == 8
+    assert c["goodput_flows"] == 4
+    assert c["late_flows"] == 0
+    s.reset_counters()
+    c = s.counters()["m"]
+    assert c["served_flows"] == 0
+    assert c["service_ms_ewma"] == pytest.approx(1.0)    # estimate survives
+
+
+def test_sync_serve_reports_sheds_via_partial_drain_error(x):
+    """Satellite acceptance: sync serve() surfaces sheds through
+    PartialDrainError WITHOUT losing the other results, and the queue is
+    clean afterwards (sheds never poison later drains)."""
+    server = MultiModelServer({"m": _banks()}, backend="gather")
+    server.serve([("m", x[:4])])                # warm the plan
+    with pytest.raises(PartialDrainError) as ei:
+        server.serve([("m", x[:4], 1e-6), ("m", x[4:8])])
+    err = ei.value
+    assert err.failed == {}                     # nothing FAILED — one shed
+    assert [len(v) for v in err.shed.values()] == [1]
+    assert isinstance(err.shed["m"][0], DeadlineExceededError)
+    assert len(err.partial_results["m"]) == 1   # the other request served
+    assert err.partial_results["m"][0].shape[0] == 4
+    assert server.last_shed == {"m": 1}
+    assert server.pending() == {}
+    # deadline-free serving is untouched afterwards
+    assert len(server.serve([("m", x[:4]), ("m", x[4:8])])) == 2
+    slo = server.slo_counters()["m"]
+    assert slo["shed"] == 1 and slo["goodput_flows"] == 0
+
+
+def test_sync_drain_records_sheds_without_futures(x):
+    server = MultiModelServer({"m": _banks()}, backend="gather")
+    server.submit("m", x[:4], deadline_ms=1e-6)
+    server.submit("m", x[4:8])
+    time.sleep(0.005)
+    out = server.drain()
+    assert len(out["m"]) == 1                   # only the live request
+    assert server.last_shed == {"m": 1}
+
+
+def test_async_deadline_shed_fails_future(x):
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather")
+    doomed = server.submit("m", x[:4], deadline_ms=1e-6)  # queued pre-start
+    fine = server.submit("m", x[4:8])
+    time.sleep(0.005)
+    with server:
+        assert fine.result(timeout=60).shape[0] == 4
+        with pytest.raises(DeadlineExceededError):
+            doomed.result(timeout=60)
+    st = server.stats()["models"]["m"]
+    assert st["slo"]["shed"] == 1
+    assert st["requests_served"] == 1
+
+
+def test_infer_async_roundtrip_and_shed(x):
+    banks = _banks()
+    ref = np.asarray(MultiModelServer({"m": banks},
+                                      backend="gather").infer("m", x[:4]))
+
+    async def scenario():
+        with AsyncMultiModelServer({"m": banks}, backend="gather") as server:
+            out = await server.infer_async("m", x[:4], deadline_ms=60_000.0)
+            np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+            with pytest.raises(DeadlineExceededError):
+                await server.infer_async("m", x[:4], deadline_ms=1e-6)
+        with pytest.raises(RuntimeError, match="not running"):
+            await server.infer_async("m", x[:4])
+
+    asyncio.run(scenario())

@@ -10,10 +10,22 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 import time
 import traceback
+
+# The sharding sweep (throughput.sharding_bench) needs multiple XLA devices;
+# on CPU-only hosts that means simulating them. The flag must be set BEFORE
+# jax initializes its backends — i.e. before the benchmark modules import —
+# and is left alone when the caller exported their own XLA_FLAGS (the
+# multi-device CI lane does so explicitly). Same guard as tests/conftest.py.
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_throughput.json"
 

@@ -4,15 +4,21 @@
 2. Lower it to Pegasus form: fuzzy trees + fused LUT banks (+ backprop refine).
 3. Compile to the Tofino-2 MAT emulator; run packets through integer tables.
 4. Compare accuracies + print the Table-6-style resource report.
+5. Serve the model through the typed request API — an ``InferRequest``
+   carrying a deadline and a priority, answered by an ``InferResult`` —
+   across the host's device streams (simulate several on CPU with
+   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.data.synthetic_traffic import make_dataset
 from repro.dataplane.compile import compile_model
+from repro.launch.serve import InferRequest, MultiModelServer
 from repro.nets.common import macro_f1
 from repro.nets.mlp import mlp_apply, pegasusify_mlp, pegasus_mlp_apply, train_mlp
 
@@ -47,6 +53,27 @@ def main():
     print(f"{'model':<14} {'bits/flow':>6} {'SRAM':>7} {'TCAM':>8} {'Bus':>8}")
     print(rep.table6_row("MLP-B"))
     print("constraint violations:", rep.validate() or "none — deployable")
+
+    print("== 5. serve it (typed request API, per-device streams) ==")
+    ndev = min(jax.device_count(), 4)
+    server = MultiModelServer({"mlp": banks},
+                              devices=ndev if ndev > 1 else None)
+    try:
+        x = jnp.asarray(ds.test["stats"], jnp.float32)
+        reqs = [InferRequest("mlp", x[:48], deadline_ms=5000.0,
+                             priority="high"),
+                InferRequest("mlp", x[48:65], priority="low")]
+        for req, res in zip(reqs, server.serve(reqs)):
+            wait = (f"{res.queue_wait_ms:.2f}" if res.queue_wait_ms
+                    is not None else "n/a")
+            print(f"  {req.priority:6s} request: {res.flows:3d} flows → "
+                  f"{tuple(res.output.shape)} (queue wait {wait} ms)")
+        dev = server.stats()["devices"]
+        flows = [d["dispatched_flows"] for d in dev["per_device"]]
+        print(f"  {dev['count']} device stream(s)"
+              f"{f', flows per stream {flows}' if flows else ''}")
+    finally:
+        server.close()
 
 
 if __name__ == "__main__":

@@ -6,12 +6,16 @@ multiplexes DNN workloads through one pipeline). This demo is the host-side
 analog: an MLP classifier (high priority), an RNN classifier and an
 AutoEncoder anomaly scorer (low priority) are trained on synthetic
 traffic, compiled into ExecutionPlans, and registered under names in one
-``AsyncMultiModelServer``. A mixed burst of requests is submitted from the
-caller's thread as futures; the background drain loop coalesces same-model
-requests into bucket-aligned micro-batches and schedules the models by
-weighted fair queueing (deficit round-robin — the 4x-weighted MLP gets 4x
-the flow share and dispatches first each round). The wrap-up prints the
-per-model serving / compile-cache / queue-wait-percentile stats.
+``AsyncMultiModelServer``. A mixed burst of :class:`InferRequest`s is
+submitted from the caller's thread as futures; the background drain loop
+coalesces same-model requests into bucket-aligned micro-batches and
+schedules the models by weighted fair queueing (deficit round-robin — the
+4x-weighted MLP gets 4x the flow share and dispatches first each round).
+Every request also carries a per-request ``priority``: "high" requests
+jump ahead of "normal"/"low" ones *within* their model's queue, on top of
+the cross-model WFQ share. The wrap-up prints the consolidated nested
+``stats()`` — serving counters, compile-cache state, queue-wait
+percentiles, and (with ``--devices``) the per-device stream utilization.
 
 With ``--deadline-ms B`` every request carries an end-to-end latency
 budget: requests the scheduler predicts (or observes) missing it are shed
@@ -21,9 +25,14 @@ off ``server.last_shed`` after ``drain()``. The wrap-up then also prints
 the per-model SLO counters (admitted/rejected/shed/goodput — see
 docs/SERVING.md for the field reference).
 
+With ``--devices K`` the server feeds K per-device executor streams
+(chunks placed on the least-loaded device); simulate devices on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Run:  PYTHONPATH=src python examples/serve_batched.py [--backend kernel]
       add --sync for the synchronous submit+drain flavor
       add --deadline-ms 150 for the deadline-bearing client
+      add --devices 4 for multi-device serving (see XLA_FLAGS above)
 """
 
 import argparse
@@ -34,11 +43,17 @@ import jax.numpy as jnp
 
 from repro.data.synthetic_traffic import make_dataset
 from repro.launch.serve import (
-    AsyncMultiModelServer, DeadlineExceededError, MultiModelServer,
+    AsyncMultiModelServer, DeadlineExceededError, InferRequest,
+    MultiModelServer,
 )
 from repro.nets.autoencoder import anomaly_features, pegasusify_ae, train_autoencoder
 from repro.nets.mlp import pegasusify_mlp, train_mlp
 from repro.nets.rnn import pegasusify_rnn, train_rnn
+
+# per-REQUEST priority (queue-jump within a model's own queue) — layered on
+# top of the per-MODEL WFQ weight set at add_model time
+REQUEST_PRIORITY = {"mlp-stats": "high", "rnn-seq": "normal",
+                    "ae-anomaly": "low"}
 
 
 def main():
@@ -54,6 +69,10 @@ def main():
                     help="attach this latency budget (ms) to every request; "
                          "requests that cannot make it are shed with "
                          "DeadlineExceededError instead of served late")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="serve through this many per-device executor "
+                         "streams (simulate on CPU via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     args = ap.parse_args()
 
     ds = make_dataset("peerrush", flows_per_class=200)   # test split: 90 flows
@@ -66,9 +85,10 @@ def main():
                     steps=args.steps)
     ae = train_autoencoder(flat, steps=args.steps)
 
-    print(f"== compiling + registering (backend={args.backend}) ==")
+    print(f"== compiling + registering (backend={args.backend}"
+          f"{f', devices={args.devices}' if args.devices else ''}) ==")
     cls = MultiModelServer if args.sync else AsyncMultiModelServer
-    server = cls(backend=args.backend)
+    server = cls(backend=args.backend, devices=args.devices)
     t0 = time.perf_counter()
     server.add_model("mlp-stats", pegasusify_mlp(
         mlp, ds.train["stats"].astype(np.float32), refine_steps=0),
@@ -76,11 +96,13 @@ def main():
     server.add_model("rnn-seq", pegasusify_rnn(rnn, ds.train["seq"], depth=4))
     server.add_model("ae-anomaly", pegasusify_ae(ae, flat.astype(np.float32)),
                      priority="low")  # background anomaly sweep: 0.25x
+    sched = server.stats()["scheduler"]["models"]
     print(f"3 plans compiled in {(time.perf_counter() - t0) * 1e3:.0f} ms: "
           f"{server.models()} (weights "
-          f"{ {n: c['weight'] for n, c in server.stats()['scheduler'].items()} })")
+          f"{ {n: c['weight'] for n, c in sched.items()} })")
 
-    # a mixed burst: three models × assorted request sizes
+    # a mixed burst: three models × assorted request sizes, every request a
+    # typed InferRequest carrying its own deadline + priority
     x_stats = jnp.asarray(ds.test["stats"], jnp.float32)
     x_seq = jnp.asarray(ds.test["seq"])
     x_feat = jnp.asarray(anomaly_features(
@@ -96,9 +118,10 @@ def main():
             for name, xb in (("mlp-stats", x_stats[:s]),
                              ("rnn-seq", x_seq[:s]),
                              ("ae-anomaly", x_feat[:s])):
+                req = InferRequest(name, xb, deadline_ms=args.deadline_ms,
+                                   priority=REQUEST_PRIORITY[name])
                 try:
-                    futs.append((name, server.submit(
-                        name, xb, deadline_ms=args.deadline_ms)))
+                    futs.append((name, server.submit(req)))
                 except DeadlineExceededError:
                     # admission control: the backlog already predicts a
                     # miss, so the submit is refused before queueing
@@ -120,7 +143,10 @@ def main():
             by_model: dict = {}
             for name, f in futs:
                 try:
-                    by_model.setdefault(name, []).append(f.result(timeout=600))
+                    # typed submits resolve to InferResult (output + flows
+                    # + measured queue_wait_ms)
+                    res = f.result(timeout=600)
+                    by_model.setdefault(name, []).append(res.output)
                 except DeadlineExceededError:
                     shed["count"] += 1      # served late is worthless: skip
             return by_model
@@ -148,26 +174,36 @@ def main():
     if not args.sync:
         server.stop()
 
+    # consolidated nested stats: serving / engine / scheduler / slo / devices
     print("\nper-model serving stats:")
     st = server.stats()
-    for name, s in st["models"].items():
-        lat = s.get("latency", {}).get("queue_wait_ms", {})
+    for name, s in st["serving"]["models"].items():
+        em = st["engine"]["models"][name]
+        lat = st["scheduler"]["latency"].get(name, {}).get("queue_wait_ms", {})
         wait = (f"p50_wait={lat['p50']:.2f} ms p99={lat['p99']:.2f} ms"
                 if lat else "")
         print(f"  {name:11s} requests={s['requests_served']:3d} "
               f"batches={s['batches_run']:3d} flows={s['flows_served']:5d} "
-              f"traces={s['traces']} bucket_hits={s['bucket_hits']} "
-              f"build={s['plan_build_ms']:.0f} ms "
-              f"tables={s['table_bytes'] / 1024:.0f} KiB {wait}")
-        slo = s.get("slo")
+              f"traces={em['traces']} bucket_hits={em['bucket_hits']} "
+              f"build={em['plan_build_ms']:.0f} ms "
+              f"tables={em['table_bytes'] / 1024:.0f} KiB {wait}")
+        slo = st["slo"]["models"].get(name)
         if args.deadline_ms is not None and slo:
             print(f"  {'':11s}   slo: admitted={slo['admitted']} "
                   f"rejected={slo['rejected']} shed={slo['shed']} "
                   f"goodput_flows={slo['goodput_flows']} "
                   f"late_flows={slo['late_flows']} "
                   f"max_wait={slo['max_wait_ms']:.1f} ms")
-    print(f"registry: {st['cache']}")
-    print(f"scheduler: {st['scheduler']}")
+    print(f"registry: {st['engine']['cache']}")
+    print(f"scheduler: {st['scheduler']['models']}")
+    dev = st["devices"]
+    print(f"devices: {dev['count']} stream(s)")
+    for d in dev["per_device"]:
+        print(f"  {d['device']:16s} chunks={d['dispatched_chunks']:4d} "
+              f"flows={d['dispatched_flows']:6d} "
+              f"util={d['utilization']:.0%} pending={d['pending_flows']}")
+
+    server.close()
 
 
 if __name__ == "__main__":

@@ -56,6 +56,8 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from repro.core.amm import PegasusLinear, apply_gather, apply_onehot
 from repro.core.fuzzy_tree import hard_index
@@ -85,6 +87,7 @@ __all__ = [
     "bucket_chunks",
     "build_plan",
     "fuse_banks",
+    "resolve_devices",
 ]
 
 # Per-group cap on a fused stack's padded output width: the stacked operands
@@ -519,6 +522,38 @@ def fuse_banks(banks: Sequence[CompiledBank], *,
 # ---------------------------------------------------------------------------
 
 
+def resolve_devices(devices) -> tuple | None:
+    """Normalize a ``devices=`` knob into a canonical device tuple.
+
+    Accepts ``None`` (single-device, the default), an int ``k`` (the first
+    ``k`` of ``jax.devices()``), or a sequence of ``jax.Device`` objects /
+    integer device ids. The canonical form — ``None`` or a tuple of
+    ``jax.Device`` — is what participates in ``plan_for``'s memo key, so
+    ``devices=2`` and ``devices=jax.devices()[:2]`` memo-hit the same plan.
+    """
+    if devices is None:
+        return None
+    if isinstance(devices, int):
+        avail = jax.devices()
+        if devices < 1:
+            raise ValueError(f"devices must be ≥ 1, got {devices}")
+        if devices > len(avail):
+            raise ValueError(
+                f"devices={devices} but only {len(avail)} jax devices are "
+                "visible (simulate more CPU devices with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        return tuple(avail[:devices])
+    avail = None
+    out = []
+    for d in devices:
+        if isinstance(d, int):
+            avail = jax.devices() if avail is None else avail
+            out.append(avail[d])
+        else:
+            out.append(d)
+    return tuple(out) or None
+
+
 class _PlanCounters:
     """Per-plan trace instrumentation, held OUTSIDE the plan so the jitted
     forward's closure never references the plan itself (see ExecutionPlan).
@@ -551,6 +586,23 @@ class ExecutionPlan:
     slices the padding back off — so the whole model is ONE XLA computation
     per ``(backend, bucket)`` and repeated calls at any batch size that maps
     to a warm bucket perform zero Python-per-bank dispatch and zero retraces.
+
+    **Multi-device execution** comes in two flavors:
+
+      * ``devices=`` (build-time) — SHARDED mode: the whole-plan forward is
+        wrapped in ``shard_map`` over a 1-D ``("batch",)`` mesh, the padded
+        batch split evenly across the devices and the bank operands
+        replicated (they are small — KiB of LUT per bank). One call spreads
+        one big batch over every device; outputs are bit-exact with the
+        single-device plan because every row's compute is independent of
+        the batch partition. Every bucket size must divide evenly by the
+        device count (the default power-of-two ladder accepts 2/4/8).
+      * ``device=`` (call-time, single-device plans only) — PLACED mode:
+        the padded inputs and a cached replica of the bank state are
+        committed to one specific device and the call executes entirely
+        there. This is what the serving runtime's per-device executor
+        streams use: N placed plans run concurrently, one stream per
+        device.
     """
 
     def __init__(
@@ -562,6 +614,7 @@ class ExecutionPlan:
         backend: str = "onehot",
         family: str = "sequential",
         bucket_sizes: Sequence[int] | None = None,
+        devices=None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
@@ -571,6 +624,22 @@ class ExecutionPlan:
         self.backend = backend
         self.family = family
         self.buckets = tuple(sorted(bucket_sizes)) if bucket_sizes else DEFAULT_BUCKETS
+        self.devices = resolve_devices(devices)
+        mesh = None
+        if self.devices is not None and len(self.devices) > 1:
+            bad = [b for b in self.buckets if b % len(self.devices)]
+            if bad:
+                raise ValueError(
+                    f"bucket sizes {bad} are not divisible by the "
+                    f"{len(self.devices)}-device mesh — every bucket is "
+                    "split evenly across the batch axis (pass bucket_sizes "
+                    "that the device count divides)")
+            mesh = Mesh(np.asarray(self.devices), ("batch",))
+        self._mesh = mesh
+        # PLACED mode: per-device replicas of the bank state, built lazily
+        # on first use (cross-device copies of KiB-scale LUT tables)
+        self._replicas: dict = {}
+        self._replica_lock = threading.Lock()
         # compile-cache instrumentation (per plan; STATS mirrors globally).
         # The counters live in a detached holder: _pure must not close over
         # `self`, or plan ↔ jit-closure would form a reference cycle and an
@@ -590,7 +659,22 @@ class ExecutionPlan:
             with ctr.lock:
                 ctr.traces += 1
                 ctr.buckets.add((backend, int(inputs[0].shape[0])))
-            return forward(lambda bank, x: bank.apply(x, backend), state, *inputs)
+
+            def run(state, inputs):
+                return forward(
+                    lambda bank, x: bank.apply(x, backend), state, *inputs)
+
+            if mesh is None:
+                return run(state, inputs)
+            # SHARDED mode: batch axis split across the mesh, bank state
+            # replicated (P() prefix-spec broadcasts over the whole state
+            # pytree). Rows never interact, so no collectives — check_rep
+            # is off because the Pallas calls carry no replication rules.
+            return shard_map(
+                run, mesh=mesh,
+                in_specs=(PartitionSpec(), PartitionSpec("batch")),
+                out_specs=PartitionSpec("batch"),
+                check_rep=False)(state, inputs)
 
         # inputs (arg 1) are DONATED: the bucket ladder hands the jitted
         # forward a padded buffer the plan itself owns, so XLA may reuse its
@@ -610,28 +694,48 @@ class ExecutionPlan:
         return self._ctr.buckets
 
     def __call__(
-        self, *inputs: jax.Array, backend: str | None = None, jit: bool = True
+        self, *inputs: jax.Array, backend: str | None = None,
+        jit: bool = True, device=None,
     ) -> jax.Array:
         be = self.backend if backend is None else backend
         if be not in BACKENDS:
             raise ValueError(f"unknown backend {be!r}; expected one of {BACKENDS}")
+        if device is not None and self._mesh is not None:
+            raise ValueError(
+                "this plan is sharded across a device mesh at build time "
+                "(devices=); per-call device placement applies only to "
+                "single-device plans")
         if not jit:
             return self._forward(
                 lambda bank, x: bank.apply(x, be), self._state, *inputs)
         b = int(np.shape(inputs[0])[0])
         bucket = bucket_batch(b, self.buckets)
-        padded = tuple(self._owned_padded(x, bucket) for x in inputs)
+        padded = tuple(self._owned_padded(x, bucket, device) for x in inputs)
         STATS.jit_calls += 1
         with self._ctr.lock:
             self.jit_calls += 1
             rows = self._ctr.rows.setdefault((be, bucket), [0, 0])
             rows[0] += b
             rows[1] += bucket
-        y = self._jit(self._state, padded, backend=be)
+        state = self._state if device is None else self._state_for(device)
+        y = self._jit(state, padded, backend=be)
         return y if bucket == b else y[:b]
 
+    def _state_for(self, device):
+        """The bank-state replica committed to ``device`` (built once per
+        device). Placed calls pass the replica so every operand of the
+        jitted forward lives on one device — mixed-device arguments are a
+        jit error, and replicating KiB-scale LUT tables once is far cheaper
+        than shipping them per call."""
+        with self._replica_lock:
+            st = self._replicas.get(device)
+            if st is None:
+                st = self._replicas[device] = jax.device_put(
+                    self._state, device)
+            return st
+
     @staticmethod
-    def _owned_padded(x: jax.Array, bucket: int) -> jax.Array:
+    def _owned_padded(x: jax.Array, bucket: int, device=None) -> jax.Array:
         """A plan-OWNED buffer at the bucket size — safe to donate.
 
         Padding (and host→device transfer of non-jax inputs) always yields a
@@ -640,9 +744,17 @@ class ExecutionPlan:
         defensively copied, because a donated buffer is deleted after the
         call. The copy is one batch-sized memcpy, orders of magnitude below
         the per-call budget it buys donation for.
+
+        With ``device`` set (PLACED mode) the buffer is committed to that
+        device first — the pad/copy then executes there, so the jitted call
+        sees same-device operands and runs entirely on its stream.
         """
         if not isinstance(x, jax.Array):
-            x = jnp.asarray(x)             # fresh device buffer: plan-owned
+            x = np.asarray(x)
+            x = jnp.asarray(x) if device is None else jax.device_put(x, device)
+            owned = True                   # fresh device buffer: plan-owned
+        elif device is not None and device not in x.devices():
+            x = jax.device_put(x, device)  # cross-device copy: plan-owned
             owned = True
         else:
             owned = False
@@ -672,6 +784,9 @@ class ExecutionPlan:
             # fusion coverage: how much of the plan runs as stacked kernels
             "fused_groups": self.fused_groups,
             "fused_banks": self.fused_banks,
+            # sharded width: how many devices the batch axis splits across
+            # (1 = single-device; placed calls don't change it)
+            "devices": 1 if self.devices is None else len(self.devices),
         }
 
     @property
@@ -717,7 +832,8 @@ def _note_fusion(plan: ExecutionPlan, steps: Sequence) -> None:
             plan.fused_banks += len(s.banks)
 
 
-def _sequential_plan(layers, backend, kw, buckets, fuse, nmax_cap) -> ExecutionPlan:
+def _sequential_plan(layers, backend, kw, buckets, fuse, nmax_cap,
+                     devices=None) -> ExecutionPlan:
     banks = _compile_banks(layers, **kw)
     steps = fuse_banks(banks, nmax_cap=nmax_cap) if fuse else list(banks)
 
@@ -728,12 +844,13 @@ def _sequential_plan(layers, backend, kw, buckets, fuse, nmax_cap) -> ExecutionP
         return h
 
     plan = ExecutionPlan(banks, forward, {"steps": steps}, backend=backend,
-                         family="sequential", bucket_sizes=buckets)
+                         family="sequential", bucket_sizes=buckets,
+                         devices=devices)
     _note_fusion(plan, steps)
     return plan
 
 
-def _rnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
+def _rnn_plan(model, backend, kw, buckets, devices=None) -> ExecutionPlan:
     x_banks = _compile_banks(model.x_banks, **kw)
     h_banks = _compile_banks(model.h_banks, **kw)
     out_bank = CompiledBank(model.out_bank, **kw)
@@ -750,10 +867,12 @@ def _rnn_plan(model, backend, kw, buckets) -> ExecutionPlan:
 
     state = {"x": x_banks, "h": h_banks, "out": out_bank}
     return ExecutionPlan(x_banks + h_banks + [out_bank], forward, state,
-                         backend=backend, family="rnn", bucket_sizes=buckets)
+                         backend=backend, family="rnn", bucket_sizes=buckets,
+                         devices=devices)
 
 
-def _cnn_plan(model, backend, kw, buckets, fuse, nmax_cap) -> ExecutionPlan:
+def _cnn_plan(model, backend, kw, buckets, fuse, nmax_cap,
+              devices=None) -> ExecutionPlan:
     from repro.nets.cnn import _windows  # structural helper, no cycle at call time
 
     window_bank = CompiledBank(model.window_bank, **kw)
@@ -781,12 +900,13 @@ def _cnn_plan(model, backend, kw, buckets, fuse, nmax_cap) -> ExecutionPlan:
         return h
 
     plan = ExecutionPlan([window_bank] + head_banks, forward, state,
-                         backend=backend, family="cnn", bucket_sizes=buckets)
+                         backend=backend, family="cnn", bucket_sizes=buckets,
+                         devices=devices)
     _note_fusion(plan, head_steps)
     return plan
 
 
-def _cnn_l_plan(model, backend, kw, buckets) -> ExecutionPlan:
+def _cnn_l_plan(model, backend, kw, buckets, devices=None) -> ExecutionPlan:
     from repro.nets.cnn import _packet_feats
 
     bank1 = CompiledBank(model.bank1, **kw)
@@ -810,7 +930,8 @@ def _cnn_l_plan(model, backend, kw, buckets) -> ExecutionPlan:
         return contrib.sum(axis=1) + state["bias"]
 
     return ExecutionPlan([bank1, bank2], forward, state, backend=backend,
-                         family="cnn_l", bucket_sizes=buckets)
+                         family="cnn_l", bucket_sizes=buckets,
+                         devices=devices)
 
 
 def build_plan(
@@ -825,6 +946,7 @@ def build_plan(
     bucket_sizes: Sequence[int] | None = None,
     fuse: bool = True,
     fuse_nmax_cap: int | None = DEFAULT_FUSE_NMAX_CAP,
+    devices=None,
 ) -> ExecutionPlan:
     """Compile any pegasusified model into an ExecutionPlan.
 
@@ -873,6 +995,16 @@ def build_plan(
             add no padding. Both fusion knobs participate in
             ``plan_for``'s memo key, so fused and unfused plans of one
             model coexist.
+        devices: SHARDED execution mode — ``None`` (default) compiles a
+            single-device plan; an int ``k`` or a sequence of
+            ``jax.Device``/device ids (see :func:`resolve_devices`) wraps
+            the whole-plan forward in ``shard_map`` over a 1-D batch
+            mesh: the padded bucket splits evenly across the devices and
+            the bank operands replicate (they are KiB-scale). Outputs
+            are bit-exact with the single-device plan. Every bucket size
+            must divide by the device count (``ValueError`` at build).
+            Participates in ``plan_for``'s memo key, so sharded and
+            single-device plans of one model coexist.
 
     The plan freezes ALL model state at build time — banks and non-bank
     attributes alike (RNN window, CNN nam/out_bias, CNN-L
@@ -885,19 +1017,19 @@ def build_plan(
               strategy=strategy)
     if isinstance(model, PegasusLinear):
         plan = _sequential_plan([model], backend, kw, bucket_sizes, fuse,
-                                fuse_nmax_cap)
+                                fuse_nmax_cap, devices)
     elif isinstance(model, (list, tuple)):
         if not all(isinstance(l, PegasusLinear) for l in model):
             raise TypeError("bank list must contain only PegasusLinear")
         plan = _sequential_plan(model, backend, kw, bucket_sizes, fuse,
-                                fuse_nmax_cap)
+                                fuse_nmax_cap, devices)
     elif hasattr(model, "x_banks") and hasattr(model, "h_banks"):
-        plan = _rnn_plan(model, backend, kw, bucket_sizes)
+        plan = _rnn_plan(model, backend, kw, bucket_sizes, devices)
     elif hasattr(model, "emb_tree") and hasattr(model, "logit_lut"):
-        plan = _cnn_l_plan(model, backend, kw, bucket_sizes)
+        plan = _cnn_l_plan(model, backend, kw, bucket_sizes, devices)
     elif hasattr(model, "window_bank"):
         plan = _cnn_plan(model, backend, kw, bucket_sizes, fuse,
-                         fuse_nmax_cap)
+                         fuse_nmax_cap, devices)
     else:
         raise TypeError(f"don't know how to compile {type(model).__name__} into a plan")
     # the non-bank state the plan froze at build — plan_for compares this

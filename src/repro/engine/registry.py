@@ -51,6 +51,7 @@ from .plan import (
     _model_banks,
     _model_key,
     build_plan,
+    resolve_devices,
 )
 from repro.kernels.fuzzy_lut.kernel import default_interpret
 
@@ -120,6 +121,10 @@ class PlanRegistry:
         kw["fuse"] = bool(kw.get("fuse", True))
         cap = kw.get("fuse_nmax_cap", DEFAULT_FUSE_NMAX_CAP)
         kw["fuse_nmax_cap"] = None if cap is None else int(cap)
+        # devices participates in the key as the resolved Device tuple, so
+        # devices=2 and devices=jax.devices()[:2] share one plan, and an
+        # absent kwarg keys identically to devices=None (single-device)
+        kw["devices"] = resolve_devices(kw.get("devices"))
         key = _model_key(model, interpret, kw)
         while True:
             with self._lock:

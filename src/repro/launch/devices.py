@@ -1,0 +1,171 @@
+"""DeviceStreamPool: N per-device executor streams behind one submit().
+
+The multi-device serving fan-out (ROADMAP "Multi-device sharded serving"):
+ONE WFQ pull loop drains the scheduler and hands each bucket-aligned chunk
+to this pool, which places it on the **least-loaded device** — the device
+with the fewest *pending flows* (queued + in-flight), ties broken by
+lowest device index so placement is deterministic and testable. Each
+device owns a daemon worker thread and a FIFO deque; a chunk dispatched
+to device *i* runs ``fn(device_i)`` on that worker (the plan call inside
+does ``device_put`` of state + operands, so the XLA execution is pinned
+to that stream). Futures are the hand-off: ``submit`` returns a
+``concurrent.futures.Future`` that the worker resolves with the result or
+the exception.
+
+Why flows and not chunk count: chunks are bucket-padded and ragged
+(17-flow and 512-flow chunks cost very differently), so queue depth in
+chunks is a poor load signal; pending flow count tracks actual work.
+
+This is deliberately engine-agnostic — ``fn`` is any callable taking a
+device. The serving layer passes ``lambda d: plan(*chunk, backend=be,
+device=d)``; tests pass stubs.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+__all__ = ["DeviceStreamPool"]
+
+
+class _Stream:
+    """One device's executor: worker thread + FIFO + load counters."""
+
+    __slots__ = ("device", "index", "q", "pending_flows", "dispatched_chunks",
+                 "dispatched_flows", "busy_s", "errors")
+
+    def __init__(self, device, index: int):
+        self.device = device
+        self.index = index
+        self.q: deque = deque()
+        self.pending_flows = 0       # queued + in-flight flows (load signal)
+        self.dispatched_chunks = 0
+        self.dispatched_flows = 0
+        self.busy_s = 0.0
+        self.errors = 0
+
+
+class DeviceStreamPool:
+    """Per-device worker threads with least-loaded-by-flows placement."""
+
+    def __init__(self, devices):
+        devices = tuple(devices)
+        if not devices:
+            raise ValueError("DeviceStreamPool needs at least one device")
+        self._streams = tuple(_Stream(d, i) for i, d in enumerate(devices))
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._closed = False
+        self._t0 = time.perf_counter()
+        self._threads = []
+        for s in self._streams:
+            t = threading.Thread(target=self._run, args=(s,),
+                                 name=f"device-stream-{s.index}", daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    @property
+    def devices(self) -> tuple:
+        return tuple(s.device for s in self._streams)
+
+    def __len__(self) -> int:
+        return len(self._streams)
+
+    # -- placement -----------------------------------------------------------
+
+    def _least_loaded(self) -> _Stream:
+        # min pending flows, tie → lowest index (deque order is stable, and
+        # min() keeps the first minimum, so index order IS the tiebreak)
+        return min(self._streams, key=lambda s: s.pending_flows)
+
+    def submit(self, fn, flows: int) -> Future:
+        """Place ``fn(device)`` on the least-loaded stream; returns a Future.
+
+        ``flows`` is the work size used for the load signal — pass the
+        chunk's flow count (NOT the padded bucket size: the caller knows
+        the real rows, and padding is uniform per bucket anyway).
+        """
+        fut: Future = Future()
+        with self._work:
+            if self._closed:
+                raise RuntimeError("DeviceStreamPool is closed")
+            s = self._least_loaded()
+            s.pending_flows += int(flows)
+            s.q.append((fn, int(flows), fut))
+            self._work.notify_all()
+        return fut
+
+    # -- worker --------------------------------------------------------------
+
+    def _run(self, s: _Stream) -> None:
+        while True:
+            with self._work:
+                while not s.q and not self._closed:
+                    self._work.wait()
+                if not s.q and self._closed:
+                    return
+                fn, flows, fut = s.q.popleft()
+            if not fut.set_running_or_notify_cancel():
+                with self._lock:
+                    s.pending_flows -= flows
+                continue
+            t0 = time.perf_counter()
+            try:
+                out = fn(s.device)
+            except BaseException as exc:  # noqa: BLE001 — future carries it
+                with self._lock:
+                    s.pending_flows -= flows
+                    s.errors += 1
+                    s.busy_s += time.perf_counter() - t0
+                fut.set_exception(exc)
+            else:
+                with self._lock:
+                    s.pending_flows -= flows
+                    s.dispatched_chunks += 1
+                    s.dispatched_flows += flows
+                    s.busy_s += time.perf_counter() - t0
+                fut.set_result(out)
+
+    # -- ops surface ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        """``{"count": N, "per_device": [{...}, ...]}`` — the ``devices``
+        section of the unified server ``stats()`` schema."""
+        elapsed = max(time.perf_counter() - self._t0, 1e-9)
+        with self._lock:
+            return {
+                "count": len(self._streams),
+                "per_device": [
+                    {
+                        "device": str(s.device),
+                        "dispatched_chunks": s.dispatched_chunks,
+                        "dispatched_flows": s.dispatched_flows,
+                        "queue_depth": len(s.q),
+                        "pending_flows": s.pending_flows,
+                        "errors": s.errors,
+                        "busy_ms": s.busy_s * 1e3,
+                        "utilization": s.busy_s / elapsed,
+                    }
+                    for s in self._streams
+                ],
+            }
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Stop accepting work, let queued work finish, join the workers."""
+        with self._work:
+            if self._closed:
+                return
+            self._closed = True
+            self._work.notify_all()
+        for t in self._threads:
+            t.join(timeout=timeout)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,96 @@
+"""Typed request/result surface for the serving runtime.
+
+The serving API grew three divergent call shapes across PRs 3-6:
+``infer(name, *inputs)``, ``submit(name, *inputs, deadline_ms=...)`` and
+``serve([(name, inputs, deadline_ms), ...])`` tuple triples. This module
+is the single replacement: every server entry point routes through
+:class:`InferRequest` in and :class:`InferResult` out, and the legacy
+shapes survive only as thin deprecated shims (see ``serve.py``).
+
+Design notes:
+
+* ``InferRequest`` is frozen — a request is a value, safe to share across
+  the submitting thread, the WFQ queues and the drain/device threads.
+  ``inputs`` is always a tuple (a bare array normalizes to a 1-tuple in
+  ``__post_init__``); multi-operand models (the RNN takes ``(x, h0)``
+  style streams in principle) pass longer tuples unchanged.
+* ``priority`` is *per-request* urgency layered on top of the per-model
+  WFQ class: within one model's queue, ``high`` requests jump ahead of
+  ``normal`` ahead of ``low`` (see ``WFQScheduler.submit``). It does NOT
+  change the cross-model weight — that stays the registration-time
+  priority class.
+* ``InferResult`` carries the output plus the serving telemetry a client
+  would otherwise scrape out of ``stats()``: flow count and observed
+  queue wait. ``result.output`` is the raw array for callers that only
+  want the tensor.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+__all__ = ["InferRequest", "InferResult", "PRIORITIES"]
+
+#: Valid per-request priorities, in ascending urgency.
+PRIORITIES = ("low", "normal", "high")
+
+
+@dataclass(frozen=True)
+class InferRequest:
+    """One inference request: which model, what inputs, how urgent.
+
+    Parameters
+    ----------
+    model:
+        Registered model name (``MultiModelServer``) — ignored by the
+        single-model ``PegasusServer``, where it may be left as ``""``.
+    inputs:
+        One array or a tuple of arrays (leading axis = flows). A bare
+        array is normalized to a 1-tuple.
+    deadline_ms:
+        Optional end-to-end latency budget in milliseconds. Requests
+        predicted or observed to miss it are shed with
+        ``DeadlineExceededError`` (PR-6 semantics, unchanged).
+    priority:
+        Per-request urgency within the model's queue: ``"low"`` |
+        ``"normal"`` | ``"high"``.
+    """
+
+    model: str
+    inputs: Any
+    deadline_ms: float | None = None
+    priority: str = "normal"
+
+    def __post_init__(self):
+        if self.priority not in PRIORITIES:
+            raise ValueError(
+                f"priority must be one of {PRIORITIES}, got {self.priority!r}")
+        if not isinstance(self.inputs, tuple):
+            object.__setattr__(
+                self, "inputs",
+                tuple(self.inputs) if isinstance(self.inputs, list)
+                else (self.inputs,))
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got {self.deadline_ms}")
+
+    @property
+    def flows(self) -> int:
+        """Number of flows (batch rows) this request carries."""
+        return int(self.inputs[0].shape[0])
+
+
+@dataclass(frozen=True)
+class InferResult:
+    """One served response: the output plus its serving telemetry.
+
+    ``output`` is the model's output array for this request's rows.
+    ``flows`` is the batch-row count served. ``queue_wait_ms`` is the
+    submit→dispatch wait observed by the scheduler (``None`` on paths
+    that bypass the scheduler, e.g. ``PegasusServer.infer``).
+    """
+
+    model: str
+    output: Any
+    flows: int
+    queue_wait_ms: float | None = field(default=None, compare=False)

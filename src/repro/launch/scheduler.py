@@ -79,6 +79,7 @@ import numpy as np
 
 __all__ = [
     "LATENCY_WINDOW",
+    "PRIORITY_RANK",
     "PRIORITY_WEIGHTS",
     "DeadlineExceededError",
     "ModelQueue",
@@ -139,22 +140,31 @@ class DeadlineExceededError(RuntimeError):
 _EWMA_ALPHA = 0.3
 
 
+#: Per-REQUEST urgency rank within one model's queue (orthogonal to the
+#: per-model PRIORITY_WEIGHTS class that sets the cross-model WFQ share):
+#: a submit with a higher rank queue-jumps ahead of strictly-lower-rank
+#: entries, FIFO among equals.
+PRIORITY_RANK = {"low": 0, "normal": 1, "high": 2}
+
+
 class _Request:
     """One queued request: the input tuple plus its lifecycle stamps.
     ``deadline_ms`` is the completion budget in milliseconds from submit
-    (None = no deadline: never shed, never admission-checked)."""
+    (None = no deadline: never shed, never admission-checked); ``rank``
+    is the per-request urgency (:data:`PRIORITY_RANK`)."""
 
     __slots__ = ("inputs", "size", "future", "deadline_ms",
-                 "t_submit", "t_dispatch")
+                 "t_submit", "t_dispatch", "rank")
 
     def __init__(self, inputs: tuple, size: int, future: Future | None,
-                 deadline_ms: float | None = None):
+                 deadline_ms: float | None = None, rank: int = 1):
         self.inputs = inputs
         self.size = size
         self.future = future
         self.deadline_ms = deadline_ms
         self.t_submit = time.perf_counter()
         self.t_dispatch = 0.0
+        self.rank = rank
 
 
 class ModelQueue:
@@ -328,12 +338,19 @@ class WFQScheduler:
     def submit(self, name: str, inputs: tuple, size: int, *,
                future: Future | None = None,
                timeout: float | None = None,
-               deadline_ms: float | None = None) -> int:
-        """Enqueue one request; returns its queue position at append time.
+               deadline_ms: float | None = None,
+               priority: str = "normal") -> int:
+        """Enqueue one request; returns its queue position at insert time.
 
         ``size`` is the request's flow count (its leading batch dim — the
         unit every scheduling quantity is denominated in); ``timeout`` is
         in seconds, ``deadline_ms`` in milliseconds from NOW to completion.
+        ``priority`` is the PER-REQUEST urgency within this model's queue
+        (:data:`PRIORITY_RANK`): a ``"high"`` request is inserted ahead of
+        every queued ``normal``/``low`` entry (FIFO among equal ranks);
+        the default ``"normal"`` path stays an O(1) append whenever the
+        queue tail is not lower-ranked. Cross-MODEL share is still the
+        queue's weight class — this knob never changes it.
 
         Failure modes, in check order:
 
@@ -353,6 +370,12 @@ class WFQScheduler:
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(f"deadline_ms must be > 0 or None, "
                              f"got {deadline_ms}")
+        try:
+            rank = PRIORITY_RANK[priority]
+        except KeyError:
+            raise ValueError(
+                f"priority must be one of {tuple(PRIORITY_RANK)}, "
+                f"got {priority!r}") from None
         with self._lock:
             q = self._queues[name]
             rate = self._rate.get(name)
@@ -394,12 +417,21 @@ class WFQScheduler:
                             f"model {name!r} was removed while its queue "
                             "was full")
                     q = self._queues[name]
-            req = _Request(inputs, int(size), future, deadline_ms)
-            q.reqs.append(req)
+            req = _Request(inputs, int(size), future, deadline_ms, rank)
+            pos = len(q.reqs)
+            if rank > 0 and pos and q.reqs[-1].rank < rank:
+                # queue-jump: slot ahead of every strictly-lower-rank entry
+                # (scan from the back so equal ranks stay FIFO); the default
+                # all-normal queue never enters this branch
+                while pos > 0 and q.reqs[pos - 1].rank < rank:
+                    pos -= 1
+                q.reqs.insert(pos, req)
+            else:
+                q.reqs.append(req)
             q.flows += req.size
             self._ctr(name)["admitted"] += 1
             self._work.notify_all()
-            return len(q.reqs) - 1
+            return pos
 
     def requeue_front(self, name: str, reqs: list[_Request]) -> None:
         """Put a failed slice back at the FRONT of its queue, in order —

@@ -40,6 +40,7 @@ import argparse
 import asyncio
 import threading
 import time
+import warnings
 from collections import deque
 from concurrent.futures import Future
 
@@ -53,14 +54,56 @@ from repro.models.transformer import (
     decode_step, forward_train, init_decode_state, init_model,
 )
 
+from .devices import DeviceStreamPool
 from .mesh import batch_specs, decode_state_specs, named, param_specs
+from .request import InferRequest, InferResult
 from .scheduler import (
     PRIORITY_WEIGHTS, DeadlineExceededError, QueueFullError, WFQScheduler,
 )
 
 __all__ = ["make_serve_step", "make_prefill_step", "Server", "PegasusServer",
            "MultiModelServer", "AsyncMultiModelServer", "PartialDrainError",
-           "QueueFullError", "DeadlineExceededError", "PRIORITY_WEIGHTS"]
+           "QueueFullError", "DeadlineExceededError", "PRIORITY_WEIGHTS",
+           "InferRequest", "InferResult", "DeviceStreamPool"]
+
+
+def _warn_legacy(what: str, instead: str) -> None:
+    """One DeprecationWarning per call site (the default filter dedupes by
+    location) for the pre-typed call shapes — kept as working shims."""
+    warnings.warn(
+        f"{what} is deprecated; {instead} (see repro.launch.request)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _as_requests(requests, *, named: bool) -> tuple[list, bool]:
+    """Normalize a ``serve()`` argument into ``(list[InferRequest], typed)``.
+
+    Typed calls pass :class:`InferRequest` items through unchanged. Legacy
+    items — bare arrays / input tuples when ``named=False``
+    (``PegasusServer``), ``(name, inputs[, deadline_ms])`` triples when
+    ``named=True`` (``MultiModelServer``) — are wrapped; the caller emits
+    the deprecation warning. Mixing the two shapes in one list is a
+    ``TypeError`` (the return type would be ambiguous)."""
+    items = list(requests)
+    if not items:
+        return [], True
+    n_typed = sum(isinstance(r, InferRequest) for r in items)
+    if n_typed == len(items):
+        return items, True
+    if n_typed:
+        raise TypeError(
+            "serve() got a mix of InferRequest and legacy-shaped items — "
+            "pass one or the other, not both")
+    out = []
+    for item in items:
+        if named:
+            name, inputs = item[0], item[1]
+            deadline_ms = item[2] if len(item) > 2 else None
+            out.append(InferRequest(name, inputs, deadline_ms=deadline_ms))
+        else:   # the item IS the inputs (single array or input tuple)
+            inputs = tuple(item) if isinstance(item, (tuple, list)) else item
+            out.append(InferRequest("", inputs))
+    return out, False
 
 
 class PartialDrainError(RuntimeError):
@@ -212,16 +255,33 @@ class PegasusServer:
                           else max_batch)
         self.requests_served = 0
         self.batches_run = 0
+        self.flows_served = 0
 
     def stats(self) -> dict:
-        """Serving + compile-cache counters (the ops surface: a bucket_hits
-        to traces ratio near 1:1 means the bucket ladder is mis-sized)."""
+        """Unified serving-stats schema (shared across all three servers —
+        see docs/SERVING.md): ``serving`` carries the request counters,
+        ``engine`` the plan build + compile-cache stats (a bucket_hits to
+        traces ratio near 1:1 means the bucket ladder is mis-sized);
+        ``scheduler``/``slo`` are empty here (no queueing on this server)
+        and ``devices`` reports the plan's device count."""
+        ndev = 1 if self.plan.devices is None else len(self.plan.devices)
         return {
             "backend": self.backend,
-            "plan_build_ms": self.plan_build_ms,
-            "requests_served": self.requests_served,
-            "batches_run": self.batches_run,
-            **self.plan.compile_stats(),
+            "serving": {
+                "requests_served": self.requests_served,
+                "batches_run": self.batches_run,
+                "flows_served": self.flows_served,
+                "batches_dispatched": self.batches_run,
+            },
+            "engine": {
+                "plan_build_ms": self.plan_build_ms,
+                "num_banks": self.plan.num_banks,
+                "table_bytes": self.plan.table_bytes(),
+                **self.plan.compile_stats(),
+            },
+            "scheduler": {},
+            "slo": {},
+            "devices": {"count": ndev, "per_device": []},
         }
 
     def infer(self, *inputs, backend: str | None = None) -> jax.Array:
@@ -229,15 +289,28 @@ class PegasusServer:
         y = self.plan(*inputs, backend=backend)
         self.batches_run += 1            # success-only counting
         self.requests_served += 1
+        self.flows_served += int(np.shape(inputs[0])[0])
         return y
 
-    def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
-        """Fuse a list of requests into bucket-aligned batches, split results."""
+    def serve(self, requests, *, backend: str | None = None) -> list:
+        """Fuse a list of requests into bucket-aligned batches, split results.
+
+        The typed surface: a list of :class:`InferRequest` returns a list
+        of :class:`InferResult` (request order). This server dispatches
+        immediately — there is no queue, so ``deadline_ms``/``priority``
+        on the requests are accepted but have nothing to act on (use
+        ``MultiModelServer`` for scheduled serving). The legacy shape — a
+        list of bare arrays / input tuples returning raw ``np.ndarray``
+        outputs — still works as a deprecated shim."""
         from repro.engine import bucket_chunks
 
-        if not requests:
+        reqs, typed = _as_requests(requests, named=False)
+        if not reqs:
             return []
-        cat, sizes, total = _coalesce(requests)
+        if not typed:
+            _warn_legacy("PegasusServer.serve(list of arrays)",
+                         "pass a list of InferRequest")
+        cat, sizes, total = _coalesce([r.inputs for r in reqs])
         chunks, start = [], 0
         for size in bucket_chunks(total, self.plan.buckets, self.max_batch):
             sl = (cat if size == total
@@ -249,7 +322,12 @@ class PegasusServer:
         # later chunk must not leave batches_run ahead of requests_served
         self.batches_run += len(chunks)
         self.requests_served += len(sizes)
-        return _split(out, sizes)
+        self.flows_served += total
+        split = _split(out, sizes)
+        if not typed:
+            return split
+        return [InferResult(r.model, o, n)
+                for r, o, n in zip(reqs, split, sizes)]
 
 
 def _coalesce(requests) -> tuple[list, list[int], int]:
@@ -316,10 +394,21 @@ class MultiModelServer:
                  interpret: bool | None = None, max_batch: int | None = None,
                  registry=None, fuse: bool = True,
                  queue_depth: int | None = None, policy: str = "block",
-                 quantum: int | None = None):
+                 quantum: int | None = None, devices=None):
         from repro.engine import DEFAULT_BUCKETS, PlanRegistry
+        from repro.engine.plan import resolve_devices
 
         self.registry = PlanRegistry() if registry is None else registry
+        # devices: fan dispatch out across N device streams — each pulled
+        # chunk is placed on the least-loaded device's executor queue and
+        # runs there via per-call placement (plan state replicated per
+        # device, see ExecutionPlan.__call__(device=)). None (the default)
+        # keeps the single-stream inline dispatch; an EXPLICIT devices=1
+        # still gets a one-stream pool so scaling comparisons across K run
+        # one code path (the sharding bench gates K=4 against K=1).
+        self.devices = resolve_devices(devices)
+        self._pool = (DeviceStreamPool(self.devices)
+                      if self.devices else None)
         self.backend = backend
         self.interpret = interpret
         self.fuse = fuse    # cross-bank fusion default for add_model plans
@@ -441,56 +530,72 @@ class MultiModelServer:
 
     # -- request paths ------------------------------------------------------
 
-    def infer(self, name: str, *inputs, backend: str | None = None):
+    def infer(self, request, *legacy_inputs, backend: str | None = None):
         """Immediate single-request dispatch through the named plan — no
         queueing, no coalescing, no deadline (the request runs NOW on the
-        calling thread). ``inputs`` carry a leading batch dim; ``backend``
-        optionally overrides the plan's compiled backend for this call.
-        Raises ``KeyError`` for an unknown name; plan errors (bad shape,
-        unknown backend) propagate without touching the counters."""
+        calling thread; a typed request's ``deadline_ms``/``priority``
+        have no queue to act on). ``backend`` optionally overrides the
+        plan's compiled backend for this call.
+
+        The typed surface takes one :class:`InferRequest` and returns an
+        :class:`InferResult`; the legacy ``infer(name, *inputs)`` shape
+        (raw output, deprecated) still works. Raises ``KeyError`` for an
+        unknown name; plan errors (bad shape, unknown backend) propagate
+        without touching the counters."""
+        if isinstance(request, InferRequest):
+            if legacy_inputs:
+                raise TypeError(
+                    "infer(InferRequest) takes no extra positional inputs "
+                    "— they ride in request.inputs")
+            name, inputs = request.model, request.inputs
+        else:
+            _warn_legacy("MultiModelServer.infer(name, *inputs)",
+                         "pass an InferRequest")
+            name, inputs = request, legacy_inputs
         self._tracked(name)
         y = self.registry.get(name)(*inputs, backend=backend)
+        flows = int(np.shape(inputs[0])[0])
         with self._ctr_lock:
             c = self._counters[name]
             c["requests_served"] += 1    # success-only counting
             c["batches_run"] += 1
-            c["flows_served"] += int(np.shape(inputs[0])[0])
+            c["flows_served"] += flows
+        if isinstance(request, InferRequest):
+            return InferResult(name, y, flows)
         return y
 
     def _enqueue(self, name: str, inputs: tuple, future: Future | None,
                  timeout: float | None,
-                 deadline_ms: float | None = None) -> int:
+                 deadline_ms: float | None = None,
+                 priority: str = "normal") -> int:
         self._tracked(name)
         inputs = tuple(x if isinstance(x, jax.Array) else jnp.asarray(x)
                        for x in inputs)
         return self._sched.submit(name, inputs, int(np.shape(inputs[0])[0]),
                                   future=future, timeout=timeout,
-                                  deadline_ms=deadline_ms)
+                                  deadline_ms=deadline_ms, priority=priority)
 
-    def submit(self, name: str, *inputs, timeout: float | None = None,
+    def submit(self, request, *legacy_inputs, timeout: float | None = None,
                deadline_ms: float | None = None) -> int:
-        """Enqueue one request for the next :meth:`drain`.
+        """Enqueue one :class:`InferRequest` for the next :meth:`drain`.
 
         Args:
-            name: a registered model name (:meth:`add_model` /
-                pre-populated registry). Unknown names raise ``KeyError``.
-            *inputs: the request arrays, each with a LEADING BATCH DIM
-                (wrap a single flow as ``x[None]``); multi-input models
-                (e.g. CNN-L) take their inputs positionally.
+            request: the typed request — model name, input arrays (each
+                with a LEADING BATCH DIM; wrap a single flow as
+                ``x[None]``; multi-input models like CNN-L pass an input
+                tuple), optional ``deadline_ms`` budget, and per-request
+                ``priority`` (queue-jump within this model's queue — see
+                :data:`~repro.launch.scheduler.PRIORITY_RANK`). The legacy
+                ``submit(name, *inputs, deadline_ms=...)`` shape still
+                works as a deprecated shim.
             timeout: seconds to wait for queue space when the model queue
                 is bounded with ``policy="block"``; ``None`` waits forever.
                 Expiry raises :class:`QueueFullError`.
-            deadline_ms: optional end-to-end latency budget in
-                MILLISECONDS from this call. The scheduler sheds the
-                request at pull time once its queue-wait exceeds
-                ``deadline_ms`` minus the model's EWMA service time
-                (:class:`DeadlineExceededError` on the future, if any);
-                admission control may refuse it immediately with the same
-                error when the current backlog already predicts a miss.
-                ``None`` (default) never sheds.
+            deadline_ms: legacy-shape only (typed requests carry their own
+                ``deadline_ms``).
 
         Returns:
-            The request's queue position at append time (0-based).
+            The request's queue position at insert time (0-based).
 
         Raises:
             KeyError: unknown model name.
@@ -498,10 +603,22 @@ class MultiModelServer:
                 ``block`` timed out) — also raised at admission when the
                 queue's ``admit_ms`` horizon is exceeded.
             DeadlineExceededError: admission control predicts the deadline
-                cannot be met given the observed service rate.
+                cannot be met given the observed service rate (the
+                scheduler may also shed the queued request later at pull
+                time, failing its future with the same error).
             ValueError: non-positive ``deadline_ms``.
         """
-        return self._enqueue(name, inputs, None, timeout,
+        if isinstance(request, InferRequest):
+            if legacy_inputs or deadline_ms is not None:
+                raise TypeError(
+                    "submit(InferRequest) takes no extra inputs or "
+                    "deadline_ms — they ride in the request")
+            return self._enqueue(request.model, request.inputs, None,
+                                 timeout, deadline_ms=request.deadline_ms,
+                                 priority=request.priority)
+        _warn_legacy("MultiModelServer.submit(name, *inputs)",
+                     "pass an InferRequest")
+        return self._enqueue(request, legacy_inputs, None, timeout,
                              deadline_ms=deadline_ms)
 
     def pending(self) -> dict[str, int]:
@@ -530,8 +647,11 @@ class MultiModelServer:
         caller begins every group in the round before finishing any, which
         keeps the device pipeline full across models (blocking on model A's
         results before dispatching model B serialized the round and cost
-        ~2x aggregate throughput). Returns a group record; a dispatch
-        failure rides in its ``"error"`` key."""
+        ~2x aggregate throughput). With a multi-device pool, each chunk is
+        instead handed to the LEAST-LOADED device stream (fewest pending
+        flows, ties → lowest device index) and ``outs`` holds the pool
+        futures. Returns a group record; a dispatch failure rides in its
+        ``"error"`` key."""
         from repro.engine import bucket_chunks
 
         t0 = time.perf_counter()
@@ -549,7 +669,16 @@ class MultiModelServer:
             for size in chunks:
                 sl = (cat if start == 0 and size == total
                       else [c[start : start + size] for c in cat])
-                outs.append(plan(*sl, backend=backend))
+                if self._pool is None:
+                    outs.append(plan(*sl, backend=backend))
+                else:
+                    # the chunk runs on whichever stream has the least
+                    # pending work; np conversion happens ON that worker so
+                    # the block is off this thread too
+                    outs.append(self._pool.submit(
+                        lambda d, plan=plan, sl=tuple(sl): np.asarray(
+                            plan(*sl, backend=backend, device=d)),
+                        size))
                 self.schedule_log.append(name)
                 self.batches_dispatched += 1
                 start += size
@@ -571,9 +700,20 @@ class MultiModelServer:
         if err is None:
             t_finish = time.perf_counter()
             try:
-                out = (jnp.concatenate(g["outs"], axis=0)
-                       if len(g["outs"]) > 1 else g["outs"][0])
-                split = _split(out, g["sizes"])  # np conversion: sync point
+                if self._pool is not None:
+                    # pool mode: outs are futures of per-chunk NP arrays on
+                    # DIFFERENT devices — concatenate on the host (jnp
+                    # would refuse to mix committed devices)
+                    arrs = [f.result() for f in g["outs"]]
+                    out = (np.concatenate(arrs, axis=0)
+                           if len(arrs) > 1 else arrs[0])
+                    split = ([out] if len(g["sizes"]) == 1 else
+                             np.split(out, np.cumsum(g["sizes"])[:-1],
+                                      axis=0))
+                else:
+                    out = (jnp.concatenate(g["outs"], axis=0)
+                           if len(g["outs"]) > 1 else g["outs"][0])
+                    split = _split(out, g["sizes"])  # np conversion: sync
             except Exception as e:
                 err = e
         if err is not None:
@@ -602,6 +742,10 @@ class MultiModelServer:
                 c["batches_run"] += g["batches"]
                 c["flows_served"] += g["total"]
         for r, o in zip(reqs, split):
+            if r.future is not None:
+                # observed submit→dispatch wait, for InferResult
+                # telemetry: the typed paths read it off the settled future
+                r.future.queue_wait_ms = (r.t_dispatch - r.t_submit) * 1e3
             _resolve_future(r.future, result=o)
         return split
 
@@ -650,20 +794,21 @@ class MultiModelServer:
             raise next(iter(self.last_drain_errors.values()))
         return results
 
-    def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
+    def serve(self, requests, *, backend: str | None = None) -> list:
         """Mixed-model convenience: submit everything, drain, return
-        outputs aligned to the request order.
+        results aligned to the request order.
 
         Args:
-            requests: a list of ``(name, inputs)`` or
-                ``(name, inputs, deadline_ms)`` tuples — ``inputs`` a
-                single array or a tuple of arrays (each with a leading
-                batch dim), ``deadline_ms`` an optional per-request budget
-                in milliseconds (see :meth:`submit`).
+            requests: a list of :class:`InferRequest` (the typed surface —
+                per-request ``deadline_ms`` and ``priority`` honored,
+                returns :class:`InferResult` per request). The legacy
+                shape — ``(name, inputs)`` / ``(name, inputs,
+                deadline_ms)`` tuples returning raw outputs — still works
+                as a deprecated shim.
             backend: per-drain engine backend override (sync drain only).
 
         Returns:
-            One output per request, in request order — only when EVERY
+            One result per request, in request order — only when EVERY
             request served.
 
         Raises:
@@ -676,64 +821,92 @@ class MultiModelServer:
                 computed and only the failed/shed requests need
                 resubmitting.
         """
-        order: list[tuple[str, Future]] = []
-        for item in requests:
-            name, inputs = item[0], item[1]
-            deadline_ms = item[2] if len(item) > 2 else None
-            inputs = tuple(inputs) if isinstance(inputs, (tuple, list)) else (inputs,)
+        reqs, typed = _as_requests(requests, named=True)
+        if not typed:
+            _warn_legacy("MultiModelServer.serve(list of (name, inputs) "
+                         "tuples)", "pass a list of InferRequest")
+        order: list[tuple[InferRequest, Future]] = []
+        for req in reqs:
             # a private future per request keeps served/shed alignment
             # robust: drain()'s per-model lists exclude shed requests, so
             # the old positional indexing into them would mis-align
             fut: Future = Future()
             try:
-                self._enqueue(name, inputs, fut, None,
-                              deadline_ms=deadline_ms)
+                self._enqueue(req.model, req.inputs, fut, None,
+                              deadline_ms=req.deadline_ms,
+                              priority=req.priority)
             except DeadlineExceededError as e:
                 _resolve_future(fut, error=e)   # admission refusal == shed
-            order.append((name, fut))
+            order.append((req, fut))
         by_model = self.drain(backend=backend)
         # a name in last_drain_errors did NOT fully serve — including a
         # model whose earlier slice landed in by_model before a later slice
         # failed (drain excludes it from then on), so membership in
         # by_model alone must not count as success
         failed = {name: self.last_drain_errors[name]
-                  for name in dict.fromkeys(n for n, _ in order)
+                  for name in dict.fromkeys(r.model for r, _ in order)
                   if name in self.last_drain_errors}
         shed: dict[str, list] = {}
-        for name, fut in order:
+        for req, fut in order:
             if fut.done():
                 exc = fut.exception()
                 if isinstance(exc, DeadlineExceededError):
-                    shed.setdefault(name, []).append(exc)
+                    shed.setdefault(req.model, []).append(exc)
         if failed or shed:
             cause = (next(iter(failed.values())) if failed
                      else next(iter(shed.values()))[0])
             raise PartialDrainError(failed, by_model, shed=shed) from cause
-        return [fut.result() for _, fut in order]
+        if not typed:
+            return [fut.result() for _, fut in order]
+        return [InferResult(req.model, fut.result(), req.flows,
+                            queue_wait_ms=getattr(fut, "queue_wait_ms", None))
+                for req, fut in order]
+
+    def close(self) -> None:
+        """Release the per-device executor threads (multi-device servers
+        only; a no-op otherwise). Queued device work finishes first."""
+        if self._pool is not None:
+            self._pool.close()
 
     def stats(self) -> dict:
-        """Per-model serving counters merged with the registry's per-plan
-        compile-cache stats, the scheduler's latency percentiles, and the
-        scheduler's SLO counters (admission/shed/goodput/starvation —
-        under each model's ``"slo"`` key), plus the memo cache_info and
-        the scheduling config. Field-by-field reference: docs/SERVING.md."""
+        """The unified serving-stats schema (shared with ``PegasusServer``
+        and ``AsyncMultiModelServer`` — field-by-field reference in
+        docs/SERVING.md): ``serving`` carries the per-model + aggregate
+        request counters, ``engine`` the registry cache plus per-model
+        plan build/compile-cache stats, ``scheduler`` the queue config and
+        latency percentiles, ``slo`` the per-model SLO counters
+        (admission/shed/goodput/starvation), and ``devices`` the
+        per-device stream utilization/depth (multi-device servers)."""
         reg = self.registry.stats()
-        lat = self._sched.latency_stats()
-        slo = self._sched.counters()
         zeros = {"requests_served": 0, "batches_run": 0, "flows_served": 0}
+        with self._ctr_lock:
+            # zeroed defaults keep the schema uniform for names on a
+            # shared registry that this server hasn't served yet
+            per_model = {name: {**zeros, **self._counters.get(name, {})}
+                         for name in self.models()}
         return {
-            "models": {
-                # zeroed defaults keep the schema uniform for names on a
-                # shared registry that this server hasn't served yet
-                name: {**zeros, **self._counters.get(name, {}),
-                       **reg.get(name, {}),
-                       **({"latency": lat[name]} if name in lat else {}),
-                       **({"slo": slo[name]} if name in slo else {})}
-                for name in self.models()
+            "backend": self.backend,
+            "serving": {
+                "requests_served": sum(m["requests_served"]
+                                       for m in per_model.values()),
+                "batches_run": sum(m["batches_run"]
+                                   for m in per_model.values()),
+                "flows_served": sum(m["flows_served"]
+                                    for m in per_model.values()),
+                "batches_dispatched": self.batches_dispatched,
+                "models": per_model,
             },
-            "cache": self.registry.cache_info(),
-            "batches_dispatched": self.batches_dispatched,
-            "scheduler": self._sched.describe(),
+            "engine": {
+                "cache": self.registry.cache_info(),
+                "models": reg,
+            },
+            "scheduler": {
+                "models": self._sched.describe(),
+                "latency": self._sched.latency_stats(),
+            },
+            "slo": {"models": self._sched.counters()},
+            "devices": (self._pool.stats() if self._pool is not None
+                        else {"count": 1, "per_device": []}),
         }
 
     def slo_counters(self) -> dict:
@@ -863,32 +1036,70 @@ class AsyncMultiModelServer(MultiModelServer):
 
     # -- ingestion ----------------------------------------------------------
 
-    def submit(self, name: str, *inputs, timeout: float | None = None,
+    def _typed_future(self, req: InferRequest, raw: Future) -> Future:
+        """Wrap a raw-output future into one resolving to
+        :class:`InferResult` (errors/cancellation pass through)."""
+        out: Future = Future()
+
+        def _done(f: Future) -> None:
+            if f.cancelled():
+                out.cancel()
+                return
+            exc = f.exception()
+            if exc is not None:
+                _resolve_future(out, error=exc)
+            else:
+                _resolve_future(out, result=InferResult(
+                    req.model, f.result(), req.flows,
+                    queue_wait_ms=getattr(f, "queue_wait_ms", None)))
+
+        raw.add_done_callback(_done)
+        return out
+
+    def submit(self, request, *legacy_inputs, timeout: float | None = None,
                deadline_ms: float | None = None) -> Future:
-        """Thread-safe enqueue; returns a
-        :class:`concurrent.futures.Future` of the request's np output.
-        Parameters and failure modes as :meth:`MultiModelServer.submit`
-        (``timeout`` in seconds for ``block`` backpressure;
-        ``deadline_ms`` in milliseconds), with one difference in how
-        deadline misses surface: a shed or admission-refused request FAILS
-        THE RETURNED FUTURE with :class:`DeadlineExceededError` instead of
+        """Thread-safe enqueue of one :class:`InferRequest`; returns a
+        :class:`concurrent.futures.Future` of its :class:`InferResult`
+        (the legacy ``submit(name, *inputs, deadline_ms=...)`` shape still
+        works as a deprecated shim whose future resolves to the raw np
+        output, as before). Parameters and failure modes as
+        :meth:`MultiModelServer.submit` (``timeout`` in seconds for
+        ``block`` backpressure), with one difference in how deadline
+        misses surface: a shed or admission-refused request FAILS THE
+        RETURNED FUTURE with :class:`DeadlineExceededError` instead of
         raising here (uniform handling at ``future.result()`` whether the
         miss was predicted at submit or happened in the queue). Dispatch
         errors also ride on the future — async requests are never
         requeued."""
         fut: Future = Future()
+        if isinstance(request, InferRequest):
+            if legacy_inputs or deadline_ms is not None:
+                raise TypeError(
+                    "submit(InferRequest) takes no extra inputs or "
+                    "deadline_ms — they ride in the request")
+            try:
+                self._enqueue(request.model, request.inputs, fut, timeout,
+                              deadline_ms=request.deadline_ms,
+                              priority=request.priority)
+            except DeadlineExceededError as e:
+                _resolve_future(fut, error=e)
+            return self._typed_future(request, fut)
+        _warn_legacy("AsyncMultiModelServer.submit(name, *inputs)",
+                     "pass an InferRequest")
         try:
-            self._enqueue(name, inputs, fut, timeout,
+            self._enqueue(request, legacy_inputs, fut, timeout,
                           deadline_ms=deadline_ms)
         except DeadlineExceededError as e:
             _resolve_future(fut, error=e)
         return fut
 
-    async def infer_async(self, name: str, *inputs,
+    async def infer_async(self, request, *legacy_inputs,
                           timeout: float | None = None,
                           deadline_ms: float | None = None):
-        """asyncio-native single request: ``await`` the np output from a
-        running event loop without blocking it.
+        """asyncio-native single request: ``await`` the
+        :class:`InferResult` for one :class:`InferRequest` from a running
+        event loop without blocking it (the legacy ``infer_async(name,
+        *inputs)`` shape awaits the raw output, deprecated).
 
         The enqueue itself runs in a worker thread
         (``asyncio.to_thread``) because ``policy="block"`` backpressure
@@ -903,17 +1114,19 @@ class AsyncMultiModelServer(MultiModelServer):
                 "server (or use it as a context manager) before "
                 "infer_async(), otherwise the await would never resolve")
         fut = await asyncio.to_thread(
-            self.submit, name, *inputs,
+            self.submit, request, *legacy_inputs,
             timeout=timeout, deadline_ms=deadline_ms)
         return await asyncio.wrap_future(fut)
 
-    def serve(self, requests, *, backend: str | None = None) -> list[np.ndarray]:
-        """Mixed-request convenience over futures: submits everything
-        (``(name, inputs)`` or ``(name, inputs, deadline_ms)`` tuples),
-        waits for the results in order. Unlike the sync server there is no
-        partial-result exception — each future fails independently (sheds
-        carry :class:`DeadlineExceededError`), so this raises the FIRST
-        failed request's error once all are settled."""
+    def serve(self, requests, *, backend: str | None = None) -> list:
+        """Mixed-request convenience over futures: submits everything —
+        a list of :class:`InferRequest` returning :class:`InferResult` per
+        request, or legacy ``(name, inputs[, deadline_ms])`` tuples
+        returning raw outputs (deprecated) — and waits for the results in
+        order. Unlike the sync server there is no partial-result exception
+        — each future fails independently (sheds carry
+        :class:`DeadlineExceededError`), so this raises the FIRST failed
+        request's error once all are settled."""
         if backend is not None:
             raise ValueError(
                 "AsyncMultiModelServer.serve dispatches via the background "
@@ -924,16 +1137,17 @@ class AsyncMultiModelServer(MultiModelServer):
                 "the background drain loop is not running — start() the "
                 "server (or use it as a context manager) before serve(), "
                 "otherwise the submitted futures would never resolve")
-        futs = []
-        for item in requests:
-            name, inputs = item[0], item[1]
-            deadline_ms = item[2] if len(item) > 2 else None
-            inputs = tuple(inputs) if isinstance(inputs, (tuple, list)) else (inputs,)
-            futs.append(self.submit(name, *inputs, deadline_ms=deadline_ms))
+        reqs, typed = _as_requests(requests, named=True)
+        if not typed:
+            _warn_legacy("AsyncMultiModelServer.serve(list of (name, "
+                         "inputs) tuples)", "pass a list of InferRequest")
+        futs = [self.submit(req) for req in reqs]   # always the typed path
         # settle EVERYTHING before raising (the documented contract): an
         # early failure must not leave later requests in flight while the
         # caller proceeds to resubmit/stop/inspect
         concurrent.futures.wait(futs)
+        if not typed:
+            return [f.result().output for f in futs]
         return [f.result() for f in futs]
 
     # -- the background loop ------------------------------------------------
@@ -983,15 +1197,16 @@ def _pegasus_demo(args) -> None:
           f"({server.plan.num_banks} banks, {st0['fused_groups']} fused "
           f"groups covering {st0['fused_banks']} banks, backend={args.backend})")
     x = ds.test["stats"].astype(np.float32)
-    requests = [x[i : i + args.batch] for i in range(0, min(len(x), 8 * args.batch), args.batch)]
+    requests = [InferRequest("mlp", x[i : i + args.batch])
+                for i in range(0, min(len(x), 8 * args.batch), args.batch)]
     server.serve(requests)  # warmup/compile
     t0 = time.perf_counter()
-    outs = server.serve(requests)
+    results = server.serve(requests)
     dt = time.perf_counter() - t0
-    flows = sum(len(o) for o in outs)
+    flows = sum(r.flows for r in results)
     print(f"served {len(requests)} requests ({flows} flows) in {dt * 1e3:.1f} ms "
           f"→ {flows / dt:.0f} flows/s on backend={args.backend}")
-    st = server.stats()
+    st = server.stats()["engine"]
     print(f"compile cache: {st['traces']} traces, {st['bucket_hits']} bucket "
           f"hits over {st['jit_calls']} jit calls; buckets={st['buckets']}")
 

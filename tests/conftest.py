@@ -1,0 +1,18 @@
+"""Test-session bootstrap: simulate a multi-device host.
+
+The sharding tests (tests/test_sharding.py) need more than one XLA device;
+on the CPU-only CI hosts that means forcing the host platform to expose
+several device streams. The flag must be in the environment BEFORE jax
+initializes its backends, so it is set here — conftest imports before any
+test module — and only when the caller has not already chosen their own
+XLA_FLAGS (the dedicated multi-device CI lane exports it explicitly).
+"""
+
+import os
+import sys
+
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()

@@ -14,7 +14,7 @@ from benchmarks.compare import compare, trajectory_table
 
 
 def _doc(per_call, batch=1024, families=None, multi=None, async_serve=None,
-         overload=None):
+         overload=None, sharding=None):
     return {
         "engine": {
             "batch": batch,
@@ -24,6 +24,7 @@ def _doc(per_call, batch=1024, families=None, multi=None, async_serve=None,
         **({"multi_plan": multi} if multi else {}),
         **({"async_serve": async_serve} if async_serve else {}),
         **({"overload": overload} if overload else {}),
+        **({"sharding": sharding} if sharding else {}),
     }
 
 
@@ -323,6 +324,84 @@ def test_overload_missing_section_or_phases_is_visible():
     assert regressions == []
     assert any("invariant gates NOT applied" in l for l in lines)
     assert any("collapse gate NOT applied" in l for l in lines)
+
+
+def _sharding(eff4=0.95, f1=40000.0, host_par=1):
+    f4 = f1 * eff4 * min(4, host_par)
+    return {
+        "host_parallelism": host_par,
+        "devices_available": 8,
+        "plan_sharded": {"1": {"per_call_ms": 10.0, "vs_single_x": 1.0},
+                         "4": {"per_call_ms": 16.0, "vs_single_x": 1.6}},
+        "serve_streams": {
+            "1": {"flows_s": f1, "speedup_vs_1": 1.0,
+                  "scaling_efficiency": 1.0},
+            "4": {"flows_s": f4, "speedup_vs_1": f4 / f1,
+                  "scaling_efficiency": eff4},
+        },
+        "scaling_efficiency_at_4": eff4,
+    }
+
+
+def test_sharding_efficiency_floor_gated():
+    """The serving-level stream aggregate must scale (or at least not tax):
+    efficiency at 4 devices below the 0.6 floor fails the FRESH run."""
+    fresh = _doc(BASE, sharding=_sharding(eff4=0.4))
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert len(regressions) == 1
+    assert "taxing, not scaling" in regressions[0]
+    ok = _doc(BASE, sharding=_sharding(eff4=0.85))
+    lines, regressions = compare(_doc(BASE), ok, 0.25)
+    assert regressions == []
+    assert any("eff @4dev" in l and "OK" in l for l in lines)
+
+
+def test_sharding_plan_sharded_is_info_not_gated():
+    """shard_map per-call overhead on a 1-core host is expected physics —
+    the plan-sharded numbers are reported, never failed."""
+    sh = _sharding()
+    sh["plan_sharded"]["4"] = {"per_call_ms": 99.0, "vs_single_x": 9.9}
+    lines, regressions = compare(_doc(BASE), _doc(BASE, sharding=sh), 0.25)
+    assert regressions == []
+    assert any("plan-sharded K=4" in l and "not gated" in l for l in lines)
+
+
+def test_sharding_missing_section_is_info_not_failure():
+    """ISSUE 7 satellite: a baseline (or a <4-device host's fresh run)
+    without the sharding section must not fail the gate."""
+    base = _doc(BASE, sharding=_sharding())
+    # fresh dropped the section → loud info, not a regression
+    lines, regressions = compare(base, _doc(BASE), 0.25)
+    assert regressions == []
+    assert any("sharding section missing" in l for l in lines)
+    # baseline predates the section → info, efficiency still gated
+    lines, regressions = compare(_doc(BASE), base, 0.25)
+    assert regressions == []
+    assert any("sharding added since baseline" in l for l in lines)
+    # neither side has it → silent skip, nothing to report
+    lines, regressions = compare(_doc(BASE), _doc(BASE), 0.25)
+    assert regressions == []
+    assert not any("sharding" in l for l in lines)
+
+
+def test_sharding_efficiency_unavailable_is_info():
+    """<4 XLA devices → scaling_efficiency_at_4 is None: info, not a fail."""
+    sh = _sharding()
+    sh["scaling_efficiency_at_4"] = None
+    del sh["serve_streams"]["4"]
+    lines, regressions = compare(_doc(BASE), _doc(BASE, sharding=sh), 0.25)
+    assert regressions == []
+    assert any("efficiency gate NOT applied" in l for l in lines)
+
+
+def test_sharding_cross_run_collapse_gated():
+    base = _doc(BASE, sharding=_sharding(f1=40000.0))
+    dead = _doc(BASE, sharding=_sharding(f1=15000.0))    # 2.67x collapse
+    _, regressions = compare(base, dead, 0.25)
+    assert len(regressions) == 1 and "collapse limit" in regressions[0]
+    ok = _doc(BASE, sharding=_sharding(f1=25000.0))      # 1.6x: host noise
+    _, regressions = compare(base, ok, 0.25)
+    assert regressions == []
 
 
 def test_trajectory_table(tmp_path):

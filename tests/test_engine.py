@@ -331,7 +331,7 @@ def test_pegasus_server_batches(ds):
     server.serve(reqs)
     assert STATS.layout_builds == before
     # both rounds hit ONE compiled bucket (8): 4 jit calls, 1 trace
-    st = server.stats()
+    st = server.stats()["engine"]
     assert st["jit_calls"] == 4
     assert st["traces"] == 1
     assert st["bucket_hits"] == 3
@@ -696,7 +696,7 @@ def test_multi_model_fair_scheduling_drains_all_queues(ds):
     log = list(server.schedule_log)[log_start:]
     # 2 chunks per model, interleaved one-per-model per round
     assert log == list(names) + list(names)
-    st = server.stats()["models"]
+    st = server.stats()["serving"]["models"]
     for fam in names:
         assert st[fam]["requests_served"] == 2
         assert st[fam]["batches_run"] == 2
@@ -720,7 +720,7 @@ def test_multi_model_adopts_shared_registry(ds):
     reg.register("post", banks, backend="onehot")  # registered after init
     server.submit("post", x[:4])
     assert server.drain()["post"][0].shape[0] == 4
-    st = server.stats()["models"]
+    st = server.stats()["serving"]["models"]
     assert st["pre"]["requests_served"] == 1
     assert st["post"]["requests_served"] == 1
 
@@ -735,12 +735,12 @@ def test_multi_model_unknown_name_and_success_only_stats(ds):
     server.submit("mlp", x[:4])
     with pytest.raises(ValueError, match="unknown backend"):
         server.drain(backend="dense")             # every model failed → raise
-    st = server.stats()["models"]["mlp"]
+    st = server.stats()["serving"]["models"]["mlp"]
     assert (st["requests_served"], st["batches_run"]) == (0, 0)
     assert server.pending() == {"mlp": 1}         # failed drain is retryable
     out = server.drain()
     assert out["mlp"][0].shape[0] == 4
-    st = server.stats()["models"]["mlp"]
+    st = server.stats()["serving"]["models"]["mlp"]
     assert (st["requests_served"], st["batches_run"]) == (1, 1)
 
 
@@ -858,7 +858,7 @@ def test_compile_stats_reports_pad_waste_and_fusion(ds):
 
     server = MultiModelServer({"mlp": banks}, backend="gather")
     server.infer("mlp", x[:11])
-    mst = server.stats()["models"]["mlp"]
+    mst = server.stats()["engine"]["models"]["mlp"]
     assert mst["fused_groups"] == 1
     assert mst["pad_waste"]["gather@16"] == round(5 / 16, 4)
 
@@ -983,7 +983,7 @@ def test_multi_model_drain_isolates_failing_model(ds):
     assert list(results) == ["good"]
     assert results["good"][0].shape[0] == 4
     assert "bad" in server.last_drain_errors
-    st = server.stats()["models"]
+    st = server.stats()["serving"]["models"]
     assert (st["good"]["requests_served"], st["good"]["batches_run"]) == (1, 1)
     assert (st["bad"]["requests_served"], st["bad"]["batches_run"]) == (0, 0)
     assert server.pending() == {"bad": 1}         # bad queue kept for retry

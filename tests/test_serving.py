@@ -23,7 +23,8 @@ from repro.launch.scheduler import (
     PRIORITY_WEIGHTS, DeadlineExceededError, QueueFullError, WFQScheduler,
 )
 from repro.launch.serve import (
-    AsyncMultiModelServer, MultiModelServer, PartialDrainError,
+    AsyncMultiModelServer, InferRequest, InferResult, MultiModelServer,
+    PartialDrainError,
 )
 
 
@@ -139,9 +140,9 @@ def test_reregister_model_updates_priority(x):
     """add_model over an existing name must honor the new scheduling class
     (the queue already exists — its weight must not silently stay stale)."""
     server = MultiModelServer({"m": _banks()}, backend="gather")
-    assert server.stats()["scheduler"]["m"]["weight"] == 1.0
+    assert server.stats()["scheduler"]["models"]["m"]["weight"] == 1.0
     server.add_model("m", _banks(9), priority="high", queue_depth=7)
-    st = server.stats()["scheduler"]["m"]
+    st = server.stats()["scheduler"]["models"]["m"]
     assert st["weight"] == PRIORITY_WEIGHTS["high"]
     assert st["depth"] == 7
 
@@ -248,7 +249,7 @@ def test_serve_wraps_failures_in_partial_drain_error(x):
     assert err.__cause__ is boom                # wrapped, chained...
     assert not hasattr(boom, "partial_results")  # ...and NOT mutated
     # the good model's work was counted; bad's queue is intact for retry
-    st = server.stats()["models"]
+    st = server.stats()["serving"]["models"]
     assert st["good"]["requests_served"] == 1
     assert st["bad"]["requests_served"] == 0
     assert server.pending() == {"bad": 1}
@@ -325,7 +326,8 @@ def test_concurrent_submit_and_add_model_during_drain(x):
     assert errors == []
     assert collected == expected                # nothing lost, nothing doubled
     assert server.pending() == {}
-    assert server.stats()["models"]["m0"]["flows_served"] == expected + 8
+    assert (server.stats()["serving"]["models"]["m0"]["flows_served"]
+            == expected + 8)
 
 
 def test_sync_server_weighted_drain_order(x):
@@ -361,11 +363,12 @@ def test_async_futures_match_sync_outputs(x):
         futs = [server.submit("m", x[i : i + 4]) for i in range(0, 16, 4)]
         outs = [f.result(timeout=60) for f in futs]
     np.testing.assert_allclose(np.concatenate(outs), ref, rtol=1e-6, atol=1e-6)
-    st = server.stats()["models"]["m"]
-    assert st["requests_served"] == 4
-    assert st["flows_served"] == 16
-    assert st["latency"]["samples"] == 4
-    assert st["latency"]["queue_wait_ms"]["p50"] >= 0.0
+    st = server.stats()
+    assert st["serving"]["models"]["m"]["requests_served"] == 4
+    assert st["serving"]["models"]["m"]["flows_served"] == 16
+    lat = st["scheduler"]["latency"]["m"]
+    assert lat["samples"] == 4
+    assert lat["queue_wait_ms"]["p50"] >= 0.0
     assert not server.running                   # __exit__ stopped the loop
 
 
@@ -379,7 +382,7 @@ def test_async_failure_lands_on_future_not_queue(x):
         good = server.submit("m", x[:4])
         assert good.result(timeout=60).shape[0] == 4
     assert server.pending() == {}               # failed request NOT requeued
-    st = server.stats()["models"]["m"]
+    st = server.stats()["serving"]["models"]["m"]
     assert st["requests_served"] == 1           # success-only counting
     assert "m" in server.last_drain_errors
 
@@ -435,7 +438,7 @@ def test_async_priority_queue_wait_under_saturation(x):
     with server:
         for f in futs:
             f.result(timeout=120)
-    lat = {n: server.stats()["models"][n]["latency"]["queue_wait_ms"]
+    lat = {n: server.stats()["scheduler"]["latency"][n]["queue_wait_ms"]
            for n in ("hi", "lo")}
     assert lat["hi"]["p50"] < lat["lo"]["p50"], lat
     # and the flow share matches the skew while both were backlogged
@@ -618,9 +621,9 @@ def test_async_deadline_shed_fails_future(x):
         assert fine.result(timeout=60).shape[0] == 4
         with pytest.raises(DeadlineExceededError):
             doomed.result(timeout=60)
-    st = server.stats()["models"]["m"]
-    assert st["slo"]["shed"] == 1
-    assert st["requests_served"] == 1
+    st = server.stats()
+    assert st["slo"]["models"]["m"]["shed"] == 1
+    assert st["serving"]["models"]["m"]["requests_served"] == 1
 
 
 def test_infer_async_roundtrip_and_shed(x):
@@ -638,3 +641,110 @@ def test_infer_async_roundtrip_and_shed(x):
             await server.infer_async("m", x[:4])
 
     asyncio.run(scenario())
+
+
+# ---------------------------------------------------------------------------
+# Typed request API (ISSUE 7): InferRequest/InferResult routing + the
+# deprecated legacy shims must stay exactly equivalent
+# ---------------------------------------------------------------------------
+
+def test_infer_request_normalizes_and_validates(x):
+    req = InferRequest("m", x[:4])
+    assert isinstance(req.inputs, tuple) and len(req.inputs) == 1
+    assert req.flows == 4
+    assert InferRequest("m", (x[:4], x[:4])).flows == 4
+    with pytest.raises(ValueError, match="priority"):
+        InferRequest("m", x[:4], priority="urgent")
+    with pytest.raises(ValueError, match="deadline_ms"):
+        InferRequest("m", x[:4], deadline_ms=0.0)
+
+
+def test_typed_and_legacy_infer_parity(x):
+    server = MultiModelServer({"m": _banks()}, backend="gather")
+    res = server.infer(InferRequest("m", x[:4]))
+    assert isinstance(res, InferResult)
+    assert res.model == "m" and res.flows == 4
+    with pytest.warns(DeprecationWarning):
+        legacy = server.infer("m", x[:4])
+    np.testing.assert_array_equal(np.asarray(res.output), np.asarray(legacy))
+
+
+def test_typed_and_legacy_submit_drain_parity(x):
+    server = MultiModelServer({"m": _banks()}, backend="gather")
+    server.submit(InferRequest("m", x[:5]))
+    with pytest.warns(DeprecationWarning):
+        server.submit("m", x[5:12])
+    out = server.drain()
+    assert [o.shape[0] for o in out["m"]] == [5, 7]
+
+
+def test_typed_serve_returns_results_legacy_returns_arrays(x):
+    server = MultiModelServer({"m": _banks()}, backend="gather")
+    typed = server.serve([InferRequest("m", x[:4]), InferRequest("m", x[4:10])])
+    assert [r.flows for r in typed] == [4, 6]
+    assert all(isinstance(r, InferResult) for r in typed)
+    assert all(r.queue_wait_ms is not None and r.queue_wait_ms >= 0
+               for r in typed)
+    with pytest.warns(DeprecationWarning):
+        legacy = server.serve([("m", x[:4]), ("m", x[4:10])])
+    for r, o in zip(typed, legacy):
+        np.testing.assert_array_equal(np.asarray(r.output), np.asarray(o))
+    with pytest.raises(TypeError, match="mix"):
+        server.serve([InferRequest("m", x[:4]), ("m", x[:4])])
+
+
+def test_typed_async_submit_and_serve(x):
+    banks = _banks()
+    ref = np.asarray(MultiModelServer({"m": banks},
+                                      backend="gather").infer(
+                                          InferRequest("m", x[:4])).output)
+    with AsyncMultiModelServer({"m": banks}, backend="gather") as server:
+        res = server.submit(InferRequest("m", x[:4])).result(timeout=60)
+        assert isinstance(res, InferResult) and res.flows == 4
+        assert res.queue_wait_ms is not None and res.queue_wait_ms >= 0
+        np.testing.assert_allclose(np.asarray(res.output), ref,
+                                   rtol=1e-6, atol=1e-6)
+        with pytest.warns(DeprecationWarning):
+            raw = server.submit("m", x[:4]).result(timeout=60)
+        np.testing.assert_array_equal(np.asarray(res.output), np.asarray(raw))
+        outs = server.serve([InferRequest("m", x[:3]),
+                             InferRequest("m", x[3:9])])
+        assert [o.flows for o in outs] == [3, 6]
+
+
+def test_typed_infer_async_returns_result(x):
+    banks = _banks()
+
+    async def scenario():
+        with AsyncMultiModelServer({"m": banks}, backend="gather") as server:
+            res = await server.infer_async(InferRequest("m", x[:4]))
+            assert isinstance(res, InferResult) and res.flows == 4
+            with pytest.raises(DeadlineExceededError):
+                await server.infer_async(
+                    InferRequest("m", x[:4], deadline_ms=1e-6))
+
+    asyncio.run(scenario())
+
+
+def test_per_request_priority_queue_jump(x):
+    """A high-priority request jumps the model's FIFO ahead of queued
+    normal/low entries (FIFO among equals); cross-model WFQ unaffected."""
+    server = MultiModelServer({"m": _banks()}, backend="gather")
+    server.submit(InferRequest("m", x[:1], priority="low"))
+    server.submit(InferRequest("m", x[1:3]))
+    server.submit(InferRequest("m", x[3:6]))
+    assert server.submit(InferRequest("m", x[6:10], priority="high")) == 0
+    assert server.submit(InferRequest("m", x[10:15], priority="high")) == 1
+    # a normal submit still slots ahead of the low-priority tail entry
+    assert server.submit(InferRequest("m", x[15:16])) == 4
+    out = server.drain()["m"]
+    # served in rank order: the two highs (4, 5 flows), then the normals
+    # (2, 3, 1 flows in submit order), then the low (1 flow)
+    assert [o.shape[0] for o in out] == [4, 5, 2, 3, 1, 1]
+
+
+def test_scheduler_priority_rank_validation():
+    s = WFQScheduler()
+    s.add_queue("a")
+    with pytest.raises(ValueError, match="priority"):
+        s.submit("a", (np.zeros((1, 2)),), 1, priority="asap")

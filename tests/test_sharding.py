@@ -1,0 +1,217 @@
+"""Multi-device sharded serving (ISSUE 7 tentpole).
+
+Parity contract: a plan built with ``devices=K`` (batch axis sharded over
+a K-device mesh via ``shard_map``, bank operands replicated) must produce
+EXACTLY the arrays of the single-device plan — all four backends, both
+kernel strategies, fused and unfused, exact-bucket and ragged batches.
+The host devices come from ``--xla_force_host_platform_device_count=8``
+(tests/conftest.py, or the multi-device CI lane's XLA_FLAGS).
+
+Also covered here: per-call device placement (the serving runtime's
+PLACED mode), the ``devices`` memo key in ``plan_for``, the
+least-loaded-placement invariant of :class:`DeviceStreamPool`, and the
+multi-device ``MultiModelServer`` end to end.
+"""
+
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.amm import init_pegasus_linear
+from repro.engine import BACKENDS, build_plan
+from repro.engine.plan import resolve_devices
+from repro.engine.registry import PlanRegistry
+from repro.launch.devices import DeviceStreamPool
+from repro.launch.serve import InferRequest, MultiModelServer
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >=4 XLA devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+
+def _banks(seed: int = 0, n_out: int = 5) -> list:
+    rng = np.random.default_rng(seed)
+    return [init_pegasus_linear(
+        rng.normal(size=(8, n_out)).astype(np.float32), None,
+        rng.normal(size=(64, 8)).astype(np.float32), group_size=2, depth=3,
+        lut_bits=None)]
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)),
+                       jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# engine: sharded execution mode
+# ---------------------------------------------------------------------------
+
+def test_sharded_parity_all_backends(x):
+    """devices=4 must be bitwise-identical to single-device for every
+    backend, at an exact bucket (32) AND a ragged batch (17 → padded)."""
+    banks = _banks()
+    single = build_plan(banks)
+    sharded = build_plan(banks, devices=4)
+    assert len(sharded.devices) == 4
+    for be in BACKENDS:
+        for n in (32, 17):
+            a = np.asarray(single(x[:n], backend=be))
+            b = np.asarray(sharded(x[:n], backend=be))
+            assert np.array_equal(a, b), f"sharded parity broke for {be}@{n}"
+
+
+@pytest.mark.kernel
+def test_sharded_parity_both_strategies_and_fusion(x):
+    """Both Pallas strategies (lookup gather-sum / mxu one-hot matmul),
+    fused and unfused, keep exact parity under sharding."""
+    banks = _banks(3)
+    for strategy in ("mxu", "lookup"):
+        for fuse in (True, False):
+            single = build_plan(banks, strategy=strategy, fuse=fuse)
+            sharded = build_plan(banks, strategy=strategy, fuse=fuse,
+                                 devices=4)
+            for be in ("kernel", "kernel_q8"):
+                for n in (32, 17):   # exact bucket + ragged
+                    a = np.asarray(single(x[:n], backend=be))
+                    b = np.asarray(sharded(x[:n], backend=be))
+                    assert np.array_equal(a, b), \
+                        f"parity broke for {be}/{strategy}/fuse={fuse}@{n}"
+
+
+def test_sharded_bucket_divisibility_validated():
+    with pytest.raises(ValueError, match="not divisible"):
+        build_plan(_banks(), devices=3, bucket_sizes=(16, 32))
+
+
+def test_sharded_plan_refuses_per_call_device(x):
+    plan = build_plan(_banks(), devices=2)
+    with pytest.raises(ValueError, match="sharded across a device mesh"):
+        plan(x, device=jax.devices()[0])
+
+
+def test_placed_mode_runs_on_target_device(x):
+    """Per-call placement (the serving runtime's per-device streams): the
+    output is committed to the requested device and exactly equal."""
+    plan = build_plan(_banks())
+    ref = np.asarray(plan(x[:17]))
+    for d in jax.devices()[:3]:
+        y = plan(x[:17], device=d)
+        assert list(y.devices()) == [d]
+        assert np.array_equal(np.asarray(y), ref)
+
+
+def test_devices_participates_in_plan_memo_key(x):
+    reg = PlanRegistry()
+    banks = _banks()
+    p_default = reg.plan_for(banks)
+    assert reg.plan_for(banks, devices=None) is p_default
+    p_sharded = reg.plan_for(banks, devices=4)
+    assert p_sharded is not p_default
+    # int count and explicit device tuple resolve to the same key
+    assert reg.plan_for(banks, devices=tuple(jax.devices()[:4])) is p_sharded
+    assert resolve_devices(2) == tuple(jax.devices()[:2])
+    assert p_sharded.compile_stats()["devices"] == 4
+    assert p_default.compile_stats()["devices"] == 1
+
+
+# ---------------------------------------------------------------------------
+# DeviceStreamPool: least-loaded placement invariant
+# ---------------------------------------------------------------------------
+
+def test_pool_least_loaded_placement():
+    """With every stream blocked, successive submits must land on the
+    stream with the fewest PENDING FLOWS (ties → lowest index). Submitting
+    weights 5, 3, 1, 1, 2 onto 3 blocked streams must therefore place
+    them as dev0:5, dev1:3, dev2:(1+1), then dev2 again (4 < 5) → the
+    invariant: after every submit, max(pending) - min(pending) is bounded
+    by the largest chunk, and each submit picked an argmin stream."""
+    gate = threading.Event()
+    placed: list[tuple[int, int]] = []   # (flows, device_index)
+
+    with DeviceStreamPool(jax.devices()[:3]) as pool:
+        # park one equal-weight blocker on each stream (1000 flows apiece:
+        # ties break to the lowest index, so they land 0, 1, 2) — every
+        # later placement decision is then observable via pending_flows
+        blockers = [pool.submit(lambda d: gate.wait(10), 1000)
+                    for _ in range(3)]
+        time.sleep(0.05)                 # workers now hold their blockers
+
+        expected = []                    # argmin computed against a model
+        loads = [1000, 1000, 1000]
+        for flows in (5, 3, 1, 1, 2):
+            pick = loads.index(min(loads))
+            expected.append((flows, pick))
+            loads[pick] += flows
+            pool.submit(lambda d, f=flows: placed.append(
+                (f, jax.devices().index(d))), flows)
+        st = pool.stats()
+        pending = [d["pending_flows"] for d in st["per_device"]]
+        assert pending == loads, (pending, loads)
+        gate.set()
+        for b in blockers:
+            b.result(timeout=10)
+    # after close() every queued task ran on the stream it was placed on
+    assert sorted(placed) == sorted(expected), (placed, expected)
+
+
+def test_pool_stats_and_error_isolation():
+    with DeviceStreamPool(jax.devices()[:2]) as pool:
+        ok = pool.submit(lambda d: "fine", 4)
+        bad = pool.submit(lambda d: 1 / 0, 4)
+        assert ok.result(timeout=10) == "fine"
+        with pytest.raises(ZeroDivisionError):
+            bad.result(timeout=10)
+        st = pool.stats()
+        assert st["count"] == 2
+        assert sum(d["dispatched_chunks"] for d in st["per_device"]) == 1
+        assert sum(d["errors"] for d in st["per_device"]) == 1
+        assert sum(d["pending_flows"] for d in st["per_device"]) == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.submit(lambda d: None, 1)
+
+
+# ---------------------------------------------------------------------------
+# serving: multi-device MultiModelServer
+# ---------------------------------------------------------------------------
+
+def test_multi_device_server_parity_and_device_stats(x):
+    """The devices= server must serve the exact same outputs as the
+    single-stream server, and report per-device dispatch counters."""
+    reqs = [InferRequest("m", x[: 1 + (i * 7) % 31]) for i in range(12)]
+    single = MultiModelServer({"m": _banks(5)}, backend="gather")
+    ref = single.serve(reqs)
+    server = MultiModelServer({"m": _banks(5)}, backend="gather", devices=4)
+    try:
+        out = server.serve(reqs)
+        for a, b in zip(out, ref):
+            assert np.array_equal(np.asarray(a.output), np.asarray(b.output))
+        st = server.stats()["devices"]
+        assert st["count"] == 4
+        total = sum(d["dispatched_flows"] for d in st["per_device"])
+        assert total == sum(r.flows for r in reqs)
+        assert all(d["pending_flows"] == 0 for d in st["per_device"])
+    finally:
+        server.close()
+
+
+def test_multi_device_server_spreads_chunks(x):
+    """Many submit+drain rounds must exercise MORE than one device stream
+    (the least-loaded policy spreads chunks once a stream is busy)."""
+    server = MultiModelServer(backend="gather", devices=4, max_batch=32)
+    server.add_model("m", _banks(6), bucket_sizes=(8, 16, 32))
+    try:
+        for _ in range(4):
+            for i in range(8):
+                server.submit(InferRequest("m", x[: 8 + (i % 3) * 8]))
+            server.drain()   # 120 flows → four 32-capped chunks per round
+        st = server.stats()["devices"]
+        used = [d for d in st["per_device"] if d["dispatched_chunks"] > 0]
+        assert len(used) >= 2, st["per_device"]
+    finally:
+        server.close()

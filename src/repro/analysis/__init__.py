@@ -1,0 +1,23 @@
+"""Machine-checked concurrency invariants for the serving stack.
+
+Two halves over one policy (:mod:`repro.analysis.rules`):
+
+* :mod:`repro.analysis.lint` — the AST pass behind
+  ``python -m repro.analysis src/`` (PG001-PG004, run as the
+  ``static-analysis`` CI lane);
+* :mod:`repro.analysis.sanitizer` — the ``PEGASUS_SANITIZE=1`` runtime
+  half: ``make_lock`` (lock-order cycle + hierarchy detection) and
+  ``ThreadAffinity`` assertions.
+"""
+
+from .lint import Finding, lint_file, lint_paths, lint_source, main
+from .rules import RULES
+from .sanitizer import (InstrumentedLock, LockOrderError, ThreadAffinity,
+                        ThreadAffinityError, enabled, make_lock,
+                        reset_lock_graph)
+
+__all__ = [
+    "Finding", "lint_file", "lint_paths", "lint_source", "main", "RULES",
+    "InstrumentedLock", "LockOrderError", "ThreadAffinity",
+    "ThreadAffinityError", "enabled", "make_lock", "reset_lock_graph",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.analysis [paths...]`` — exit nonzero on findings."""
+
+import sys
+
+from .lint import main
+
+sys.exit(main())

@@ -42,6 +42,8 @@ import weakref
 from collections import OrderedDict
 from typing import Any
 
+from repro.analysis.sanitizer import make_lock
+
 from .plan import (
     DEFAULT_FUSE_NMAX_CAP,
     ExecutionPlan,
@@ -97,12 +99,12 @@ class PlanRegistry:
         self.max_plans = max_plans
         # reentrant: discard nests under register/evict, and a GC pass while
         # the lock is held may fire on_death callbacks on the same thread
-        self._lock = threading.RLock()
-        self._memo: OrderedDict[tuple, _Entry] = OrderedDict()
-        self._named: dict[str, dict] = {}
+        self._lock = make_lock("registry._lock", reentrant=True)
+        self._memo: OrderedDict[tuple, _Entry] = OrderedDict()  # guarded-by: _lock
+        self._named: dict[str, dict] = {}                       # guarded-by: _lock
         # key → Event: a build in progress; later same-key callers wait for
         # it instead of compiling a duplicate (builds run OUTSIDE _lock)
-        self._building: dict[tuple, threading.Event] = {}
+        self._building: dict[tuple, threading.Event] = {}       # guarded-by: _lock
 
     # -- anonymous memo (the plan_for surface) ------------------------------
 

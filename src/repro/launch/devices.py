@@ -28,6 +28,9 @@ import time
 from collections import deque
 from concurrent.futures import Future
 
+from repro.analysis.sanitizer import (ThreadAffinity, ThreadAffinityError,
+                                      make_lock)
+
 __all__ = ["DeviceStreamPool"]
 
 
@@ -38,14 +41,15 @@ class _Stream:
                  "dispatched_flows", "busy_s", "errors")
 
     def __init__(self, device, index: int):
-        self.device = device
-        self.index = index
-        self.q: deque = deque()
-        self.pending_flows = 0       # queued + in-flight flows (load signal)
-        self.dispatched_chunks = 0
-        self.dispatched_flows = 0
-        self.busy_s = 0.0
-        self.errors = 0
+        self.device = device         # immutable after construction
+        self.index = index           # immutable after construction
+        self.q: deque = deque()      # guarded-by: _lock
+        # queued + in-flight flows (the load signal)
+        self.pending_flows = 0       # guarded-by: _lock
+        self.dispatched_chunks = 0   # guarded-by: _lock
+        self.dispatched_flows = 0    # guarded-by: _lock
+        self.busy_s = 0.0            # guarded-by: _lock
+        self.errors = 0              # guarded-by: _lock
 
 
 class DeviceStreamPool:
@@ -56,11 +60,16 @@ class DeviceStreamPool:
         if not devices:
             raise ValueError("DeviceStreamPool needs at least one device")
         self._streams = tuple(_Stream(d, i) for i, d in enumerate(devices))
-        self._lock = threading.Lock()
+        self._lock = make_lock("devices._lock")
         self._work = threading.Condition(self._lock)
-        self._closed = False
+        self._closed = False         # guarded-by: _lock
         self._t0 = time.perf_counter()
         self._threads = []
+        # sanitizer surface: each worker binds its affinity at thread start,
+        # so "plan dispatch happens on a pool worker" is assertable
+        # (assert_worker); all binds are no-ops unless PEGASUS_SANITIZE=1
+        self._affinities = {i: ThreadAffinity(f"device-stream-{i}")
+                            for i in range(len(self._streams))}
         for s in self._streams:
             t = threading.Thread(target=self._run, args=(s,),
                                  name=f"device-stream-{s.index}", daemon=True)
@@ -76,10 +85,23 @@ class DeviceStreamPool:
 
     # -- placement -----------------------------------------------------------
 
-    def _least_loaded(self) -> _Stream:
+    def _least_loaded(self) -> _Stream:  # holds: _lock
         # min pending flows, tie → lowest index (deque order is stable, and
         # min() keeps the first minimum, so index order IS the tiebreak)
         return min(self._streams, key=lambda s: s.pending_flows)
+
+    def assert_worker(self) -> None:
+        """Sanitizer checkpoint: raise :class:`ThreadAffinityError` unless
+        the calling thread is one of this pool's workers (no-op with the
+        sanitizer off — the affinities never bind). The serving layer calls
+        this from its dispatch closures, pinning the "ALL plan calls run on
+        device workers" invariant at runtime."""
+        idents = {a.bound_ident for a in self._affinities.values()}
+        idents.discard(None)
+        if idents and threading.get_ident() not in idents:
+            raise ThreadAffinityError(
+                f"thread {threading.current_thread().name} is not a "
+                "DeviceStreamPool worker")
 
     def submit(self, fn, flows: int) -> Future:
         """Place ``fn(device)`` on the least-loaded stream; returns a Future.
@@ -101,6 +123,7 @@ class DeviceStreamPool:
     # -- worker --------------------------------------------------------------
 
     def _run(self, s: _Stream) -> None:
+        self._affinities[s.index].bind()
         while True:
             with self._work:
                 while not s.q and not self._closed:

@@ -75,6 +75,8 @@ import time
 from collections import deque
 from concurrent.futures import Future
 
+from repro.analysis.sanitizer import make_lock
+
 import numpy as np
 
 __all__ = [
@@ -187,12 +189,14 @@ class ModelQueue:
         if admit_ms is not None and admit_ms <= 0:
             raise ValueError(f"admit_ms must be > 0 or None, got {admit_ms}")
         self.name = name
-        self.weight = max(float(weight), _MIN_WEIGHT)
-        self.depth = depth
-        self.policy = policy
-        self.admit_ms = admit_ms
-        self.reqs: deque[_Request] = deque()
-        self.flows = 0
+        # every field below is owned by the scheduler that holds this queue
+        # — ModelQueue adds no locking of its own
+        self.weight = max(float(weight), _MIN_WEIGHT)   # guarded-by: _lock
+        self.depth = depth                              # guarded-by: _lock
+        self.policy = policy                            # guarded-by: _lock
+        self.admit_ms = admit_ms                        # guarded-by: _lock
+        self.reqs: deque[_Request] = deque()            # guarded-by: _lock
+        self.flows = 0                                  # guarded-by: _lock
 
 
 class WFQScheduler:
@@ -207,20 +211,20 @@ class WFQScheduler:
     """
 
     def __init__(self):
-        self._lock = threading.RLock()
+        self._lock = make_lock("scheduler._lock", reentrant=True)
         self._space = threading.Condition(self._lock)
         self._work = threading.Condition(self._lock)
-        self._queues: dict[str, ModelQueue] = {}
-        self._deficit: dict[str, float] = {}
-        self._latency: dict[str, dict] = {}
+        self._queues: dict[str, ModelQueue] = {}        # guarded-by: _lock
+        self._deficit: dict[str, float] = {}            # guarded-by: _lock
+        self._latency: dict[str, dict] = {}             # guarded-by: _lock
         # SLO bookkeeping: per-model counters, EWMA service rate (flows/s)
         # and slice service time (ms), and the shed requests awaiting
         # collection by the dispatcher (bounded: an uncollected backlog of
         # shed bookkeeping must not leak on a standalone scheduler)
-        self._counters: dict[str, dict] = {}
-        self._rate: dict[str, float] = {}
-        self._svc_ms: dict[str, float] = {}
-        self._shed_pending: dict[str, deque] = {}
+        self._counters: dict[str, dict] = {}            # guarded-by: _lock
+        self._rate: dict[str, float] = {}               # guarded-by: _lock
+        self._svc_ms: dict[str, float] = {}             # guarded-by: _lock
+        self._shed_pending: dict[str, deque] = {}       # guarded-by: _lock
 
     # -- queue management ---------------------------------------------------
 
@@ -545,6 +549,7 @@ class WFQScheduler:
                 self._space.notify_all()
             return out
 
+    # holds: _lock
     def _past_slack(self, name: str, req: _Request, now: float) -> bool:
         """True when dispatching ``req`` now would still miss its deadline:
         queue-wait so far > deadline minus the model's EWMA service time
@@ -565,6 +570,7 @@ class WFQScheduler:
         est_ms = min(self._svc_ms.get(name, 0.0), 0.5 * req.deadline_ms)
         return wait_ms > req.deadline_ms - est_ms
 
+    # holds: _lock
     def _shed(self, name: str, req: _Request, now: float) -> None:
         """Shed bookkeeping (caller holds the lock): counters, the
         take_shed() handoff, and the future's typed failure."""
@@ -615,6 +621,7 @@ class WFQScheduler:
 
     # -- latency + SLO instrumentation --------------------------------------
 
+    # holds: _lock
     def _ctr(self, name: str) -> dict:
         """Per-model SLO counter record (caller holds the lock)."""
         c = self._counters.get(name)

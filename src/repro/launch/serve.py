@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitizer import ThreadAffinity, make_lock
 from repro.configs.registry import ArchConfig, get_config, smoke_config
 from repro.models.transformer import (
     decode_step, forward_train, init_decode_state, init_model,
@@ -422,15 +423,20 @@ class MultiModelServer:
         # priority differentiation at slightly more scheduling overhead.
         self.quantum = quantum
         self._sched = WFQScheduler()
-        self._counters: dict[str, dict] = {}
         # counter commits are read-modify-writes shared between the drain
         # thread and infer() callers — same race the plan-level counters
         # guard with _PlanCounters.lock
-        self._ctr_lock = threading.Lock()
+        self._ctr_lock = make_lock("serve._ctr_lock")
+        self._counters: dict[str, dict] = {}        # guarded-by: _ctr_lock
         # bounded: the log is a debugging/fairness-test surface, not an
-        # audit trail — a long-lived server must not grow it without limit
+        # audit trail — a long-lived server must not grow it without limit.
+        # Deliberately NOT guarded-by-annotated: deque.append is atomic
+        # under the GIL and readers tolerate a stale tail.
         self.schedule_log: deque = deque(maxlen=4096)
-        self.batches_dispatched = 0
+        self.batches_dispatched = 0                 # guarded-by: _ctr_lock
+        # bound by the async drain loop (never for the caller-driven sync
+        # server): once bound, all dispatch must happen on that thread
+        self._dispatch_affinity = ThreadAffinity("dispatch")
         self.last_drain_errors: dict[str, Exception] = {}
         self.last_shed: dict[str, int] = {}   # sheds seen by the last drain
         for name in self.registry.names():   # adopt a pre-populated registry
@@ -448,11 +454,15 @@ class MultiModelServer:
             sched_kw.setdefault("depth", self.queue_depth)
             sched_kw.setdefault("policy", self.policy)
         self._sched.add_queue(name, **sched_kw)
-        self._counters.setdefault(name, {"requests_served": 0,
-                                         "batches_run": 0, "flows_served": 0})
+        with self._ctr_lock:
+            self._counters.setdefault(name, {"requests_served": 0,
+                                             "batches_run": 0,
+                                             "flows_served": 0})
 
     def _tracked(self, name: str) -> None:
-        if name not in self._counters:
+        with self._ctr_lock:
+            known = name in self._counters
+        if not known:
             if name not in self.registry:
                 raise KeyError(
                     f"unknown model {name!r}; registered: {self.models()}")
@@ -522,7 +532,8 @@ class MultiModelServer:
         err = KeyError(f"model {name!r} removed with requests pending")
         for r in dropped:
             _resolve_future(r.future, error=err)
-        self._counters.pop(name, None)
+        with self._ctr_lock:
+            self._counters.pop(name, None)
         return self.registry.evict(name)
 
     def models(self) -> list[str]:
@@ -654,6 +665,10 @@ class MultiModelServer:
         ``"error"`` key."""
         from repro.engine import bucket_chunks
 
+        # sanitizer checkpoint: once the async loop binds the dispatch
+        # affinity, ANY other thread reaching this dispatch edge is the
+        # "two concurrent dispatchers" bug (unbound → free, sync path)
+        self._dispatch_affinity.assert_here()
         t0 = time.perf_counter()
         # queue-wait ends HERE, not at pull time: a round's groups dispatch
         # sequentially, so later (lower-priority) groups keep waiting while
@@ -674,13 +689,18 @@ class MultiModelServer:
                 else:
                     # the chunk runs on whichever stream has the least
                     # pending work; np conversion happens ON that worker so
-                    # the block is off this thread too
+                    # the block is off this thread too. assert_worker is
+                    # the sanitizer's thread-affinity pin for "ALL plan
+                    # calls run on pool workers" (no-op unless enabled).
                     outs.append(self._pool.submit(
-                        lambda d, plan=plan, sl=tuple(sl): np.asarray(
-                            plan(*sl, backend=backend, device=d)),
+                        lambda d, plan=plan, sl=tuple(sl): (
+                            self._pool.assert_worker(),
+                            np.asarray(plan(*sl, backend=backend,
+                                            device=d)))[1],
                         size))
                 self.schedule_log.append(name)
-                self.batches_dispatched += 1
+                with self._ctr_lock:
+                    self.batches_dispatched += 1
                 start += size
         except Exception as e:
             g["error"] = e
@@ -879,11 +899,19 @@ class MultiModelServer:
         per-device stream utilization/depth (multi-device servers)."""
         reg = self.registry.stats()
         zeros = {"requests_served": 0, "batches_run": 0, "flows_served": 0}
+        # registry names BEFORE taking the counter lock: models() acquires
+        # registry._lock (rank 0), outermost in the declared hierarchy —
+        # nesting it under _ctr_lock (rank 2) is the inversion the runtime
+        # sanitizer flagged on first enablement
+        names = self.models()
         with self._ctr_lock:
             # zeroed defaults keep the schema uniform for names on a
-            # shared registry that this server hasn't served yet
+            # shared registry that this server hasn't served yet; the
+            # dispatch total snapshots in the SAME critical section so one
+            # stats() call is internally consistent under a live drain
             per_model = {name: {**zeros, **self._counters.get(name, {})}
-                         for name in self.models()}
+                         for name in names}
+            batches_dispatched = self.batches_dispatched
         return {
             "backend": self.backend,
             "serving": {
@@ -893,7 +921,7 @@ class MultiModelServer:
                                    for m in per_model.values()),
                 "flows_served": sum(m["flows_served"]
                                     for m in per_model.values()),
-                "batches_dispatched": self.batches_dispatched,
+                "batches_dispatched": batches_dispatched,
                 "models": per_model,
             },
             "engine": {
@@ -1153,6 +1181,17 @@ class AsyncMultiModelServer(MultiModelServer):
     # -- the background loop ------------------------------------------------
 
     def _serve_loop(self) -> None:
+        # claim the dispatch edge for this thread: under PEGASUS_SANITIZE=1
+        # any dispatch from another thread while the loop runs raises
+        # ThreadAffinityError (release on exit so stop() + sync drain()
+        # stragglers stay legal)
+        self._dispatch_affinity.bind()
+        try:
+            self._serve_loop_body()
+        finally:
+            self._dispatch_affinity.release()
+
+    def _serve_loop_body(self) -> None:
         while not self._stop_flag.is_set():
             try:
                 # re-read per round: server.quantum is documented as a live

@@ -1,0 +1,30 @@
+"""Suppression fixture: justified suppressions are silent; a bare
+``disable=`` (no written reason) is itself a PG000 finding — but the
+suppression is still honored, so the PG000 is the ONLY finding here."""
+
+import threading
+import time
+
+
+class S:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def justified_inline(self):
+        with self._lock:
+            time.sleep(0)  # pegasus-lint: disable=PG001 startup barrier, lock held < 1us by construction
+
+    def justified_standalone(self):
+        with self._lock:
+            # pegasus-lint: disable=PG001 shutdown path, no waiters by design
+            time.sleep(0)
+
+    def justified_block(self):
+        # pegasus-lint: disable-block=PG001 drain loop: single-threaded teardown, nothing contends
+        with self._lock:
+            time.sleep(0)
+            time.sleep(0)
+
+    def bare_reason_missing(self):
+        with self._lock:
+            time.sleep(0)  # pegasus-lint: disable=PG001

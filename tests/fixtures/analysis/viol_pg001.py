@@ -1,0 +1,41 @@
+"""Seeded PG001 violations — lint fixture, parsed by tests, never imported.
+
+Lines carrying a ``# VIOLATION PGxxx`` marker are asserted (by exact line
+number) to be flagged; everything else must stay clean.
+"""
+
+import threading
+import time
+
+import jax
+
+
+class Server:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def dispatch_under_lock(self, x, device):
+        with self._lock:
+            return jax.device_put(x, device)  # VIOLATION PG001
+
+    def build_under_lock(self, model):
+        with self._lock:
+            plan = build_plan(model)  # VIOLATION PG001
+        return plan
+
+    def sleep_under_lock(self):
+        with self._lock:
+            time.sleep(0.1)  # VIOLATION PG001
+
+    def block_under_lock(self, t, fut):
+        with self._lock:
+            t.join()  # VIOLATION PG001
+            return fut.result()  # VIOLATION PG001
+
+    def clean_paths(self, names, x, device):
+        label = ", ".join(names)
+        with self._lock:
+            # str.join on a literal separator is formatting, not blocking
+            tag = " | ".join(names)
+        y = jax.device_put(x, device)  # dispatch OUTSIDE the lock: fine
+        return label, tag, y

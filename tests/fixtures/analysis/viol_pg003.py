@@ -1,0 +1,20 @@
+"""Seeded PG003 violation — lint fixture, parsed with an explicit
+lock_order of {"_registry_lock": 0, "_sched_lock": 1} (outer -> inner)."""
+
+import threading
+
+
+class S:
+    def __init__(self):
+        self._registry_lock = threading.RLock()
+        self._sched_lock = threading.Lock()
+
+    def declared_order(self):
+        with self._registry_lock:
+            with self._sched_lock:
+                return 1
+
+    def inverted_order(self):
+        with self._sched_lock:
+            with self._registry_lock:  # VIOLATION PG003
+                return 2

@@ -1,0 +1,61 @@
+"""Seeded PG004 violations — lint fixture, parsed by tests, never imported.
+
+Covers all three traced-body discovery paths (name convention, jax.jit
+first argument, functools.partial-wrapped pallas_call kernel) plus
+donation safety.
+"""
+
+import functools
+import random
+import threading
+import time
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+_TRACE_LOCK = threading.Lock()
+
+
+class _Counters:
+    total = 0
+
+
+COUNTERS = _Counters()
+
+
+def forward(params, x):
+    t0 = time.time()  # VIOLATION PG004
+    print("tracing", t0)  # VIOLATION PG004
+    COUNTERS.total += 1  # VIOLATION PG004
+    with _TRACE_LOCK:  # VIOLATION PG004
+        pass
+    return jnp.tanh(x @ params)
+
+
+def _kernel(scale, x_ref, o_ref):
+    o_ref[...] = x_ref[...] * scale * random.random()  # VIOLATION PG004
+
+
+def launch(x):
+    op = pl.pallas_call(functools.partial(_kernel, 2.0), out_shape=x)
+    return op(x)
+
+
+def _step(state, buf):
+    t0 = time.perf_counter()  # VIOLATION PG004
+    return state + buf + t0
+
+
+class Runner:
+    def __init__(self, state):
+        self._state = state
+        self._jit = jax.jit(_step, donate_argnums=(1,))
+
+    def unsafe(self, buf):
+        y = self._jit(self._state, buf)
+        return y + buf  # VIOLATION PG004
+
+    def safe(self, buf):
+        buf = self._jit(self._state, buf)
+        return buf + 1.0

@@ -748,3 +748,62 @@ def test_scheduler_priority_rank_validation():
     s.add_queue("a")
     with pytest.raises(ValueError, match="priority"):
         s.submit("a", (np.zeros((1, 2)),), 1, priority="asap")
+
+
+def test_stats_snapshot_consistent_under_concurrent_drain(x):
+    """Regression for the stats()/counter paths the concurrency sweep
+    fixed: per-model counters and batches_dispatched snapshot inside ONE
+    _ctr_lock critical section, and models() is read BEFORE that lock
+    (the registry->counter hierarchy inversion the sanitizer caught). A
+    stats() poller racing live submitters must only ever observe
+    well-formed, monotonically growing totals."""
+    server = AsyncMultiModelServer({"m": _banks()}, backend="gather")
+    stop = threading.Event()
+    errs: list = []
+    seen: list = []
+
+    def poll_stats():
+        last = 0
+        while not stop.is_set():
+            try:
+                st = server.stats()["serving"]
+                total = st["flows_served"]
+                assert isinstance(total, int) and total >= last, (total, last)
+                assert st["models"]["m"]["flows_served"] == total
+                last = total
+                seen.append(total)
+            except Exception as e:  # noqa: BLE001 — re-raised on main thread
+                errs.append(e)
+                return
+
+    def submit_batch(futs_out):
+        for i in range(16):
+            futs_out.append(server.submit("m", x[: 1 + (i % 8)]))
+
+    with server:
+        pollers = [threading.Thread(target=poll_stats) for _ in range(2)]
+        for t in pollers:
+            t.start()
+        futs: list = []
+        lists = [[] for _ in range(3)]
+        subs = [threading.Thread(target=submit_batch, args=(fl,))
+                for fl in lists]
+        for t in subs:
+            t.start()
+        for t in subs:
+            t.join(timeout=60)
+        for fl in lists:
+            futs.extend(fl)
+        total_flows = 0
+        for f in futs:
+            total_flows += f.result(timeout=60).shape[0]
+        stop.set()
+        for t in pollers:
+            t.join(timeout=10)
+    assert not errs, errs[0]
+    assert total_flows == 3 * sum(1 + (i % 8) for i in range(16))
+    st = server.stats()["serving"]
+    assert st["models"]["m"]["flows_served"] == total_flows
+    assert st["flows_served"] == total_flows
+    assert st["batches_dispatched"] >= 1
+    assert seen and seen[-1] <= total_flows

@@ -32,7 +32,13 @@ sweep's deadline (slack-based shedding bounds waits), and goodput at 2x
 must hold ≥ ``OVERLOAD_PLATEAU_FLOOR`` x goodput at 1x (the
 goodput-within-deadline curve plateaus past saturation instead of
 collapsing) — plus the same 2x cross-run collapse gate on goodput at 1x
-load. The ``sharding`` sweep (multi-device serving) gates the fresh run's
+load. The ``chaos`` sweep (fault recovery) gates the fresh run
+host-independently too — recovery to ≥ 90% of the fault-free completion
+rate must complete within the sweep's own window after an injected
+transient stream crash, and goodput under faults must hold ≥
+``CHAOS_GOODPUT_FLOOR`` x the fault-free rate — plus the 2x cross-run
+collapse gate on the fault-free rate. The ``sharding`` sweep
+(multi-device serving) gates the fresh run's
 serve-stream scaling efficiency at 4 simulated devices (≥
 ``SHARDING_EFF_FLOOR``, normalized by host parallelism so single-core CI
 gates on pool overhead rather than impossible speedups), plus the collapse
@@ -162,6 +168,8 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], l
                                            lines, regressions)
     lines, regressions = _compare_overload(baseline, fresh, threshold,
                                            lines, regressions)
+    lines, regressions = _compare_chaos(baseline, fresh, threshold,
+                                        lines, regressions)
     return lines, regressions
 
 
@@ -384,6 +392,78 @@ def _compare_overload(baseline: dict, fresh: dict, threshold: float,
         lines.append("  [info] overload goodput @1x missing from "
                      f"{'baseline' if not b1 else 'fresh'} run — collapse "
                      "gate NOT applied")
+    return lines, regressions
+
+
+# goodput under an injected transient stream crash must hold at least half
+# the fault-free rate over the same paced phase: migration + respawn make a
+# crash cost one blip, while the failure modes this guards (lost chunks,
+# a wedged drain loop, respawn storms) drag the whole phase toward 0. The
+# recovery flag is binary on the fresh run: the post-fault completion rate
+# must regain ≥ 90% of fault-free within the sweep's own window.
+CHAOS_GOODPUT_FLOOR = 0.5
+
+
+def _compare_chaos(baseline: dict, fresh: dict, threshold: float,
+                   lines: list[str], regressions: list[str]):
+    """Gate the fault-recovery sweep: fresh-run invariants (recovery
+    completes within the sweep window, goodput under faults holds the
+    floor vs fault-free) plus a cross-run collapse gate on the fault-free
+    rate."""
+    bch, fch = baseline.get("chaos"), fresh.get("chaos")
+    if not fch:
+        if bch:
+            lines.append("  [info] chaos section missing from fresh run — "
+                         "fault-recovery gates NOT applied (did the sweep "
+                         "get dropped?)")
+        return lines, regressions
+    if not bch:
+        lines.append("  [info] chaos added since baseline (cross-run "
+                     "collapse gate skipped; invariants gated)")
+    lines.append(
+        f"gate: chaos — recovery within sweep window, goodput under "
+        f"faults ≥ {CHAOS_GOODPUT_FLOOR:.2f}x fault-free")
+    recovered = fch.get("recovered")
+    recovery_s = fch.get("recovery_s")
+    if recovered is None:
+        lines.append("  [info] chaos recovered flag missing — recovery "
+                     "gate NOT applied")
+    elif not recovered:
+        regressions.append(
+            "chaos: post-fault completion rate never regained 90% of "
+            "fault-free within the sweep window — stream supervision is "
+            "not recovering capacity")
+        lines.append("  recovery: not reached within window  REGRESSION")
+    else:
+        lines.append(f"  recovery to ≥90% capacity in {recovery_s:6.2f} s "
+                     "after fault  OK")
+    g_free = fch.get("fault_free_flows_s")
+    g_fault = fch.get("faulted_flows_s")
+    if not g_free or g_fault is None:
+        lines.append("  [info] chaos fault-free/faulted flows/s missing — "
+                     "goodput gate NOT applied")
+    else:
+        ratio = g_fault / g_free
+        if ratio < CHAOS_GOODPUT_FLOOR:
+            regressions.append(
+                f"chaos: goodput under injected faults collapsed — "
+                f"{g_free:.0f} fault-free flows/s → {g_fault:.0f} faulted "
+                f"({ratio:.2f}x < {CHAOS_GOODPUT_FLOOR:.2f} floor)")
+            lines.append(f"  goodput fault-free {g_free:9.0f} → faulted "
+                         f"{g_fault:9.0f} flows/s ({ratio:5.2f}x)  "
+                         "REGRESSION")
+        else:
+            lines.append(f"  goodput fault-free {g_free:9.0f} → faulted "
+                         f"{g_fault:9.0f} flows/s ({ratio:5.2f}x ≥ "
+                         f"{CHAOS_GOODPUT_FLOOR:.2f} floor)  OK")
+    b_free = (bch or {}).get("fault_free_flows_s")
+    if b_free and g_free is not None:
+        _collapse_gate("chaos", "fault-free", b_free, g_free,
+                       threshold, lines, regressions)
+    elif bch:
+        lines.append("  [info] chaos fault-free flows/s missing from "
+                     f"{'baseline' if not b_free else 'fresh'} run — "
+                     "collapse gate NOT applied")
     return lines, regressions
 
 

@@ -50,6 +50,14 @@ see benchmarks/compare.py):
                        doomed tail), and the high-priority class's p99
                        queue-wait must stay bounded by the deadline under
                        2x overload. Gated host-independently (compare.py).
+  * ``chaos``        — fault-recovery sweep (ISSUE 9): the same paced 1x
+                       load twice through a two-stream async server —
+                       fault-free, then with one injected transient
+                       device-stream crash mid-phase (queued chunks
+                       migrate, the worker respawns). Gated (compare.py,
+                       host-independent): recovery to ≥ 90% of the
+                       fault-free completion rate within the sweep
+                       window, and goodput-under-faults ≥ 0.5x fault-free.
 """
 
 from __future__ import annotations
@@ -874,6 +882,157 @@ def sharding_bench(quick: bool = False) -> dict:
     return result
 
 
+def chaos_bench(quick: bool = False) -> dict:
+    """Fault-recovery sweep (ISSUE 9): goodput under an injected crash.
+
+    One tiny MLP behind an AsyncMultiModelServer with two device streams.
+    Capacity is measured from a saturated backlog, then two identical
+    paced phases offer 1x that capacity:
+
+      * fault-free — the baseline goodput (completed flows/s, submit to
+        last completion), and
+      * faulted — the same load, with the chaos injector arming a single
+        transient ``stream_dispatch`` crash at 40% of the phase. The
+        in-flight and queued chunks migrate to the surviving stream and
+        the dead worker respawns with backoff; nothing carries a
+        deadline, so every future must still resolve.
+
+    Recovery is read off the completion timestamps: ``recovery_s`` is the
+    end of the first post-fault sliding window (``window_s`` wide, 0.1 s
+    steps) whose completion rate regains ≥ 90% of the fault-free rate.
+
+    The two host-independent invariants compare.py gates on the fresh
+    run: recovery completes within the sweep window (``recovered``) and
+    ``goodput_ratio`` (faulted / fault-free flows/s) holds ≥ 0.5 — a
+    crash must cost a blip, not the phase.
+    """
+    from repro.launch.chaos import FaultInjector
+    from repro.launch.serve import AsyncMultiModelServer
+
+    backend = "onehot"
+    req = 64                                    # flows per request
+    devices = min(2, jax.device_count())
+    ds = make_dataset("peerrush", flows_per_class=48 if quick else 96)
+    m = train_mlp(ds.train["stats"], ds.train["label"], ds.num_classes,
+                  steps=30 if quick else 60)
+    banks = pegasusify_mlp(m, ds.train["stats"].astype(np.float32),
+                           refine_steps=0)
+    x = jnp.asarray(_tile_to(ds.test["stats"].astype(np.float32), req))
+
+    server = AsyncMultiModelServer(backend=backend, devices=devices,
+                                   queue_depth=None)
+    server.quantum = 256        # bound slice size (same rationale as overload)
+    server.add_model("mlp", banks)
+
+    # warm every (bucket, device) pair a coalesced chunk can land on — a
+    # cold trace inside a timed phase would charge compile luck to the
+    # recovery clock (same rationale as the overload/sharding warms).
+    top = int(server.quantum)
+    x_big = jnp.asarray(_tile_to(ds.test["stats"].astype(np.float32), top))
+    plan = server.registry.get("mlp")
+    for d in jax.devices()[:devices]:
+        for b in (8, 16, 32, 64, 128, 256):
+            if b <= top:
+                plan(x_big[:b], device=d).block_until_ready()
+
+    def settle(futs):
+        concurrent.futures.wait(futs, timeout=600)
+
+    n_cap = 40 if quick else 100
+    capacity = 0.0
+    for measured in (False, True):
+        futs = [server.submit("mlp", x) for _ in range(n_cap)]
+        t0 = time.perf_counter()
+        server.start()
+        settle(futs)
+        if measured:
+            capacity = n_cap * req / (time.perf_counter() - t0)
+        server.stop()
+
+    duration = 2.0 if quick else 3.0
+    window = 0.5
+    fault_at = 0.4 * duration
+
+    inj = FaultInjector(seed=0)
+    inj.armed = False                 # armed mid-phase, at the fault time
+    inj.inject("stream_dispatch", stream=0, after=1, count=1)
+    server.install_chaos(inj)
+
+    def run_phase(fault: bool) -> dict:
+        done_t: list[float] = []
+        done_lock = threading.Lock()
+
+        def on_done(_f):
+            now = time.perf_counter()
+            with done_lock:
+                done_t.append(now)
+
+        futs = []
+        sent = 0
+        armed = False
+        server.start()
+        t_start = time.perf_counter()
+        t_stop = t_start + duration
+        while (now := time.perf_counter()) < t_stop:
+            if fault and not armed and now - t_start >= fault_at:
+                inj.armed = True      # next stream-0 dispatch crashes
+                armed = True
+            target = (now - t_start) * capacity
+            while sent * req < target:
+                f = server.submit("mlp", x)
+                f.add_done_callback(on_done)
+                futs.append(f)
+                sent += 1
+            time.sleep(0.004)
+        settle(futs)                  # no deadlines: ALL must resolve
+        server.stop()
+        ok = sum(1 for f in futs if f.exception() is None)
+        rel = sorted(t - t_start for t in done_t)
+        elapsed = rel[-1] if rel else duration
+        return {"sent": sent, "ok": ok, "elapsed_s": elapsed,
+                "flows_s": ok * req / elapsed, "rel_done": rel}
+
+    free = run_phase(fault=False)
+    faulted = run_phase(fault=True)
+    dev_st = server.stats()["devices"]
+    server.close()
+
+    # sliding-window recovery clock over the faulted phase's completions
+    rel = np.asarray(faulted.pop("rel_done"))
+    free.pop("rel_done")
+    target_rate = 0.9 * free["flows_s"]
+    recovery_s = None
+    w = fault_at
+    while w + window <= faulted["elapsed_s"] + 1e-9:
+        in_win = np.count_nonzero((rel >= w) & (rel < w + window))
+        if in_win * req / window >= target_rate:
+            recovery_s = w + window - fault_at
+            break
+        w += 0.1
+
+    result = {
+        "backend": backend, "quick": quick, "req_flows": req,
+        "devices": devices, "capacity_flows_s": capacity,
+        "duration_s": duration, "window_s": window, "fault_at_s": fault_at,
+        "fault_free_flows_s": free["flows_s"],
+        "faulted_flows_s": faulted["flows_s"],
+        "goodput_ratio": faulted["flows_s"] / free["flows_s"],
+        "recovery_s": recovery_s, "recovered": recovery_s is not None,
+        "fault_free": free, "faulted": faulted,
+        "crashes": sum(d["crashes"] for d in dev_st["per_device"]),
+        "respawns": sum(d["respawns"] for d in dev_st["per_device"]),
+        "migrated_chunks": dev_st["migrated_chunks"],
+        "chaos": inj.stats(),
+    }
+    print(f"chaos: fault-free {free['flows_s']:8.0f} flows/s  faulted "
+          f"{faulted['flows_s']:8.0f} flows/s  ratio "
+          f"{result['goodput_ratio']:4.2f}  recovery "
+          f"{recovery_s if recovery_s is not None else float('nan'):.2f} s  "
+          f"(crashes {result['crashes']}, migrated "
+          f"{result['migrated_chunks']}, respawns {result['respawns']})")
+    return result
+
+
 def main(quick: bool = False):
     sw = modeled_switch_pps()
     cpu_pps, us = measured_cpu_pps(batch=1024 if quick else 4096, iters=5 if quick else 20)
@@ -887,10 +1046,11 @@ def main(quick: bool = False):
     async_serve = async_serve_bench(quick=quick)
     sharding = sharding_bench(quick=quick)
     overload = overload_bench(quick=quick)
+    chaos = chaos_bench(quick=quick)
     return dict(switch_pps=sw, cpu_pps=cpu_pps, speedup=sw / cpu_pps,
                 engine=engine, batch_ladder=ladder, families=families,
                 multi_plan=multi, async_serve=async_serve,
-                sharding=sharding, overload=overload)
+                sharding=sharding, overload=overload, chaos=chaos)
 
 
 if __name__ == "__main__":

@@ -72,6 +72,11 @@ STATIC_LOCK_ORDER = {
     ("devices", "_lock"): 3,
     ("plan", "_replica_lock"): 4,
     ("plan", "lock"): 5,          # _PlanCounters.lock — the innermost lock
+    # self-healing layer (ISSUE 9): breaker state is queried under
+    # devices._lock in stream placement (3 → 6) and never wraps another
+    # lock; the injector lock only guards spec matching/counting.
+    ("health", "_lock"): 6,
+    ("chaos", "_lock"): 7,
 }
 
 LOCK_RANKS = {
@@ -81,6 +86,8 @@ LOCK_RANKS = {
     "devices._lock": 3,
     "plan._replica_lock": 4,
     "plan._ctr.lock": 5,
+    "health._lock": 6,
+    "chaos._lock": 7,
 }
 
 # -- PG001 classification ---------------------------------------------------

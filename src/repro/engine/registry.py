@@ -97,6 +97,11 @@ class PlanRegistry:
 
     def __init__(self, max_plans: int = 64):
         self.max_plans = max_plans
+        # fault-injection hook (repro.launch.chaos) — assigned by
+        # MultiModelServer.install_chaos() or directly in tests; duck-typed
+        # so the engine layer never imports the launch layer. None (the
+        # default) costs one attribute load per named build.
+        self.chaos = None
         # reentrant: discard nests under register/evict, and a GC pass while
         # the lock is held may fire on_death callbacks on the same thread
         self._lock = make_lock("registry._lock", reentrant=True)
@@ -214,6 +219,9 @@ class PlanRegistry:
         new wrap the SAME bank objects: memo entries match by bank
         identity, so discarding would evict the new model's entry too."""
         t0 = time.perf_counter()
+        chaos = self.chaos
+        if chaos is not None:
+            chaos.fire("plan_build", model=name, backend=backend)
         plan = self.plan_for(model, backend=backend, **build_kw)
         build_ms = (time.perf_counter() - t0) * 1e3
         with self._lock:
@@ -249,6 +257,9 @@ class PlanRegistry:
                 return ent["entry"].plan
             model = ent["model"]
             backend, build_kw = ent["backend"], dict(ent["build_kw"])
+        chaos = self.chaos
+        if chaos is not None:
+            chaos.fire("plan_build", model=name, backend=backend)
         t0 = time.perf_counter()
         plan = self.plan_for(model, backend=backend, **build_kw)
         with self._lock:
@@ -259,6 +270,29 @@ class PlanRegistry:
             ent["plan_build_ms"] = (time.perf_counter() - t0) * 1e3
             ent["recompiles"] += 1
             return plan
+
+    def get_with_backend(self, name: str, backend: str) -> ExecutionPlan:
+        """A plan for the model serving ``name``, (re)built for ``backend``
+        instead of the registered one — the server's fallback-ladder entry
+        point (``kernel`` path failing → serve degraded on ``gather``).
+        Hits the memo when the fallback plan was already built (backend
+        participates in the memo key), so flapping between preferred and
+        fallback costs one compile each, total. The named entry itself is
+        untouched: the preferred backend stays registered, and probe-back
+        goes through :meth:`get` as usual."""
+        with self._lock:
+            ent = self._named[name]
+            model = ent["model"]
+            build_kw = dict(ent["build_kw"])
+        chaos = self.chaos
+        if chaos is not None:
+            chaos.fire("plan_build", model=name, backend=backend)
+        return self.plan_for(model, backend=backend, **build_kw)
+
+    def backend_of(self, name: str) -> str:
+        """The registered (preferred) backend serving ``name``."""
+        with self._lock:
+            return self._named[name]["backend"]
 
     def model(self, name: str) -> Any:
         with self._lock:

@@ -156,7 +156,7 @@ class _Request:
     is the per-request urgency (:data:`PRIORITY_RANK`)."""
 
     __slots__ = ("inputs", "size", "future", "deadline_ms",
-                 "t_submit", "t_dispatch", "rank")
+                 "t_submit", "t_dispatch", "rank", "requeues")
 
     def __init__(self, inputs: tuple, size: int, future: Future | None,
                  deadline_ms: float | None = None, rank: int = 1):
@@ -167,6 +167,10 @@ class _Request:
         self.t_submit = time.perf_counter()
         self.t_dispatch = 0.0
         self.rank = rank
+        # failure-retry count (bounded by the server's max_requeues; a
+        # request past the cap fails typed PoisonedRequestError) — bumped
+        # by the dispatch thread only, between scheduler ownership spans
+        self.requeues = 0
 
 
 class ModelQueue:

@@ -56,6 +56,7 @@ from repro.models.transformer import (
 )
 
 from .devices import DeviceStreamPool
+from .health import CLOSED, CircuitBreaker
 from .mesh import batch_specs, decode_state_specs, named, param_specs
 from .request import InferRequest, InferResult
 from .scheduler import (
@@ -65,7 +66,15 @@ from .scheduler import (
 __all__ = ["make_serve_step", "make_prefill_step", "Server", "PegasusServer",
            "MultiModelServer", "AsyncMultiModelServer", "PartialDrainError",
            "QueueFullError", "DeadlineExceededError", "PRIORITY_WEIGHTS",
-           "InferRequest", "InferResult", "DeviceStreamPool"]
+           "InferRequest", "InferResult", "DeviceStreamPool",
+           "ServerStoppedError", "PoisonedRequestError", "FALLBACK_BACKEND"]
+
+# The bottom rung of the backend fallback ladder: plain jnp gather — no
+# Pallas kernel, no one-hot matmul structure, the least machinery that can
+# possibly fail. A model whose preferred-backend path trips its breaker
+# keeps serving on a gather plan (degraded) until a probe back on the
+# preferred path succeeds.
+FALLBACK_BACKEND = "gather"
 
 
 def _warn_legacy(what: str, instead: str) -> None:
@@ -149,6 +158,22 @@ class PartialDrainError(RuntimeError):
             "; ".join(parts) + " (served models' outputs are in "
             ".partial_results; per-model errors in .failed; shed requests "
             "in .shed)")
+
+
+class ServerStoppedError(RuntimeError):
+    """The server was stopped with this request still queued
+    (``AsyncMultiModelServer.stop(drain=False)``) — the request was NOT
+    served and will not be; resubmit after ``start()`` if the work is
+    still wanted. Typed so waiters can tell an orderly shutdown from a
+    dispatch failure."""
+
+
+class PoisonedRequestError(RuntimeError):
+    """A request exhausted its bounded retries (``max_requeues``
+    requeue-at-front attempts all failed) — retrying again would loop
+    forever, since a permanently-bad request coalesces with every later
+    submit to its model. The last underlying dispatch error rides in
+    ``__cause__``."""
 
 
 def _resolve_future(fut: Future | None, *, result=None,
@@ -283,6 +308,10 @@ class PegasusServer:
             "scheduler": {},
             "slo": {},
             "devices": {"count": ndev, "per_device": []},
+            # schema-uniform with the multi-model servers: one plan, no
+            # queue, no breakers — nothing to heal
+            "health": {"models": {}, "degraded_models": [],
+                       "chaos": {"installed": False}},
         }
 
     def infer(self, *inputs, backend: str | None = None) -> jax.Array:
@@ -395,7 +424,9 @@ class MultiModelServer:
                  interpret: bool | None = None, max_batch: int | None = None,
                  registry=None, fuse: bool = True,
                  queue_depth: int | None = None, policy: str = "block",
-                 quantum: int | None = None, devices=None):
+                 quantum: int | None = None, devices=None,
+                 breaker_failures: int = 3, breaker_reset_s: float = 1.0,
+                 max_requeues: int = 5, retry_backoff_s: float = 0.02):
         from repro.engine import DEFAULT_BUCKETS, PlanRegistry
         from repro.engine.plan import resolve_devices
 
@@ -439,6 +470,28 @@ class MultiModelServer:
         self._dispatch_affinity = ThreadAffinity("dispatch")
         self.last_drain_errors: dict[str, Exception] = {}
         self.last_shed: dict[str, int] = {}   # sheds seen by the last drain
+        # -- self-healing (docs/RELIABILITY.md) -----------------------------
+        # Per-model breakers guard the PREFERRED backend path: after
+        # breaker_failures consecutive slice failures the model serves
+        # DEGRADED on the gather fallback until a cooldown probe back on
+        # the preferred path succeeds. max_requeues bounds the deadline-
+        # aware retry (requeue-at-front) so a poison-pill request fails
+        # typed PoisonedRequestError instead of looping forever.
+        self.breaker_failures = int(breaker_failures)    # immutable config
+        self.breaker_reset_s = float(breaker_reset_s)    # immutable config
+        self.max_requeues = int(max_requeues)            # immutable config
+        self.retry_backoff_s = float(retry_backoff_s)    # immutable config
+        self._breakers: dict[str, CircuitBreaker] = {}  # guarded-by: _ctr_lock
+        self._health_ctrs: dict[str, dict] = {}         # guarded-by: _ctr_lock
+        # retry pacing, touched ONLY by the dispatch thread (the sync
+        # drain caller or the async loop — the same single-dispatcher
+        # exclusivity _dispatch_affinity pins), so deliberately unguarded
+        # like schedule_log
+        self._retry_streak: dict[str, int] = {}
+        self._retry_not_before: dict[str, float] = {}
+        # fault-injection hook — None until install_chaos(); the hot path
+        # pays one is-None check per dispatched slice (repro.launch.chaos)
+        self._chaos = None
         for name in self.registry.names():   # adopt a pre-populated registry
             self._track(name)
         for name, model in dict(models or {}).items():
@@ -458,6 +511,19 @@ class MultiModelServer:
             self._counters.setdefault(name, {"requests_served": 0,
                                              "batches_run": 0,
                                              "flows_served": 0})
+            if name not in self._breakers:
+                self._breakers[name] = CircuitBreaker(
+                    name, failure_threshold=self.breaker_failures,
+                    reset_timeout_s=self.breaker_reset_s)
+            self._health_ctrs.setdefault(name, {"fallback_batches": 0,
+                                                "probe_batches": 0,
+                                                "retries": 0,
+                                                "poisoned": 0,
+                                                "deadline_dropped": 0})
+
+    def _breaker(self, name: str) -> CircuitBreaker | None:
+        with self._ctr_lock:
+            return self._breakers.get(name)
 
     def _tracked(self, name: str) -> None:
         with self._ctr_lock:
@@ -534,10 +600,30 @@ class MultiModelServer:
             _resolve_future(r.future, error=err)
         with self._ctr_lock:
             self._counters.pop(name, None)
+            self._breakers.pop(name, None)
+            self._health_ctrs.pop(name, None)
         return self.registry.evict(name)
 
     def models(self) -> list[str]:
         return self.registry.names()
+
+    def install_chaos(self, injector) -> None:
+        """Wire a :class:`repro.launch.chaos.FaultInjector` into every
+        dispatch edge this server owns — its own plan-call edge, the
+        registry's plan-build edge, and the device pool's stream-dispatch
+        edge — in one call. Explicit hooks, never monkey-patching; with no
+        injector installed every edge costs one ``is None`` check."""
+        self._chaos = injector
+        self.registry.chaos = injector
+        if self._pool is not None:
+            self._pool.chaos = injector
+
+    def uninstall_chaos(self) -> None:
+        """Detach the injector from every hook :meth:`install_chaos` set."""
+        self._chaos = None
+        self.registry.chaos = None
+        if self._pool is not None:
+            self._pool.chaos = None
 
     # -- request paths ------------------------------------------------------
 
@@ -675,9 +761,40 @@ class MultiModelServer:
         # earlier ones run — the stamp must capture that ordering effect
         for r in reqs:
             r.t_dispatch = t0
-        g: dict = {"name": name, "reqs": reqs, "t0": t0}
+        # "managed" = no explicit caller backend override: only managed
+        # groups ride the fallback ladder and feed the model's breaker (an
+        # explicit per-drain backend is the caller experimenting, not the
+        # serving path the breaker guards)
+        g: dict = {"name": name, "reqs": reqs, "t0": t0, "degraded": False,
+                   "probe": False, "managed": backend is None}
         try:
-            plan = self.registry.get(name)
+            br = self._breaker(name) if g["managed"] else None
+            if br is not None and br.state != CLOSED:
+                # fallback ladder: the preferred-path breaker is tripped.
+                # A granted cooldown probe retries the preferred backend
+                # (success auto-reinstates); otherwise this slice serves
+                # DEGRADED on the gather fallback plan — same model, same
+                # tables, least-machinery backend.
+                if br.allow():
+                    g["probe"] = True
+                else:
+                    g["degraded"] = True
+            if self._chaos is not None:
+                self._chaos.fire(
+                    "plan_call", model=name,
+                    backend=(FALLBACK_BACKEND if g["degraded"] else
+                             backend or self.registry.backend_of(name)))
+            if g["degraded"]:
+                plan = self.registry.get_with_backend(name, FALLBACK_BACKEND)
+            else:
+                plan = self.registry.get(name)
+            if g["degraded"] or g["probe"]:
+                with self._ctr_lock:
+                    h = self._health_ctrs.get(name)
+                    if h is not None:
+                        key = ("fallback_batches" if g["degraded"]
+                               else "probe_batches")
+                        h[key] += 1
             cat, sizes, total = _coalesce([r.inputs for r in reqs])
             chunks = bucket_chunks(total, plan.buckets, self.max_batch)
             outs, start = [], 0
@@ -709,12 +826,14 @@ class MultiModelServer:
                  t_begun=time.perf_counter())
         return g
 
-    def _finish_group(self, g: dict, *, requeue_on_error: bool):
+    def _finish_group(self, g: dict):
         """Phase 2: block on the group's device results, split per request,
-        commit counters, record latency, resolve futures. On failure either
-        requeues the slice at the front (sync drain: retryable, counters
-        untouched) or fails its futures (async loop). Returns the per-
-        request np outputs, or None on failure."""
+        commit counters, record latency, resolve futures. On failure the
+        model's breaker records it (preferred path only) and the slice goes
+        through deadline-aware bounded retry — requeue-at-front, capped by
+        ``max_requeues``, never past a request's own deadline (see
+        :meth:`_retry_or_fail`). Returns the per-request np outputs, or
+        None on failure."""
         name, reqs = g["name"], g["reqs"]
         err = g.get("error")
         if err is None:
@@ -736,14 +855,20 @@ class MultiModelServer:
                     split = _split(out, g["sizes"])  # np conversion: sync
             except Exception as e:
                 err = e
+        # the breaker sees only the PREFERRED path: a degraded (fallback)
+        # slice neither extends nor resets the preferred path's streak
+        br = (self._breaker(name)
+              if g.get("managed", True) and not g.get("degraded") else None)
         if err is not None:
             self.last_drain_errors[name] = err
-            if requeue_on_error:
-                self._sched.requeue_front(name, reqs)
-            else:
-                for r in reqs:
-                    _resolve_future(r.future, error=err)
+            if br is not None:
+                br.record_failure()
+            self._retry_or_fail(name, reqs, err, probe=g.get("probe", False))
             return None
+        if br is not None:
+            br.record_success()      # probe success auto-reinstates
+        self._retry_streak.pop(name, None)
+        self._retry_not_before.pop(name, None)
         # service = this group's own dispatch phase + its own blocking
         # finish — NOT wall time since begin, which would fold every
         # earlier group's host conversion into later (lower-priority)
@@ -769,6 +894,54 @@ class MultiModelServer:
             _resolve_future(r.future, result=o)
         return split
 
+    def _retry_or_fail(self, name: str, reqs: list, err: Exception, *,
+                       probe: bool = False) -> None:
+        """Failure triage for one slice — deadline-aware bounded retry.
+
+        Per request: a deadline already burned through fails NOW with the
+        dispatch error (never retry past a request's own ``deadline_ms``);
+        a request at ``max_requeues`` fails typed
+        :class:`PoisonedRequestError` (the dispatch error in
+        ``__cause__``); everything else is requeued at the FRONT (retry
+        order preserved) with its requeue count bumped. A failed breaker
+        PROBE requeues without charging the count — the probe was the
+        server's experiment, not the request's fault. Consecutive failed
+        slices back off exponentially (``retry_backoff_s`` doubling, capped
+        at 1 s): the async loop excludes the model until the pause expires,
+        the sync drain's per-call exclusion makes pacing moot."""
+        now = time.perf_counter()
+        survivors: list = []
+        n_deadline = n_poison = 0
+        for r in reqs:
+            if (r.deadline_ms is not None
+                    and (now - r.t_submit) * 1e3 >= r.deadline_ms):
+                _resolve_future(r.future, error=err)
+                n_deadline += 1
+            elif not probe and r.requeues >= self.max_requeues:
+                perr = PoisonedRequestError(
+                    f"request for {name!r} failed {r.requeues + 1} times "
+                    f"(max_requeues={self.max_requeues}); giving up — "
+                    "discard or fix the request")
+                perr.__cause__ = err
+                _resolve_future(r.future, error=perr)
+                n_poison += 1
+            else:
+                if not probe:
+                    r.requeues += 1
+                survivors.append(r)
+        if survivors:
+            self._sched.requeue_front(name, survivors)
+            streak = self._retry_streak.get(name, 0)
+            self._retry_not_before[name] = now + min(
+                self.retry_backoff_s * (2 ** streak), 1.0)
+            self._retry_streak[name] = streak + 1
+        with self._ctr_lock:
+            h = self._health_ctrs.get(name)
+            if h is not None:
+                h["retries"] += len(survivors)
+                h["poisoned"] += n_poison
+                h["deadline_dropped"] += n_deadline
+
     def drain(self, *, backend: str | None = None) -> dict:
         """Serve every queued request: the WFQ scheduler releases per-model
         slices (deficit round-robin: ``quantum x weight`` flows of credit
@@ -782,9 +955,11 @@ class MultiModelServer:
         double-counts partially-run chunks), the model is excluded for the
         rest of this drain, and every other model drains normally. The
         per-model exceptions land in ``last_drain_errors``; drain raises
-        only if NO model succeeded. A request that is itself bad will fail
-        every retry (it coalesces with whatever else queues up) — clear it
-        with ``discard_pending``.
+        only if NO model succeeded. The retry is BOUNDED: a request that
+        fails ``max_requeues`` requeues fails typed
+        :class:`PoisonedRequestError` instead of looping forever (or clear
+        the queue sooner with ``discard_pending``), and a request whose own
+        ``deadline_ms`` has burned through is never retried at all.
 
         Deadline-bearing requests whose slack ran out while queued are
         SHED by the scheduler (dropped, future failed with
@@ -803,7 +978,7 @@ class MultiModelServer:
             begun = [self._begin_group(name, reqs, backend)
                      for name, reqs in groups]
             for g in begun:
-                outs = self._finish_group(g, requeue_on_error=True)
+                outs = self._finish_group(g)
                 if outs is None:
                     failed.add(g["name"])  # skip for the rest of this drain
                 else:
@@ -895,8 +1070,11 @@ class MultiModelServer:
         request counters, ``engine`` the registry cache plus per-model
         plan build/compile-cache stats, ``scheduler`` the queue config and
         latency percentiles, ``slo`` the per-model SLO counters
-        (admission/shed/goodput/starvation), and ``devices`` the
-        per-device stream utilization/depth (multi-device servers)."""
+        (admission/shed/goodput/starvation), ``devices`` the per-device
+        stream utilization/depth (multi-device servers), and ``health``
+        the self-healing state — per-model breaker + fallback/retry
+        counters, ``degraded_models``, and the installed chaos injector
+        (docs/RELIABILITY.md)."""
         reg = self.registry.stats()
         zeros = {"requests_served": 0, "batches_run": 0, "flows_served": 0}
         # registry names BEFORE taking the counter lock: models() acquires
@@ -912,6 +1090,27 @@ class MultiModelServer:
             per_model = {name: {**zeros, **self._counters.get(name, {})}
                          for name in names}
             batches_dispatched = self.batches_dispatched
+            breakers = dict(self._breakers)
+            hctrs = {n: dict(c) for n, c in self._health_ctrs.items()}
+        # breaker snapshots AFTER releasing _ctr_lock: each stats() call
+        # takes health._lock (rank 6 — legal under rank 2, but there is no
+        # reason to hold the counter lock across N of them)
+        health_models: dict = {}
+        degraded_models: list = []
+        for n in names:
+            br = breakers.get(n)
+            if br is None:
+                continue
+            bst = br.stats()
+            is_degraded = bst["state"] != CLOSED
+            if is_degraded:
+                degraded_models.append(n)
+            health_models[n] = {
+                **bst, **hctrs.get(n, {}),
+                "degraded": is_degraded,
+                "preferred_backend": reg.get(n, {}).get("backend"),
+                "fallback_backend": FALLBACK_BACKEND,
+            }
         return {
             "backend": self.backend,
             "serving": {
@@ -935,6 +1134,12 @@ class MultiModelServer:
             "slo": {"models": self._sched.counters()},
             "devices": (self._pool.stats() if self._pool is not None
                         else {"count": 1, "per_device": []}),
+            "health": {
+                "models": health_models,
+                "degraded_models": sorted(degraded_models),
+                "chaos": (self._chaos.stats() if self._chaos is not None
+                          else {"installed": False}),
+            },
         }
 
     def slo_counters(self) -> dict:
@@ -1011,8 +1216,10 @@ class AsyncMultiModelServer(MultiModelServer):
         Args:
             drain: wait for every queue to empty first, so in-flight
                 futures all resolve before return; ``False`` halts after
-                the current round — pending requests stay queued (their
-                futures unresolved) until a ``start()``/``drain()``.
+                the current round and FAILS every still-pending future
+                with :class:`ServerStoppedError` — a waiter blocked on
+                ``future.result()`` unblocks instead of hanging forever
+                (the old contract left them queued and unresolved).
             timeout: overall budget in SECONDS for drain-wait + join;
                 ``None`` waits indefinitely. On expiry the loop may still
                 be alive (``running`` stays true) and a later ``stop()``
@@ -1021,6 +1228,10 @@ class AsyncMultiModelServer(MultiModelServer):
                 concurrent dispatcher.
         """
         if self._thread is None:
+            if not drain:
+                # never started (or already stopped): the drain=False
+                # contract still holds — no future may stay pending
+                self._fail_pending_stopped()
             return
         deadline = None if timeout is None else time.monotonic() + timeout
         if drain:
@@ -1051,6 +1262,20 @@ class AsyncMultiModelServer(MultiModelServer):
                         f"server stopped with {name!r} requests pending")
                     for r in self._sched.discard(name):
                         _resolve_future(r.future, error=err)
+            elif not drain:
+                self._fail_pending_stopped()
+
+    def _fail_pending_stopped(self) -> None:
+        """``stop(drain=False)``: discard every queued request and fail its
+        future with typed :class:`ServerStoppedError`, so no waiter is
+        left blocked on a future nothing will ever resolve."""
+        for name in list(self.pending()):
+            err = ServerStoppedError(
+                f"server stopped (drain=False) with {name!r} requests "
+                "pending — the request was not served; resubmit after "
+                "start() if still wanted")
+            for r in self._sched.discard(name):
+                _resolve_future(r.future, error=err)
 
     @property
     def running(self) -> bool:
@@ -1195,10 +1420,23 @@ class AsyncMultiModelServer(MultiModelServer):
         while not self._stop_flag.is_set():
             try:
                 # re-read per round: server.quantum is documented as a live
-                # tunable, so the loop must not cache it at thread start
-                groups = self._sched.pull_round(self._quantum())
+                # tunable, so the loop must not cache it at thread start.
+                # Models inside their retry backoff window are excluded —
+                # their requeued-at-front work waits out the pause while
+                # every other model keeps draining.
+                now = time.perf_counter()
+                backoff = frozenset(
+                    n for n, t in self._retry_not_before.items() if t > now)
+                groups = self._sched.pull_round(self._quantum(),
+                                                exclude=backoff)
                 if not groups:
-                    self._sched.wait_for_work(self._idle_wait)
+                    if backoff:
+                        # wait_for_work returns immediately while the
+                        # backed-off work sits queued; pace the retry loop
+                        # instead of spinning on it
+                        time.sleep(0.002)
+                    else:
+                        self._sched.wait_for_work(self._idle_wait)
                     continue
                 # two-phase like drain(): enqueue every model's chunks on
                 # the device before blocking on any result. Async failures
@@ -1208,7 +1446,7 @@ class AsyncMultiModelServer(MultiModelServer):
                          for name, reqs in groups]
                 for g in begun:
                     try:
-                        self._finish_group(g, requeue_on_error=False)
+                        self._finish_group(g)
                     except Exception as e:       # unexpected: _finish_group
                         # already routes dispatch errors onto futures, so
                         # anything escaping it would otherwise strand this

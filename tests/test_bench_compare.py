@@ -14,7 +14,7 @@ from benchmarks.compare import compare, trajectory_table
 
 
 def _doc(per_call, batch=1024, families=None, multi=None, async_serve=None,
-         overload=None, sharding=None):
+         overload=None, sharding=None, chaos=None):
     return {
         "engine": {
             "batch": batch,
@@ -25,6 +25,7 @@ def _doc(per_call, batch=1024, families=None, multi=None, async_serve=None,
         **({"async_serve": async_serve} if async_serve else {}),
         **({"overload": overload} if overload else {}),
         **({"sharding": sharding} if sharding else {}),
+        **({"chaos": chaos} if chaos else {}),
     }
 
 
@@ -402,6 +403,78 @@ def test_sharding_cross_run_collapse_gated():
     ok = _doc(BASE, sharding=_sharding(f1=25000.0))      # 1.6x: host noise
     _, regressions = compare(base, ok, 0.25)
     assert regressions == []
+
+
+def _chaos(free=50000.0, faulted=40000.0, recovered=True, recovery=0.7):
+    return {
+        "fault_free_flows_s": free,
+        "faulted_flows_s": faulted,
+        "goodput_ratio": faulted / free if free else None,
+        "recovered": recovered,
+        "recovery_s": recovery if recovered else None,
+        "window_s": 0.5,
+        "fault_at_s": 0.8,
+    }
+
+
+def test_chaos_invariants_pass():
+    base = _doc(BASE, chaos=_chaos())
+    fresh = _doc(BASE, chaos=_chaos(free=45000.0, faulted=30000.0))
+    lines, regressions = compare(base, fresh, 0.25)
+    assert regressions == []
+    assert any("recovery to ≥90%" in l and "OK" in l for l in lines)
+    assert any("goodput fault-free" in l and "OK" in l for l in lines)
+
+
+def test_chaos_recovery_missed_gated():
+    """Fresh-run invariant: never regaining 90% capacity inside the sweep
+    window means supervision lost the stream for good — host-independent,
+    gated even with no baseline section."""
+    fresh = _doc(BASE, chaos=_chaos(recovered=False))
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert len(regressions) == 1
+    assert "not recovering capacity" in regressions[0]
+
+
+def test_chaos_goodput_floor_gated():
+    """goodput under faults < 0.5x fault-free = the crash cost the phase,
+    not a blip (lost chunks / wedged loop / respawn storm)."""
+    fresh = _doc(BASE, chaos=_chaos(free=50000.0, faulted=20000.0))
+    _, regressions = compare(_doc(BASE), fresh, 0.25)
+    assert len(regressions) == 1
+    assert "goodput under injected faults collapsed" in regressions[0]
+    # exactly at the floor: passes
+    ok = _doc(BASE, chaos=_chaos(free=50000.0, faulted=25000.0))
+    _, regressions = compare(_doc(BASE), ok, 0.25)
+    assert regressions == []
+
+
+def test_chaos_cross_run_collapse_gated():
+    base = _doc(BASE, chaos=_chaos(free=50000.0))
+    dead = _doc(BASE, chaos=_chaos(free=20000.0, faulted=16000.0))  # 2.5x
+    _, regressions = compare(base, dead, 0.25)
+    assert len(regressions) == 1 and "collapse limit" in regressions[0]
+    ok = _doc(BASE, chaos=_chaos(free=30000.0, faulted=24000.0))    # 1.67x
+    _, regressions = compare(base, ok, 0.25)
+    assert regressions == []
+
+
+def test_chaos_missing_section_or_fields_is_visible():
+    base = _doc(BASE, chaos=_chaos())
+    lines, regressions = compare(base, _doc(BASE), 0.25)
+    assert regressions == []
+    assert any("chaos section missing" in l for l in lines)
+    # added since baseline: invariants still gate, collapse skipped
+    lines, regressions = compare(_doc(BASE), base, 0.25)
+    assert regressions == []
+    assert any("chaos added since baseline" in l for l in lines)
+    # dropped fields: loud info, not a crash or a silent green
+    broken = _doc(BASE, chaos={"window_s": 0.5})
+    lines, regressions = compare(base, broken, 0.25)
+    assert regressions == []
+    assert any("recovery gate NOT applied" in l for l in lines)
+    assert any("goodput gate NOT applied" in l for l in lines)
+    assert any("collapse gate NOT applied" in l for l in lines)
 
 
 def test_trajectory_table(tmp_path):

@@ -1,0 +1,385 @@
+"""Chaos-driven error-path suite (ISSUE 9): the fault-injection harness
+itself (determinism, scoping, occurrence counting), the circuit-breaker
+lifecycle, and the self-healing serving behaviors the harness exists to
+exercise — backend fallback-ladder parity, deadline-aware bounded retry,
+poison-pill bounding, device-stream crash migration + respawn, dead-worker
+detection, zero-healthy inline degrade, and the stop(drain=False)
+regression. Everything here runs tiny gather/onehot plans or stub device
+pools — fast-lane material, runnable under PEGASUS_SANITIZE=1 (the
+dedicated `chaos` CI lane does exactly that).
+"""
+
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.amm import init_pegasus_linear
+from repro.launch.chaos import FaultInjector, InjectedFaultError
+from repro.launch.devices import DeviceStreamPool
+from repro.launch.health import CLOSED, HALF_OPEN, OPEN, CircuitBreaker
+from repro.launch.scheduler import DeadlineExceededError
+from repro.launch.serve import (
+    AsyncMultiModelServer, InferRequest, PoisonedRequestError,
+    ServerStoppedError,
+)
+
+
+def _banks(seed: int = 0, n_out: int = 5) -> list:
+    rng = np.random.default_rng(seed)
+    return [init_pegasus_linear(
+        rng.normal(size=(8, n_out)).astype(np.float32), None,
+        rng.normal(size=(64, 8)).astype(np.float32), group_size=2, depth=3,
+        lut_bits=None)]
+
+
+@pytest.fixture(scope="module")
+def x():
+    return jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)),
+                       jnp.float32)
+
+
+def _serve_one(srv, name, x, timeout=30):
+    return srv.submit(InferRequest(name, x)).result(timeout).output
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker: the full lifecycle, driven by a fake clock (no sleeps)
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_lifecycle_closed_open_half_open():
+    t = [0.0]
+    br = CircuitBreaker("m", failure_threshold=2, reset_timeout_s=1.0,
+                        clock=lambda: t[0])
+    assert br.state == CLOSED and br.allow()
+    assert br.record_failure() == CLOSED         # streak 1 of 2
+    assert br.record_failure() == OPEN           # tripped
+    assert not br.allow()                        # cooldown running
+    t[0] = 0.5
+    assert not br.allow()
+    t[0] = 1.1
+    assert br.allow()                            # cooldown elapsed: probe
+    assert br.state == HALF_OPEN
+    assert not br.allow()                        # half_open_probes=1
+    assert br.record_failure() == OPEN           # failed probe re-opens
+    t[0] = 1.5
+    assert not br.allow()                        # cooldown RESTARTED at 1.1
+    t[0] = 2.2
+    assert br.allow()
+    assert br.record_success() == CLOSED         # probe success reinstates
+    st = br.stats()
+    assert st["opened"] == 1 and st["reopened"] == 1
+    assert st["half_opens"] == 2 and st["reinstated"] == 1
+    # one success resets the consecutive streak
+    br.record_failure()
+    assert br.record_success() == CLOSED
+    assert br.record_failure() == CLOSED         # streak restarted at 1
+
+
+def test_breaker_validates_config():
+    with pytest.raises(ValueError):
+        CircuitBreaker(failure_threshold=0)
+    with pytest.raises(ValueError):
+        CircuitBreaker(reset_timeout_s=-1.0)
+    with pytest.raises(ValueError):
+        CircuitBreaker(half_open_probes=0)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: scoping, occurrence counting, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_injector_scoping_after_count():
+    inj = FaultInjector()
+    spec = inj.inject("plan_call", model="a", after=2, count=1)
+    inj.fire("plan_call", model="b")             # scope mismatch: no match
+    inj.fire("plan_call", model="a")             # occurrence 1: passes
+    with pytest.raises(InjectedFaultError) as ei:
+        inj.fire("plan_call", model="a")         # occurrence 2: fires
+    assert ei.value.site == "plan_call"
+    assert ei.value.scope["model"] == "a"
+    inj.fire("plan_call", model="a")             # count=1 exhausted
+    assert spec.matched == 3 and spec.fired == 1
+    sched = inj.schedule()
+    assert len(sched) == 1
+    assert sched[0]["site"] == "plan_call" and sched[0]["occurrence"] == 2
+
+
+def test_injector_persistent_disarm_and_custom_error():
+    inj = FaultInjector()
+    boom = RuntimeError("boom")
+    inj.inject("stream_dispatch", stream=0, count=None, error=boom)
+    for _ in range(3):
+        with pytest.raises(RuntimeError) as ei:
+            inj.fire("stream_dispatch", stream=0)
+        assert ei.value is boom                  # persistent + custom payload
+    inj.armed = False
+    inj.fire("stream_dispatch", stream=0)        # disarmed: no-op
+    inj.armed = True
+    inj.clear()
+    inj.fire("stream_dispatch", stream=0)        # cleared: no specs
+    assert inj.stats()["fired"] == 3             # history survives clear()
+
+
+def test_injector_slow_mode_stalls_then_proceeds():
+    inj = FaultInjector()
+    inj.inject("plan_build", mode="slow", delay_ms=30, count=1)
+    t0 = time.perf_counter()
+    inj.fire("plan_build", model="m", backend="onehot")   # stalls, no raise
+    assert time.perf_counter() - t0 >= 0.025
+
+
+def _probability_schedule(seed: int) -> list:
+    inj = FaultInjector(seed=seed)
+    inj.inject("plan_call", probability=0.5, count=None)
+    for i in range(64):
+        try:
+            inj.fire("plan_call", model=f"m{i % 3}")
+        except InjectedFaultError:
+            pass
+    return inj.schedule()
+
+
+def test_injector_determinism_same_seed_same_schedule():
+    a, b = _probability_schedule(42), _probability_schedule(42)
+    assert a == b
+    assert 0 < len(a) < 64                       # probabilistic, not all/none
+    assert _probability_schedule(7) != a         # seed actually matters
+
+
+# ---------------------------------------------------------------------------
+# Self-healing serving: fallback ladder, bounded retry, poison pills
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_ladder_parity_and_probe_back(x):
+    """A persistent preferred-backend fault trips the breaker; the model
+    keeps serving DEGRADED on gather with output parity, other models are
+    untouched, and clearing the fault probe-backs to the preferred path."""
+    srv = AsyncMultiModelServer(
+        {"good": _banks(0), "flaky": _banks(1)}, backend="onehot",
+        breaker_failures=3, breaker_reset_s=0.15, max_requeues=10,
+        retry_backoff_s=0.005, idle_wait=0.01)
+    with srv:
+        healthy = _serve_one(srv, "flaky", x)    # preferred path, pre-fault
+        inj = FaultInjector(seed=1)
+        inj.inject("plan_call", model="flaky", backend="onehot", count=None)
+        srv.install_chaos(inj)
+        degraded = _serve_one(srv, "flaky", x)   # heals onto gather
+        np.testing.assert_allclose(degraded, healthy, rtol=1e-4, atol=1e-4)
+        good = _serve_one(srv, "good", x)        # other model unaffected
+        assert good.shape == healthy.shape
+        h = srv.stats()["health"]
+        m = h["models"]["flaky"]
+        assert m["degraded"] and m["state"] == OPEN
+        assert m["fallback_batches"] >= 1
+        assert m["preferred_backend"] == "onehot"
+        assert m["fallback_backend"] == "gather"
+        assert h["degraded_models"] == ["flaky"]
+        assert h["models"]["good"]["state"] == CLOSED
+        assert not h["models"]["good"]["degraded"]
+        assert h["chaos"]["installed"] and h["chaos"]["fired"] >= 3
+        # fault cleared: the next granted probe reinstates the preferred path
+        inj.clear()
+        time.sleep(0.2)                          # cooldown elapses
+        deadline = time.monotonic() + 10
+        while (srv.stats()["health"]["models"]["flaky"]["state"] != CLOSED
+                and time.monotonic() < deadline):
+            _serve_one(srv, "flaky", x)
+            time.sleep(0.02)
+        m = srv.stats()["health"]["models"]["flaky"]
+        assert m["state"] == CLOSED and m["reinstated"] >= 1
+        assert m["probe_batches"] >= 1
+        assert srv.stats()["health"]["degraded_models"] == []
+
+
+def test_retry_never_past_request_deadline(x):
+    """Bounded retry must stop at the request's own deadline_ms — the
+    future fails with the dispatch (or shed) error well before the retry
+    budget could run out, and nothing stays queued."""
+    srv = AsyncMultiModelServer(
+        {"m": _banks()}, backend="gather", breaker_reset_s=60.0,
+        max_requeues=50, retry_backoff_s=0.005, idle_wait=0.01)
+    with srv:
+        inj = FaultInjector()
+        inj.inject("plan_call", model="m", count=None)
+        srv.install_chaos(inj)
+        fut = srv.submit(InferRequest("m", x, deadline_ms=80.0))
+        t0 = time.perf_counter()
+        with pytest.raises((InjectedFaultError, DeadlineExceededError)):
+            fut.result(timeout=10)
+        # 50 retries at capped-1s backoff would take ~45s; the deadline
+        # bounded it instead
+        assert time.perf_counter() - t0 < 5.0
+        assert srv.pending().get("m", 0) == 0
+
+
+def test_poison_pill_fails_typed_after_bounded_requeues(x):
+    srv = AsyncMultiModelServer(
+        {"m": _banks(), "ok": _banks(3)}, backend="gather",
+        breaker_failures=2, breaker_reset_s=60.0, max_requeues=3,
+        retry_backoff_s=0.002, idle_wait=0.01)
+    with srv:
+        inj = FaultInjector()
+        inj.inject("plan_call", model="m", count=None)   # every backend
+        srv.install_chaos(inj)
+        fut = srv.submit(InferRequest("m", x))
+        with pytest.raises(PoisonedRequestError) as ei:
+            fut.result(timeout=30)
+        assert isinstance(ei.value.__cause__, InjectedFaultError)
+        assert srv.pending().get("m", 0) == 0    # nothing left to loop on
+        assert srv.running                       # the loop survived it
+        out = _serve_one(srv, "ok", x)           # and still serves others
+        assert out.shape[0] == x.shape[0]
+        m = srv.stats()["health"]["models"]["m"]
+        assert m["poisoned"] >= 1 and m["retries"] >= 3
+
+
+def test_stop_without_drain_fails_pending_futures(x):
+    """Satellite regression: stop(drain=False) must fail still-pending
+    futures with typed ServerStoppedError so a blocked waiter unblocks
+    (they used to stay unresolved forever)."""
+    srv = AsyncMultiModelServer({"m": _banks()}, backend="gather")
+    fut = srv.submit(InferRequest("m", x))       # never start()ed: stays queued
+    seen: list = []
+    waiter = threading.Thread(
+        target=lambda: seen.append(fut.exception(timeout=10)), daemon=True)
+    waiter.start()
+    srv.stop(drain=False)
+    waiter.join(timeout=5)
+    assert not waiter.is_alive()                 # the waiter unblocked
+    assert isinstance(seen[0], ServerStoppedError)
+    assert srv.pending().get("m", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# DeviceStreamPool supervision (stub devices: the pool is engine-agnostic)
+# ---------------------------------------------------------------------------
+
+
+def test_worker_crash_migrates_chunks_and_respawns():
+    inj = FaultInjector()
+    inj.inject("stream_dispatch", stream=1, after=1, count=1)
+    pool = DeviceStreamPool(["d0", "d1"], chaos=inj, respawn_backoff_s=0.01)
+    try:
+        gate = threading.Event()
+        blocked = pool.submit(lambda d: (gate.wait(10), "blocked")[1], 1000)
+        # stream 0 is busy with 1000 pending flows: these place on stream 1,
+        # whose worker dies on its first dispatch — the in-hand chunk and
+        # any queued ones migrate to stream 0 and still resolve
+        futs = [pool.submit(lambda d, i=i: ("ok", i), 1) for i in range(3)]
+        gate.set()
+        assert blocked.result(timeout=5) == "blocked"
+        assert [f.result(timeout=5)[0] for f in futs] == ["ok"] * 3
+        st = pool.stats()
+        assert st["migrated_chunks"] >= 1
+        assert st["per_device"][1]["crashes"] == 1
+        # the respawn backoff brings the worker back
+        deadline = time.monotonic() + 5
+        while (pool.stats()["per_device"][1]["dead"]
+                and time.monotonic() < deadline):
+            time.sleep(0.01)
+        st = pool.stats()
+        assert not st["per_device"][1]["dead"]
+        assert st["per_device"][1]["respawns"] >= 1
+        assert st["dead_streams"] == 0
+    finally:
+        pool.close()
+
+
+def test_dead_stream_detected_and_routed_around():
+    inj = FaultInjector()
+    inj.inject("stream_dispatch", stream=0, after=1, count=1)
+    pool = DeviceStreamPool(["d0", "d1"], chaos=inj, respawn_backoff_s=30.0)
+    try:
+        # stream 0's worker dies in-hand; the chunk migrates and RUNS on d1
+        migrated = pool.submit(lambda d: ("ran-on", d), 1)
+        assert migrated.result(timeout=5) == ("ran-on", "d1")
+        st = pool.stats()                        # satellite: surfaced here
+        assert st["dead_streams"] == 1
+        assert st["per_device"][0]["dead"] and st["per_device"][0]["crashes"] == 1
+        assert not st["per_device"][1]["dead"]
+        routed = pool.submit(lambda d: d, 1)     # placement routes around it
+        assert routed.result(timeout=5) == "d1"
+        assert pool.stats()["healthy_streams"] == 1
+    finally:
+        pool.close()
+
+
+def test_silently_dead_worker_detected_at_stats_time():
+    """Satellite: a worker that vanished WITHOUT supervision seeing the
+    death (simulated by swapping in an already-finished thread) is still
+    detected lazily — at stats() time and in placement — and its stream is
+    reaped rather than stranding its FIFO."""
+    pool = DeviceStreamPool(["d0", "d1"], respawn_backoff_s=30.0)
+    try:
+        t = threading.Thread(target=lambda: None)
+        t.start()
+        t.join()
+        with pool._lock:
+            pool._streams[0].thread = t          # looks dead, never marked
+        st = pool.stats()
+        assert st["dead_streams"] == 1 and st["per_device"][0]["dead"]
+        fut = pool.submit(lambda d: d, 1)
+        assert fut.result(timeout=5) == "d1"
+    finally:
+        pool.close()
+
+
+def test_zero_healthy_streams_degrade_to_inline_dispatch():
+    inj = FaultInjector()
+    inj.inject("stream_dispatch", count=None)    # any stream, persistent
+    pool = DeviceStreamPool(["d0"], chaos=inj, respawn_backoff_s=5.0)
+    try:
+        doomed = pool.submit(lambda d: "never", 1)
+        # single stream, nowhere to migrate: the chunk fails typed
+        with pytest.raises(InjectedFaultError):
+            doomed.result(timeout=5)
+        # the pool keeps serving INLINE on the caller thread — degraded,
+        # not deadlocked (the inline path carries no dispatch hook)
+        fut = pool.submit(lambda d: ("inline", d), 1)
+        assert fut.result(timeout=1) == ("inline", "d0")
+        st = pool.stats()
+        assert st["dead_streams"] == 1 and st["healthy_streams"] == 0
+        assert st["inline_dispatches"] >= 1
+        assert st["per_device"][0]["dead"]
+    finally:
+        pool.close()
+
+
+def test_breaker_open_stream_quarantined_then_reinstated():
+    """Per-dispatch failures (caught, future-carried) trip the stream's
+    breaker without killing the worker; placement routes around the OPEN
+    stream, then a cooldown probe chunk reinstates it."""
+    pool = DeviceStreamPool(["d0", "d1"], breaker_failures=2,
+                            breaker_reset_s=0.1)
+    try:
+        def bad(d):
+            raise ValueError("organic dispatch failure")
+
+        gate = threading.Event()
+        blocked = pool.submit(lambda d: (gate.wait(10), "b")[1], 1000)
+        for _ in range(2):                       # two failures on stream 1
+            f = pool.submit(bad, 1)
+            with pytest.raises(ValueError):
+                f.result(timeout=5)
+        st = pool.stats()
+        assert st["per_device"][1]["state"] == OPEN
+        assert not st["per_device"][1]["dead"]   # quarantined, not dead
+        assert st["per_device"][1]["errors"] == 2
+        gate.set()
+        assert blocked.result(timeout=5) == "b"
+        time.sleep(0.15)                         # cooldown elapses
+        # the next placement grants stream 1 a probe chunk; success closes
+        deadline = time.monotonic() + 5
+        while (pool.stats()["per_device"][1]["state"] != CLOSED
+                and time.monotonic() < deadline):
+            pool.submit(lambda d: d, 1).result(timeout=5)
+        assert pool.stats()["per_device"][1]["state"] == CLOSED
+        assert pool.stats()["healthy_streams"] == 2
+    finally:
+        pool.close()

@@ -114,6 +114,19 @@ def compare(baseline: dict, fresh: dict, threshold: float) -> tuple[list[str], l
     lines, regressions = [], []
     lines.append(f"gate: engine.backends per_call_ms @ batch {f_batch}, "
                  f"threshold +{threshold:.0%}")
+    # plan-audit provenance (schema-only, never a gate): a run whose anchor
+    # plan carried PGA error findings benchmarks a plan the auditor would
+    # refuse to ship — say so LOUDLY, but older artifacts predate the field
+    # and pass silently
+    for label, doc in (("baseline", baseline), ("fresh", fresh)):
+        audit = doc.get("audit")
+        if audit and audit.get("error"):
+            lines.append(
+                f"  [info] *** {label} run was produced by a plan with "
+                f"{audit['error']} plan-audit ERROR finding(s) "
+                f"(see docs/ANALYSIS.md; rerun `python -m repro.analysis "
+                f"plan`) — its numbers describe a plan that fails the "
+                f"static audit ***")
     b_ref = baseline.get("engine", {}).get("ref_dense_ms")
     f_ref = fresh.get("engine", {}).get("ref_dense_ms")
     if b_ref and f_ref:

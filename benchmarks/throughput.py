@@ -155,7 +155,11 @@ def engine_backend_bench(quick: bool = False) -> dict:
     from repro.kernels.fuzzy_lut.ops import _Q8_MEMO
 
     result = {"plan_build_ms": plan_build_ms, "batch": batch, "iters": iters,
-              "quick": quick, "backends": {}}
+              "quick": quick, "backends": {},
+              # plan-audit finding counts of the anchor plan (see
+              # docs/ANALYSIS.md) — compare.py flags baselines whose plan
+              # carried error findings
+              "audit": plan.compile_stats()["audit"]}
     compile_ms_by_be = {}
     for be in BACKENDS:
         t0 = time.perf_counter()
@@ -1048,7 +1052,8 @@ def main(quick: bool = False):
     overload = overload_bench(quick=quick)
     chaos = chaos_bench(quick=quick)
     return dict(switch_pps=sw, cpu_pps=cpu_pps, speedup=sw / cpu_pps,
-                engine=engine, batch_ladder=ladder, families=families,
+                audit=engine.get("audit"), engine=engine,
+                batch_ladder=ladder, families=families,
                 multi_plan=multi, async_serve=async_serve,
                 sharding=sharding, overload=overload, chaos=chaos)
 

@@ -1,23 +1,34 @@
-"""Machine-checked concurrency invariants for the serving stack.
+"""Machine-checked invariants for the serving stack.
 
-Two halves over one policy (:mod:`repro.analysis.rules`):
+Three layers over one policy module (:mod:`repro.analysis.rules`):
 
 * :mod:`repro.analysis.lint` — the AST pass behind
   ``python -m repro.analysis src/`` (PG001-PG004, run as the
   ``static-analysis`` CI lane);
 * :mod:`repro.analysis.sanitizer` — the ``PEGASUS_SANITIZE=1`` runtime
   half: ``make_lock`` (lock-order cycle + hierarchy detection) and
-  ``ThreadAffinity`` assertions.
+  ``ThreadAffinity`` assertions;
+* :mod:`repro.analysis.planaudit` — the plan auditor behind
+  ``python -m repro.analysis plan`` (PGA101-PGA106): static numerics,
+  VMEM, and dataplane-resource analysis of compiled ExecutionPlans,
+  wired into ``build_plan(..., audit=...)`` and every server
+  ``stats()`` surface.
+
+See ``docs/ANALYSIS.md`` for the rule → invariant map across all three.
 """
 
 from .lint import Finding, lint_file, lint_paths, lint_source, main
-from .rules import RULES
+from .planaudit import (AuditConfig, AuditFinding, AuditReport,
+                        PlanAuditError, audit_plan)
+from .rules import PGA_RULES, RULES
 from .sanitizer import (InstrumentedLock, LockOrderError, ThreadAffinity,
                         ThreadAffinityError, enabled, make_lock,
                         reset_lock_graph)
 
 __all__ = [
     "Finding", "lint_file", "lint_paths", "lint_source", "main", "RULES",
+    "PGA_RULES", "AuditConfig", "AuditFinding", "AuditReport",
+    "PlanAuditError", "audit_plan",
     "InstrumentedLock", "LockOrderError", "ThreadAffinity",
     "ThreadAffinityError", "enabled", "make_lock", "reset_lock_graph",
 ]

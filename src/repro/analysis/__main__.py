@@ -1,6 +1,13 @@
-"""``python -m repro.analysis [paths...]`` — exit nonzero on findings."""
+"""``python -m repro.analysis [paths...]`` — the AST lint (PG0xx), or
+``python -m repro.analysis plan [--json ...]`` — the plan auditor (PGA1xx).
+Both exit nonzero on unsuppressed findings."""
 
 import sys
+
+if len(sys.argv) > 1 and sys.argv[1] == "plan":
+    from .planaudit import main as plan_main
+
+    sys.exit(plan_main(sys.argv[2:]))
 
 from .lint import main
 

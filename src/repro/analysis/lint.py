@@ -343,6 +343,18 @@ class _Linter:
                 return  # ", ".join(...) — string formatting, not a thread
             self._emit("PG001", call.lineno,
                        f"blocking `.{final}()` inside `with {lockset}:`")
+            return
+        # receiver-sensitive: queue.Queue.get/put and Event.wait block too,
+        # but only on queue/event-like receivers (dict.get and the
+        # lock-releasing Condition.wait stay exempt) — matched by the
+        # receiver's name, the lint's usual convention contract
+        if final is not None and isinstance(call.func, ast.Attribute):
+            recv_name = _final_name(call.func.value)
+            if R.blocking_receiver(final, recv_name, len(call.args)):
+                self._emit(
+                    "PG001", call.lineno,
+                    f"blocking `{recv_name}.{final}()` (queue/event wait) "
+                    f"inside `with {lockset}:`")
 
     def _check_pg002(self, attr: ast.Attribute, held: tuple,
                      fname: str | None) -> None:
@@ -576,7 +588,7 @@ def main(argv=None) -> int:
                     help="print the rule registry and exit")
     args = ap.parse_args(argv)
     if args.list_rules:
-        for rule, desc in sorted(R.RULES.items()):
+        for rule, desc in sorted({**R.RULES, **R.PGA_RULES}.items()):
             print(f"{rule}: {desc}")
         return 0
     findings = lint_paths(args.paths or ["src"])

@@ -110,6 +110,46 @@ BLOCKING_DOTTED = frozenset({"time.sleep", "concurrent.futures.wait"})
 # one legitimate way to sleep under a lock.)
 BLOCKING_FINAL_ATTRS = frozenset({"join", "result"})
 
+# Receiver-sensitive blocking methods: ``.get()``/``.put()`` block only on
+# queue-like receivers and ``.wait()`` only on event-like ones — dict.get
+# and Condition.wait must stay exempt (the latter releases the lock while
+# parked). Static analysis cannot type the receiver, so the walker matches
+# the receiver's FINAL name component (case-insensitive substring) against
+# these hints — the same name-convention contract the whole lint rests on
+# (locks end in "lock", queues carry "queue"/"_q", events "event"/"done").
+BLOCKING_RECEIVER_HINTS = {
+    "get": ("queue", "inbox", "mailbox", "_q"),
+    "put": ("queue", "inbox", "mailbox", "_q"),
+    "wait": ("event", "evt", "done", "ready", "stopped", "barrier"),
+}
+
+
+def blocking_receiver(attr: str, receiver: str | None,
+                      n_pos_args: int = 0) -> bool:
+    """True when ``receiver.attr(...)`` matches the queue/event blocking
+    table: ``queue.Queue.get/put`` and ``threading.Event.wait`` under a
+    lock park the holder while every other thread spins on the lock.
+
+    Two disambiguations keep ``dict.get`` exempt: a blocking ``Queue.get()``
+    takes no positional argument (``dict.get(key)`` always does), and a
+    PLURAL queue-like name (``_queues``) is a container of queues — its
+    ``.get``/``.put`` are the dict's, not a queue's."""
+    hints = BLOCKING_RECEIVER_HINTS.get(attr)
+    if not hints or not receiver:
+        return False
+    if attr == "get" and n_pos_args:
+        return False
+    low = receiver.lower()
+    if attr in ("get", "put") and low.endswith("s"):
+        return False
+    for h in hints:
+        if h.startswith("_"):          # suffix hints: "work_q", or bare "q"
+            if low == h.lstrip("_") or low.endswith(h):
+                return True
+        elif h in low:
+            return True
+    return False
+
 # -- PG004 classification ---------------------------------------------------
 
 # Whole-plan forwards are found three ways: by convention every structural
@@ -135,6 +175,52 @@ MUTATOR_METHODS = frozenset({
 # (jnp.add is addition, not set.add).
 SAFE_MUTATOR_ROOTS = frozenset({"jax", "jnp", "np", "numpy", "pl",
                                 "functools", "math", "lax"})
+
+# -- PGA1xx: plan-audit policy (repro.analysis.planaudit) -------------------
+
+# The plan auditor walks a COMPILED ExecutionPlan (banks, fused stacks,
+# bucket ladder, q8 tables) instead of source text; its findings carry the
+# PGA1xx namespace so lint (PG0xx) and audit reports never collide.
+PGA_RULES = {
+    "PGA101": "fixed-point overflow: the worst-case int32 accumulator bound "
+              "of a bank's q8 tables (all groups rescaled to the finest "
+              "group scale) exceeds int32 (error) or is within 2x of it "
+              "(warning)",
+    "PGA102": "quantization fidelity: a bank's worst-case q8 dequantization "
+              "error vs its f32 LUT exceeds the configured per-group "
+              "relative tolerance (stale/tampered q8 table)",
+    "PGA103": "VMEM footprint: a pallas_call's worst-case working set "
+              "(operand blocks + stacked tables) exceeds the per-target "
+              "VMEM budget (error) or is within the margin of it (warning)",
+    "PGA104": "kernel-tile alignment: a ladder bucket dispatches hidden pad "
+              "rows (bucket not divisible by the batch tile), or an "
+              "mxu-strategy LUT width misses 128-lane alignment",
+    "PGA105": "fusion rejection: an adjacent chained bank pair did not fuse "
+              "(v/C mismatch, chaining break, nmax_cap split, fuse=False, "
+              "or a family builder without the fusion pass)",
+    "PGA106": "dataplane resource fit: the plan lowered to a MAT pipeline "
+              "exceeds the declared switch target's SRAM/TCAM/bus/PHV "
+              "budget (error); recirculation passes are a warning",
+}
+
+INT32_MAX = 2**31 - 1
+
+# PGA101: warn when the overflow bound is within this factor of int32.
+PGA101_MARGIN = 2.0
+
+# PGA102: max per-group relative dequant error. Symmetric int8
+# round-to-nearest guarantees err <= scale/2 = amax/254 (~0.4% of the
+# group's amax); 1% only trips when the q8 table no longer matches the f32
+# LUT it claims to quantize.
+PGA102_REL_TOL = 1.0 / 100.0
+
+# PGA103: per-core VMEM budget (bytes) and warn margin. ~16 MB/core is the
+# common TPU figure; override per target via AuditConfig.
+PGA103_VMEM_BUDGET = 16 * 2**20
+PGA103_MARGIN = 2.0
+
+# PGA104: MXU lane width the mxu strategy wants LUT columns aligned to.
+MXU_LANES = 128
 
 # -- comment grammar --------------------------------------------------------
 

@@ -656,6 +656,12 @@ class ExecutionPlan:
         # may compile FusedBankStack steps; other families stay per-bank)
         self.fused_groups = 0
         self.fused_banks = 0
+        self.fused_stacks: list = []
+        # build-time fusion knobs + audit report, recorded by build_plan so
+        # the plan auditor (repro.analysis.planaudit) can explain WHY pairs
+        # stayed unfused and stats() can surface finding counts
+        self.fuse_cfg = {"fuse": True, "nmax_cap": DEFAULT_FUSE_NMAX_CAP}
+        self.audit_report = None
 
         def _pure(state, inputs, backend):
             # body runs at TRACE time only — this is the retrace counter the
@@ -782,6 +788,29 @@ class ExecutionPlan:
             return jnp.pad(x, pad)
         return x if owned else x.copy()
 
+    def _lut_cell_stats(self) -> tuple[int, int]:
+        """(useful, dispatched) LUT cells across the plan's kernel steps.
+
+        A fused stack dispatches its whole padded ``[L, Kmax, C, Nmax]``
+        slab per call; only the member banks' true ``K·C·N`` cells carry
+        signal. Standalone banks contribute their true cells to BOTH terms,
+        so the ratio weights fused padding by its real share of the plan's
+        LUT compute."""
+        fused_members = {id(b) for s in self.fused_stacks for b in s.banks}
+        useful = dispatched = 0
+        for s in self.fused_stacks:
+            c = s.banks[0].layer.num_centroids
+            dispatched += len(s.banks) * max(s.ks) * c * int(s.lut.shape[-1])
+            useful += sum(b.layer.num_groups * c * b.layer.out_features
+                          for b in s.banks)
+        for b in self.banks:
+            if id(b) not in fused_members:
+                cells = (b.layer.num_groups * b.layer.num_centroids
+                         * b.layer.out_features)
+                useful += cells
+                dispatched += cells
+        return useful, dispatched
+
     def compile_stats(self) -> dict:
         """Per-plan jit-cache counters (the serving stats surface)."""
         with self._ctr.lock:                     # consistent snapshot
@@ -789,15 +818,45 @@ class ExecutionPlan:
             jit_calls = self.jit_calls
             buckets = sorted(self._ctr.traced_buckets)
             rows = {k: list(v) for k, v in self._ctr.rows.items()}
+        useful, dispatched = self._lut_cell_stats()
+        # fused stacks dispatch Kmax/Nmax-padded operand slabs the batch
+        # filler fraction alone never counted: fold the static operand
+        # efficiency into the KERNEL backends' per-bucket waste (the
+        # fallback backends run per-bank on true-size tables)
+        fused_eff = useful / dispatched if dispatched else 1.0
+
+        def _waste(be: str, req: int, disp: int) -> float:
+            if not disp:
+                return 0.0
+            eff = fused_eff if be in ("kernel", "kernel_q8") else 1.0
+            return round(1.0 - (req / disp) * eff, 4)
+
         return {
             "traces": traces,
             "jit_calls": jit_calls,
             "bucket_hits": jit_calls - traces,
             "buckets": buckets,
             # ladder efficiency: filler fraction of every dispatched bucket
+            # (kernel backends include fused-stack operand padding)
             "pad_waste": {
-                f"{be}@{bucket}": round(1.0 - req / disp, 4) if disp else 0.0
+                f"{be}@{bucket}": _waste(be, req, disp)
                 for (be, bucket), (req, disp) in sorted(rows.items())
+            },
+            # static operand padding per fused group (batch-independent)
+            "pad_waste_fused": {
+                f"group{g}": {
+                    "layers": len(s.banks),
+                    "kmax": max(s.ks),
+                    "nmax": int(s.lut.shape[-1]),
+                    "frac": round(
+                        1.0 - sum(b.layer.num_groups
+                                  * b.layer.num_centroids
+                                  * b.layer.out_features for b in s.banks)
+                        / (len(s.banks) * max(s.ks)
+                           * s.banks[0].layer.num_centroids
+                           * int(s.lut.shape[-1])), 4),
+                }
+                for g, s in enumerate(self.fused_stacks)
             },
             # fusion coverage: how much of the plan runs as stacked kernels
             "fused_groups": self.fused_groups,
@@ -805,6 +864,10 @@ class ExecutionPlan:
             # sharded width: how many devices the batch axis splits across
             # (1 = single-device; placed calls don't change it)
             "devices": 1 if self.devices is None else len(self.devices),
+            # plan-audit finding counts (repro.analysis.planaudit), None
+            # when the plan was built with audit="off" and never audited
+            "audit": None if self.audit_report is None
+            else dict(self.audit_report.counts),
         }
 
     @property
@@ -848,6 +911,7 @@ def _note_fusion(plan: ExecutionPlan, steps: Sequence) -> None:
         if isinstance(s, FusedBankStack):
             plan.fused_groups += 1
             plan.fused_banks += len(s.banks)
+            plan.fused_stacks.append(s)
 
 
 def _sequential_plan(layers, backend, kw, buckets, fuse, nmax_cap,
@@ -965,6 +1029,7 @@ def build_plan(
     fuse: bool = True,
     fuse_nmax_cap: int | None = DEFAULT_FUSE_NMAX_CAP,
     devices=None,
+    audit: str = "warn",
 ) -> ExecutionPlan:
     """Compile any pegasusified model into an ExecutionPlan.
 
@@ -1023,6 +1088,14 @@ def build_plan(
             must divide by the device count (``ValueError`` at build).
             Participates in ``plan_for``'s memo key, so sharded and
             single-device plans of one model coexist.
+        audit: run the static plan auditor (:mod:`repro.analysis.planaudit`,
+            PGA101-PGA106) over the freshly built plan — ``"warn"``
+            (default) attaches the report and raises a ``UserWarning``
+            when it carries error/warning findings, ``"error"`` raises
+            :class:`repro.analysis.planaudit.PlanAuditError` on error
+            findings, ``"off"`` skips the pass (``plan.audit_report``
+            stays ``None``). The audit never dispatches jax computation;
+            it reads the plan's host-side tables only.
 
     The plan freezes ALL model state at build time — banks and non-bank
     attributes alike (RNN window, CNN nam/out_bias, CNN-L
@@ -1053,7 +1126,34 @@ def build_plan(
     # the non-bank state the plan froze at build — plan_for compares this
     # against the live model to catch attribute reassignment (see _model_aux)
     plan._aux_token = _model_aux(model)
+    # record the fusion knobs so the auditor can explain WHY a pair of
+    # banks runs unfused (PGA105) instead of guessing
+    plan.fuse_cfg = {"fuse": fuse, "nmax_cap": fuse_nmax_cap}
+    _run_build_audit(plan, audit)
     return plan
+
+
+def _run_build_audit(plan: ExecutionPlan, audit: str) -> None:
+    """Build-time hook into the plan auditor. Imported lazily: plan.py is
+    imported by the analysis package's sanitizer consumers, so a module-
+    scope import would be circular."""
+    if audit == "off":
+        return
+    if audit not in ("warn", "error"):
+        raise ValueError(f"audit must be 'off'|'warn'|'error', got {audit!r}")
+    from repro.analysis.planaudit import PlanAuditError, audit_plan
+
+    report = audit_plan(plan)
+    plan.audit_report = report
+    counts = report.counts
+    if audit == "error" and counts["error"]:
+        raise PlanAuditError(report)
+    if counts["error"] or counts["warning"]:
+        warnings.warn(
+            f"plan audit: {counts['error']} error / {counts['warning']} "
+            f"warning finding(s) — inspect plan.audit_report or rerun "
+            f"`python -m repro.analysis plan`:\n{report}",
+            stacklevel=3)
 
 
 # ---------------------------------------------------------------------------

@@ -120,6 +120,9 @@ class PlanRegistry:
         geometry) — so the same model may hold e.g. interpret and
         non-interpret, or fused and unfused, plans side by side."""
         interpret = default_interpret() if interpret is None else interpret
+        # the audit mode does not change the compiled artifact — pop it
+        # BEFORE keying so audit="off" and the default share one plan
+        audit = kw.pop("audit", "warn")
         if kw.get("bucket_sizes") is not None:
             kw["bucket_sizes"] = tuple(kw["bucket_sizes"])
         # normalize into the key: an absent fuse kwarg IS fuse=True (the
@@ -152,7 +155,7 @@ class PlanRegistry:
         try:
             # the build runs WITHOUT the registry lock: other models keep
             # serving while this one's XLA trace/compile grinds
-            plan = build_plan(model, interpret=interpret, **kw)
+            plan = build_plan(model, interpret=interpret, audit=audit, **kw)
         except BaseException:
             with self._lock:
                 self._building.pop(key, None)
@@ -315,6 +318,20 @@ class PlanRegistry:
                 return False
             self.discard(ent["model"])
             return True
+
+    def audit_report(self, name: str):
+        """The plan-audit report for the plan serving ``name``
+        (:class:`repro.analysis.planaudit.AuditReport`). Plans built with
+        ``audit="off"`` are audited lazily here, once, and the report is
+        cached on the plan — so ``stats()`` keeps reporting real counts
+        even when builds skip the inline pass. Runs OUTSIDE the registry
+        lock (the audit walks host-side tables, not the memo)."""
+        plan = self.get(name)
+        if plan.audit_report is None:
+            from repro.analysis.planaudit import audit_plan
+
+            plan.audit_report = audit_plan(plan)
+        return plan.audit_report
 
     def stats(self) -> dict:
         """Per-name compile-cache + build stats (the serving ops surface)."""

@@ -58,6 +58,17 @@ def test_pg001_jax_plan_and_blocking_calls_under_lock():
     assert all("clean_paths" not in f.message for f in findings)
 
 
+def test_pg001_queue_and_event_blocking_under_lock():
+    """The receiver-sensitive half of the blocking table: Queue.get/put and
+    Event.wait under a lock are findings; dict.get(key), a plural container
+    of queues, and Condition.wait stay exempt."""
+    path = FIXTURES / "viol_pg001_blocking.py"
+    findings = lint_file(path)
+    assert _found(findings) == _expected(path)
+    assert {f.rule for f in findings} == {"PG001"}
+    assert any("queue/event wait" in f.message for f in findings)
+
+
 def test_pg002_guarded_by_annotations():
     path = FIXTURES / "viol_pg002.py"
     findings = lint_file(path)

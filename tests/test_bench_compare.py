@@ -81,6 +81,21 @@ def test_backend_only_in_fresh_is_info_not_regression():
     assert any("added since baseline: kernel_v2" in l for l in lines)
 
 
+def test_audit_error_provenance_is_loud_info_not_gate():
+    """A run whose anchor plan carried plan-audit ERROR findings gets a
+    loud [info] line (schema field only — never a regression); runs
+    predating the field, or with clean audits, stay silent."""
+    bad = _doc(BASE)
+    bad["audit"] = {"error": 2, "warning": 0, "info": 1}
+    lines, regressions = compare(_doc(BASE), bad, 0.25)
+    assert regressions == []
+    assert any("plan-audit ERROR" in l and "fresh" in l for l in lines)
+    clean = _doc(BASE)
+    clean["audit"] = {"error": 0, "warning": 1, "info": 0}
+    lines, _ = compare(clean, _doc(BASE), 0.25)      # no field at all: silent
+    assert not any("plan-audit ERROR" in l for l in lines)
+
+
 def test_gate_refuses_batch_mismatch():
     with pytest.raises(SystemExit, match="batch mismatch"):
         compare(_doc(BASE), _doc(BASE, batch=256), 0.25)

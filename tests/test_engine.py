@@ -863,6 +863,37 @@ def test_compile_stats_reports_pad_waste_and_fusion(ds):
     assert mst["pad_waste"]["gather@16"] == round(5 / 16, 4)
 
 
+def test_compile_stats_folds_fused_operand_padding_into_pad_waste():
+    """Kernel-backend pad_waste must charge the fused stack's Kmax/Nmax
+    operand padding, not just batch filler; the fallback backends run on
+    true-size tables and keep the batch-only number. Pinned on the
+    (12, 8, 8, 3) chain: ks=(6, 4, 4), C=8, ns=(8, 8, 3) →
+    useful = 6·8·8 + 4·8·8 + 4·8·3 = 736 LUT cells of the 3·6·8·8 = 1152
+    the stacked slab dispatches."""
+    layers = _chain_banks(42, dims=(12, 8, 8, 3))
+    plan = build_plan(layers)
+    assert plan.fused_banks == 3
+    st = plan.compile_stats()
+    fused = st["pad_waste_fused"]["group0"]
+    assert (fused["layers"], fused["kmax"], fused["nmax"]) == (3, 6, 8)
+    assert fused["frac"] == round(1 - 736 / 1152, 4) == 0.3611
+
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(11, 12)), jnp.float32)
+    plan(x, backend="kernel")
+    plan(x, backend="gather")
+    waste = plan.compile_stats()["pad_waste"]
+    # gather dispatches per-bank true-size tables: batch filler only
+    assert waste["gather@16"] == round(5 / 16, 4)
+    # kernel dispatches the padded slab: batch filler × operand efficiency
+    assert waste["kernel@16"] == round(1 - (11 / 16) * (736 / 1152), 4)
+    # a fully-unfused plan has no operand padding: backends agree again
+    unfused = build_plan(layers, fuse=False)
+    unfused(x, backend="kernel")
+    assert unfused.compile_stats()["pad_waste"]["kernel@16"] == \
+        round(5 / 16, 4)
+    assert unfused.compile_stats()["pad_waste_fused"] == {}
+
+
 def test_fuse_flag_participates_in_plan_key(ds):
     banks, _, (x,) = _family(ds, "mlp")
     p_fused = plan_for(banks)
